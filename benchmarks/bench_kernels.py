@@ -1,0 +1,54 @@
+"""Wall-clock microbenchmarks of the stencil kernels (CPU, interpret mode).
+
+These numbers are CPU-interpreter timings — they validate the measurement
+harness and relative blocking behaviour, NOT TPU performance (that is the
+roofline analysis' job).  Derived column reports MCell/s and the speedup of
+temporal blocking vs par_time=1 at equal steps.
+"""
+
+import time
+
+import jax
+
+from repro.core import reference as ref
+from repro.core.blocking import BlockPlan
+from repro.core.spec import StencilSpec
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    rows = []
+    for ndim, shape, block in [(2, (256, 512), (64, 128)),
+                               (3, (32, 64, 256), (8, 16, 128))]:
+        for rad in (1, 2, 4):
+            spec = StencilSpec(ndim=ndim, radius=rad)
+            coeffs = spec.default_coeffs()
+            cells = 1
+            for s in shape:
+                cells *= s
+
+            plan1 = BlockPlan(spec=spec, block_shape=block, par_time=1)
+            plan2 = BlockPlan(spec=spec, block_shape=block, par_time=2)
+            g = ref.random_grid(spec, shape, seed=0)
+
+            f1 = jax.jit(lambda g: ops.stencil_run(g, spec, coeffs, plan1, 2))
+            f2 = jax.jit(lambda g: ops.stencil_superstep(g, spec, coeffs,
+                                                         plan2))
+            t1 = _time(f1, g)
+            t2 = _time(f2, g)
+            mcells = cells * 2 / t2 / 1e6
+            rows.append((
+                f"kernel_{ndim}d_r{rad}", t2 * 1e6,
+                f"mcells_per_s={mcells:.1f};"
+                f"tb_speedup_vs_pt1={t1 / t2:.2f}x"))
+    return rows

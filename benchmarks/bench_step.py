@@ -1,0 +1,40 @@
+"""Wall-clock of reduced train/decode steps per arch (CPU sanity timings)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.data import SyntheticLM
+from repro.launch.train import build_run
+
+BENCH_ARCHS = ("starcoder2-7b", "granite-moe-3b-a800m", "jamba-v0.1-52b",
+               "rwkv6-7b")
+
+
+def run():
+    rows = []
+    for arch in BENCH_ARCHS:
+        cfg = ARCHS[arch].reduced()
+        run_ = build_run(cfg, steps=10, lr=1e-3)
+        data = SyntheticLM(vocab=cfg.vocab, seq_len=32, global_batch=4,
+                           seed=0,
+                           num_codebooks=cfg.num_codebooks,
+                           frontend=(cfg.img_tokens, cfg.frontend_dim)
+                           if cfg.frontend_dim else None)
+        batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+        # warmup (compile)
+        p, o, c, _ = run_.train_step(run_.params, run_.opt_state,
+                                     run_.comp_error, batch)
+        jax.block_until_ready(p)
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            p, o, c, m = run_.train_step(p, o, c, batch)
+        jax.block_until_ready(p)
+        dt = (time.perf_counter() - t0) / reps
+        tokens = 4 * 32
+        rows.append((f"train_step_{arch}", dt * 1e6,
+                     f"tokens_per_s={tokens / dt:.0f}"))
+    return rows

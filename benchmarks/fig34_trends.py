@@ -1,0 +1,44 @@
+"""Paper Figs. 3/4: performance trends vs stencil order.
+
+The paper's qualitative claims, asserted quantitatively:
+  * FPGA/TPU-with-temporal-blocking: GCell/s falls ~1/radius while GFLOP/s
+    stays flat (compute-bound signature).
+  * CPU-class (no effective temporal blocking): GCell/s flat, GFLOP/s grows
+    ~radius (bandwidth-bound signature).
+We reproduce both regimes: the paper's published Xeon/Xeon Phi rows for the
+bandwidth-bound side, and our v5e planner for the temporal-blocked side.
+"""
+
+from repro.analysis.hw import V5E
+from repro.core import perf_model as pm
+from repro.core.blocking import plan_blocking
+from repro.core.spec import StencilSpec
+
+
+def run():
+    rows = []
+    # bandwidth-bound devices: GCell/s ~ flat, GFLOP/s ~ radius
+    for dev in ("xeon", "xeonphi"):
+        cells = [pm.PAPER_TABLE5_3D[dev][r][1] for r in (1, 2, 3, 4)]
+        flops = [pm.PAPER_TABLE5_3D[dev][r][0] for r in (1, 2, 3, 4)]
+        assert max(cells) / min(cells) < 1.2, dev        # flat GCell/s
+        assert flops[3] / flops[0] > 2.5, dev            # growing GFLOP/s
+        rows.append((f"fig34_{dev}", 0.0,
+                     f"gcells_flat={max(cells)/min(cells):.2f};"
+                     f"gflops_growth={flops[3]/flops[0]:.2f}"))
+
+    # temporal-blocked device (paper: FPGA; here: v5e planner)
+    for ndim in (2, 3):
+        cells, flops = [], []
+        for rad in (1, 2, 3, 4):
+            spec = StencilSpec(ndim=ndim, radius=rad)
+            est = plan_blocking(spec, V5E, max_par_time=32)
+            cells.append(est.gcells_per_s)
+            flops.append(est.gflops_per_s)
+        # GFLOP/s flat within 10%, GCell/s falls ~1/rad (>2.8x from r1->r4)
+        assert max(flops) / min(flops) < 1.10, (ndim, flops)
+        assert cells[0] / cells[3] > 2.8, (ndim, cells)
+        rows.append((f"fig34_v5e_{ndim}d", 0.0,
+                     f"gflops_flat={max(flops)/min(flops):.3f};"
+                     f"gcells_r1_over_r4={cells[0]/cells[3]:.2f}"))
+    return rows

@@ -1,0 +1,55 @@
+"""Aggregate dry-run JSONs into the §Roofline table (also writes markdown).
+
+Reads benchmarks/results/*.json (produced by repro.launch.dryrun) and emits
+one CSV row per cell: the three roofline terms, dominant bottleneck, and
+useful-flops ratio.  ``write_markdown()`` renders EXPERIMENTS.md §Roofline.
+"""
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def cells():
+    out = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        d = json.load(open(f))
+        if d.get("skipped"):
+            continue
+        out.append(d)
+    return out
+
+
+def run():
+    rows = []
+    for d in cells():
+        name = f"roofline_{d['arch']}_{d['shape']}_{d['mesh']}"
+        dom_t = max(d["t_compute"], d["t_memory"], d["t_collective"])
+        rows.append((
+            name, dom_t * 1e6,
+            f"dom={d['dominant']};tc={d['t_compute']:.2e};"
+            f"tm={d['t_memory']:.2e};tx={d['t_collective']:.2e};"
+            f"useful={d['useful_ratio']:.2f};fits={d.get('fits_hbm')}"))
+    return rows
+
+
+def write_markdown(path):
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | MODEL_FLOPS | useful | peak GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in sorted(cells(), key=lambda d: (d["arch"], d["shape"],
+                                            d["mesh"])):
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {d['t_compute']:.3e} | {d['t_memory']:.3e} "
+            f"| {d['t_collective']:.3e} | **{d['dominant']}** "
+            f"| {d['model_flops']:.2e} | {d['useful_ratio']:.2f} "
+            f"| {d['peak_bytes'] / 2**30:.2f} "
+            f"| {'yes' if d.get('fits_hbm') else 'NO'} |")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return len(lines) - 2

@@ -1,0 +1,39 @@
+"""Benchmark driver: one function per paper table + harness benches.
+
+Prints ``name,us_per_call,derived`` CSV.  Paper-table modules assert their
+reproduction tolerances, so ``python -m benchmarks.run`` doubles as the
+validation gate for the paper's own numbers.
+"""
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_kernels, bench_step, fig34_trends,
+                            roofline_table, table1_characteristics,
+                            table3_perf_model, table45_roofline)
+
+    modules = [
+        ("table1", table1_characteristics),
+        ("table3", table3_perf_model),
+        ("table45", table45_roofline),
+        ("fig34", fig34_trends),
+        ("kernels", bench_kernels),
+        ("steps", bench_step),
+        ("roofline", roofline_table),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.2f},{derived}")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}:{e}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Paper Table I: stencil computational characteristics (exact reproduction).
+
+Emits one CSV row per (ndim, radius): FLOP/cell, byte/cell, FLOP/byte —
+asserted equal to the paper's printed values.
+"""
+
+from repro.core.spec import StencilSpec
+
+PAPER = {
+    (2, 1): (9, 8, 1.125), (2, 2): (17, 8, 2.125),
+    (2, 3): (25, 8, 3.125), (2, 4): (33, 8, 4.125),
+    (3, 1): (13, 8, 1.625), (3, 2): (25, 8, 3.125),
+    (3, 3): (37, 8, 4.625), (3, 4): (49, 8, 6.125),
+}
+
+
+def run():
+    rows = []
+    for (ndim, rad), (fl, by, r) in sorted(PAPER.items()):
+        spec = StencilSpec(ndim=ndim, radius=rad)
+        assert spec.flops_per_cell == fl, (ndim, rad)
+        assert spec.bytes_per_cell == by
+        assert abs(spec.flop_per_byte - r) < 1e-9
+        rows.append((f"table1_{ndim}d_r{rad}", 0.0,
+                     f"flop={fl};byte={by};ratio={r}"))
+    return rows

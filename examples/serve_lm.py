@@ -1,0 +1,37 @@
+"""Serving example: batched decode with slot-based continuous batching on a
+reduced rwkv6 (O(1)-state) model — the architecture class that makes
+long-context serving cheap.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch.serve import Request, ServeEngine
+from repro.models import common, transformer
+
+
+def main():
+    cfg = get_arch("rwkv6-7b").reduced(d_model=128, vocab=1024)
+    model = transformer.build(cfg)
+    params, _ = common.split_params(model.init(jax.random.PRNGKey(0)))
+
+    engine = ServeEngine(cfg, params, batch=4, cache_len=128)
+    rng = np.random.RandomState(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.randint(0, cfg.vocab, size=(12,)),
+                    max_new=24)
+            for i in range(10)]
+    stats = engine.run(reqs)
+    print(f"[serve_lm] {len(reqs)} requests, 4 slots (continuous batching): "
+          f"{stats['tokens']} tokens in {stats['seconds']:.1f}s "
+          f"({stats['tokens_per_s']:.1f} tok/s on CPU)")
+    for r in reqs[:3]:
+        print(f"  rid={r.rid}: {r.generated[:10]}…")
+    assert all(r.done for r in reqs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: TPU-native high-order stencil framework (Zohouri et al., 2020)."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,6 @@
+"""Checkpointing: atomic saves, async writer, retention, elastic reshard."""
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.reshard import reshard_tree, shardings_from_specs
+
+__all__ = ["CheckpointManager", "reshard_tree", "shardings_from_specs"]

@@ -1,0 +1,32 @@
+"""Elastic resharding: restore a checkpoint onto a different mesh.
+
+Checkpoints are stored as full (unsharded) host arrays, so elasticity is a
+matter of building the *new* mesh's NamedShardings from the same logical-axis
+spec tree and device_put-ing — the logical annotations (models/common.Param)
+are mesh-independent by construction.  ``reshard_tree`` also covers the
+live-array case (mesh A -> mesh B without a round trip through disk).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.models.common import LogicalAxes
+from repro.runtime.mesh_rules import AxisRules
+
+
+def shardings_from_specs(mesh: Mesh, rules: AxisRules, spec_tree: Any) -> Any:
+    """LogicalAxes spec tree -> NamedSharding tree for ``mesh``."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, rules.pspec(s.names)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, LogicalAxes),
+    )
+
+
+def reshard_tree(tree: Any, new_shardings: Any) -> Any:
+    """Move a live pytree onto new shardings (possibly a different mesh)."""
+    return jax.tree.map(jax.device_put, tree, new_shardings)

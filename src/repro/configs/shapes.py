@@ -1,0 +1,85 @@
+"""The 4 assigned input shapes + abstract input specs per (arch x shape).
+
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> serve_prefill
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (1 token, full cache)
+  long_500k    seq 524,288 global_batch 1     -> serve_step, sub-quadratic archs only
+
+``input_specs`` returns ShapeDtypeStructs (no allocation) — the dry-run's
+standing inputs.  Decode shapes also get abstract cache trees via
+``jax.eval_shape`` over the model's cache initializer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # "train" | "prefill" | "decode"
+
+    def cells(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeSpec) -> bool:
+    """long_500k is skipped for pure full-attention archs (DESIGN §5)."""
+    if shape.name == "long_500k":
+        return cfg.supports_long_context
+    return True
+
+
+def _token_sds(cfg: ArchConfig, batch: int, seq: int):
+    if cfg.num_codebooks > 1:
+        return jax.ShapeDtypeStruct((batch, seq, cfg.num_codebooks), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, model=None):
+    """Abstract inputs for the given cell.
+
+    train:   {tokens, labels[, frontend_embeds]}
+    prefill: {tokens[, frontend_embeds]}
+    decode:  {tokens (B,1[,K]), pos (B,1), caches}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        text = S - cfg.img_tokens if cfg.frontend_dim else S
+        out = {"tokens": _token_sds(cfg, B, text),
+               "labels": _token_sds(cfg, B, text)}
+        if cfg.frontend_dim:
+            out["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.img_tokens, cfg.frontend_dim), jnp.float32)
+        return out
+    if shape.kind == "prefill":
+        text = S - cfg.img_tokens if cfg.frontend_dim else S
+        out = {"tokens": _token_sds(cfg, B, text)}
+        if cfg.frontend_dim:
+            out["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.img_tokens, cfg.frontend_dim), jnp.float32)
+        return out
+    if shape.kind == "decode":
+        assert model is not None, "decode specs need the model (cache tree)"
+        caches = jax.eval_shape(lambda: model.init_caches(B, S))
+        return {"tokens": _token_sds(cfg, B, 1),
+                "pos": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "caches": caches}
+    raise ValueError(shape.kind)

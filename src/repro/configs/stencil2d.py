@@ -1,0 +1,37 @@
+"""The paper's own workload: 2D star stencils, radius 1..4.
+
+Shapes: the paper's single-device grid (~16k^2, Table III) plus a
+cluster-scale grid for the production mesh (per-chip share comparable to the
+paper's per-FPGA load).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.core.spec import StencilSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilWorkload:
+    name: str
+    spec: StencilSpec
+    grid_shape: Tuple[int, ...]
+    block_shape: Tuple[int, ...]
+    par_time: int
+
+
+def workloads(radius: int = 4) -> Dict[str, StencilWorkload]:
+    out = {}
+    for rad in range(1, radius + 1):
+        spec = StencilSpec(ndim=2, radius=rad)
+        # paper-like single-chip grid (Table III uses 15680..16096 squared)
+        out[f"2d_r{rad}_paper"] = StencilWorkload(
+            name=f"2d_r{rad}_paper", spec=spec, grid_shape=(16384, 16384),
+            block_shape=(1024, 1024), par_time=max(1, 8 // rad))
+        # cluster-scale grid: 256 chips x (4096 x 4096) local
+        out[f"2d_r{rad}_pod"] = StencilWorkload(
+            name=f"2d_r{rad}_pod", spec=spec, grid_shape=(65536, 65536),
+            block_shape=(1024, 1024), par_time=max(1, 8 // rad))
+    return out

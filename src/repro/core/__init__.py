@@ -1,0 +1,23 @@
+"""Core library: the paper's high-order stencil technique as composable JAX.
+
+Layers:
+  spec       — radius-parameterized star-stencil description (paper §III.B)
+  codegen    — traced update builders (the boundary-condition "code generator")
+  reference  — naive oracle iteration
+  blocking   — spatial+temporal blocking plans, eq. 2 (csize) + VMEM budget
+  perf_model — the paper's FPGA performance model, reproduced for validation
+  temporal   — superstep driver built on the Pallas kernels
+  distributed— shard_map domain decomposition + deep-halo exchange
+"""
+
+from repro.core.blocking import BlockPlan, PlanEstimate, estimate, plan_blocking
+from repro.core.spec import StencilCoeffs, StencilSpec
+
+__all__ = [
+    "BlockPlan",
+    "PlanEstimate",
+    "StencilCoeffs",
+    "StencilSpec",
+    "estimate",
+    "plan_blocking",
+]

@@ -1,0 +1,186 @@
+"""Spatial + temporal blocking plans (paper §III/§V, adapted to VMEM).
+
+The paper's knobs are (bsize, par_vec, par_time); ours are
+(block_shape, par_time).  ``par_vec`` has no direct TPU analogue — the VPU
+always operates on (8, 128) register tiles, so "vectorization" is subsumed by
+keeping the minor block dim a multiple of 128 (the paper's eq. 6 alignment
+restriction maps to our lane/sublane alignment preference).
+
+Key equation (paper eq. 2), unchanged:
+
+    csize_d = bsize_d - 2 * par_time * radius
+
+i.e. a block that goes through ``par_time`` in-VMEM time steps loses
+``par_time * radius`` of valid output per side — overlapped temporal blocking.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Optional, Sequence, Tuple
+
+from repro.analysis.hw import TpuChip, V5E
+from repro.core.spec import StencilSpec
+
+SUBLANE = 8
+LANE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """A concrete blocking configuration for the temporal-blocked kernel.
+
+    block_shape: the *output* tile each pallas grid step produces (csize).
+    par_time:    time steps fused per HBM round trip.
+    halo:        par_time * radius (per side).
+    """
+
+    spec: StencilSpec
+    block_shape: Tuple[int, ...]
+    par_time: int
+
+    @property
+    def halo(self) -> int:
+        return self.par_time * self.spec.radius
+
+    @property
+    def padded_shape(self) -> Tuple[int, ...]:
+        return tuple(b + 2 * self.halo for b in self.block_shape)
+
+    @property
+    def vmem_bytes(self) -> int:
+        """Two revolving buffers (paper's PE chain is a double buffer here)."""
+        itemsize = 4 if self.spec.dtype == "float32" else 2
+        padded = math.prod(self.padded_shape)
+        return 2 * padded * itemsize
+
+    # ---- redundancy accounting (paper's overlapped blocking cost) ----------
+
+    @property
+    def useful_fraction(self) -> float:
+        """csize/bsize per axis, multiplied — the overlapped-blocking tax."""
+        frac = 1.0
+        for b, p in zip(self.block_shape, self.padded_shape):
+            frac *= b / p
+        return frac
+
+    def hbm_bytes_per_block(self) -> int:
+        itemsize = 4 if self.spec.dtype == "float32" else 2
+        read = math.prod(self.padded_shape) * itemsize
+        write = math.prod(self.block_shape) * itemsize
+        return read + write
+
+    def flops_per_block(self) -> int:
+        """Sum over the shrinking valid regions of each fused time step."""
+        r = self.spec.radius
+        total = 0
+        for t in range(self.par_time):
+            # region computed at step t has shape padded - 2*(t+1)*r
+            sizes = [p - 2 * (t + 1) * r for p in self.padded_shape]
+            total += math.prod(sizes) * self.spec.flops_per_cell
+        return total
+
+    def useful_cells_per_block(self) -> int:
+        return math.prod(self.block_shape) * self.par_time
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEstimate:
+    plan: BlockPlan
+    compute_s_per_block: float
+    hbm_s_per_block: float
+    gcells_per_s: float        # useful cell-updates/s for one chip
+    gflops_per_s: float        # useful FLOP/s (paper convention: no redundancy counted)
+    bound: str                 # "compute" | "memory"
+
+
+def estimate(plan: BlockPlan, hw: TpuChip = V5E) -> PlanEstimate:
+    """Single-chip throughput model = max(compute, HBM) per block round trip.
+
+    Mirrors the paper's model role: predict useful throughput of a blocking
+    configuration before committing to it (their place-and-route, our
+    lower/compile).
+    """
+    t_compute = plan.flops_per_block() / hw.peak_vpu_f32_flops
+    t_hbm = plan.hbm_bytes_per_block() / hw.hbm_bytes_per_s
+    t = max(t_compute, t_hbm)
+    useful = plan.useful_cells_per_block()
+    gcells = useful / t
+    return PlanEstimate(
+        plan=plan,
+        compute_s_per_block=t_compute,
+        hbm_s_per_block=t_hbm,
+        gcells_per_s=gcells,
+        gflops_per_s=gcells * plan.spec.flops_per_cell,
+        bound="compute" if t_compute >= t_hbm else "memory",
+    )
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def candidate_plans(
+    spec: StencilSpec,
+    hw: TpuChip = V5E,
+    max_par_time: int = 64,
+    block_candidates: Optional[Sequence[Tuple[int, ...]]] = None,
+) -> list:
+    """Enumerate alignment-respecting plans that fit the VMEM budget.
+
+    Alignment: minor dim multiples of LANE, second-minor multiples of SUBLANE
+    (our analogue of paper eq. 6).  par_time preferred such that
+    (par_time * radius) % SUBLANE == 0 — exactly their alignment trick with
+    4 -> 8 for the TPU sublane.
+    """
+    if block_candidates is None:
+        if spec.ndim == 2:
+            dims = [128, 256, 512, 1024, 2048]
+            block_candidates = [(a, b) for a in dims for b in dims]
+        else:
+            zs = [8, 16, 32, 64]
+            ys = [64, 128, 256]
+            xs = [128, 256, 512]
+            block_candidates = [(z, y, x) for z in zs for y in ys for x in xs]
+
+    plans = []
+    for bs in block_candidates:
+        for pt in range(1, max_par_time + 1):
+            plan = BlockPlan(spec=spec, block_shape=tuple(bs), par_time=pt)
+            if plan.vmem_bytes > hw.vmem_budget_bytes:
+                continue
+            if plan.useful_fraction <= 0.25:
+                continue  # overlapped-blocking tax beyond any win
+            plans.append(plan)
+    return plans
+
+
+def plan_blocking(
+    spec: StencilSpec,
+    hw: TpuChip = V5E,
+    grid_shape: Optional[Tuple[int, ...]] = None,
+    max_par_time: int = 64,
+) -> PlanEstimate:
+    """Pick the best plan by the model — the paper's §V.A tuning loop.
+
+    Preference order: highest predicted useful GCell/s; ties broken toward
+    aligned (par_time*radius) % SUBLANE == 0 and smaller VMEM.
+    """
+    best = None
+    for plan in candidate_plans(spec, hw, max_par_time=max_par_time):
+        est = estimate(plan, hw)
+        waste = 1.0
+        if grid_shape is not None:
+            # blocks larger than the grid still work (the kernel pads), but
+            # padded cells are wasted compute — penalize them.
+            for g, b in zip(grid_shape, plan.block_shape):
+                waste *= g / (_round_up(g, b))
+        aligned = (plan.halo % SUBLANE) == 0
+        key = (est.gcells_per_s * waste, aligned, -plan.vmem_bytes)
+        if best is None or key > best[0]:
+            best = (key, est)
+    if best is None:
+        raise ValueError("no feasible blocking plan (VMEM budget too small?)")
+    return best[1]

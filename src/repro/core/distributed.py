@@ -1,0 +1,211 @@
+"""Distributed stencil stepper: domain decomposition + deep-halo exchange.
+
+This lifts the paper's overlapped temporal blocking to the cluster level:
+instead of exchanging a radius-deep halo every time step (the naive
+distributed stencil), shards exchange a ``par_time * radius``-deep halo once
+per *superstep* — ``par_time`` time steps per ICI exchange.  The redundant
+halo compute is the same overlapped-blocking tax the paper pays between PEs;
+the win is a ``par_time``x reduction in collective count (and latency), which
+is exactly the paper's "one external-memory round trip per par_time steps"
+argument with HBM replaced by ICI.
+
+Mechanics (per superstep, inside shard_map):
+  1. For each decomposed array axis, ``ppermute`` the h-deep boundary strips
+     to both neighbors.  The two permutes per axis are independent of each
+     other *and* of the block interior, so XLA's latency-hiding scheduler can
+     overlap them with local compute.
+  2. Shards at the global boundary synthesize their missing halo by edge
+     replication (clamp, paper §IV.B); the in-kernel fixup keeps the clamp
+     exact across fused time steps (see kernels/common.py).
+  3. Run the single-chip temporal-blocked Pallas kernel on the haloed block,
+     passing the shard's global origin so boundary fixup happens only at
+     physical grid edges.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.blocking import BlockPlan
+from repro.core.spec import StencilCoeffs, StencilSpec
+from repro.kernels import common
+
+AxisNames = Tuple[str, ...]
+
+
+def _repeat_edge(strip: jnp.ndarray, h: int, axis: int) -> jnp.ndarray:
+    """Replicate a 1-wide border slab into an h-deep clamp halo."""
+    reps = [1] * strip.ndim
+    reps[axis] = h
+    return jnp.tile(strip, reps)
+
+
+def exchange_halo(block: jnp.ndarray, axis: int, mesh_axes: AxisNames,
+                  h: int) -> jnp.ndarray:
+    """Attach h-deep halos along ``axis``, sourced from mesh neighbors.
+
+    Returns block grown by 2h along ``axis``.  Global-edge shards get
+    clamp-replicated halos.
+    """
+    n = lax.axis_size(mesh_axes)
+    idx = lax.axis_index(mesh_axes)
+
+    size = block.shape[axis]
+    lo = lax.slice_in_dim(block, 0, h, axis=axis)
+    hi = lax.slice_in_dim(block, size - h, size, axis=axis)
+
+    if n > 1:
+        # Send my low strip "left" (to rank-1) so it becomes their high halo;
+        # send my high strip "right" (to rank+1) for their low halo.
+        fwd = [(i, i + 1) for i in range(n - 1)]
+        bwd = [(i + 1, i) for i in range(n - 1)]
+        from_left = lax.ppermute(hi, mesh_axes, fwd)   # my low halo
+        from_right = lax.ppermute(lo, mesh_axes, bwd)  # my high halo
+    else:
+        from_left = jnp.zeros_like(hi)
+        from_right = jnp.zeros_like(lo)
+
+    # Clamp at the global boundary: replicate own border cells.
+    edge_lo = _repeat_edge(lax.slice_in_dim(block, 0, 1, axis=axis), h, axis)
+    edge_hi = _repeat_edge(lax.slice_in_dim(block, size - 1, size, axis=axis),
+                           h, axis)
+    is_first = (idx == 0)
+    is_last = (idx == n - 1)
+    halo_lo = jnp.where(is_first, edge_lo, from_left)
+    halo_hi = jnp.where(is_last, edge_hi, from_right)
+    return jnp.concatenate([halo_lo, block, halo_hi], axis=axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class Decomposition:
+    """How grid axes map onto mesh axes.
+
+    partition[d] is a tuple of mesh axis names (possibly empty) sharding grid
+    axis d.  E.g. 2D on the single-pod mesh: ((("data",), ("model",)));
+    multi-pod: ((("pod", "data"), ("model",))).
+    """
+
+    partition: Tuple[AxisNames, ...]
+
+    def pspec(self) -> P:
+        return P(*[axes if axes else None for axes in self.partition])
+
+    def shards(self, mesh: Mesh, d: int) -> int:
+        return math.prod(mesh.shape[a] for a in self.partition[d]) \
+            if self.partition[d] else 1
+
+
+def _local_superstep(block, center, neighbors, *, spec, plan, decomp,
+                     global_shape, interpret):
+    """shard_map body: halo exchange + local temporal-blocked kernel."""
+    h = plan.halo
+    offsets = []
+    for d in range(spec.ndim):
+        axes = decomp.partition[d]
+        if axes:
+            offsets.append(lax.axis_index(axes) * block.shape[d])
+        else:
+            offsets.append(0)
+    offs = jnp.stack([jnp.asarray(o, jnp.int32) for o in offsets])
+
+    haloed = block
+    for d in range(spec.ndim):
+        axes = decomp.partition[d]
+        if axes and lax.axis_size(axes) > 1:
+            haloed = exchange_halo(haloed, d, axes, h)
+        else:
+            # Unsharded axis: plain edge padding provides the t=0 clamp halo.
+            pads = [(0, 0)] * spec.ndim
+            pads[d] = (h, h)
+            haloed = jnp.pad(haloed, pads, mode="edge")
+
+    out = common.superstep_call(haloed, center, neighbors, spec, plan,
+                                tuple(global_shape), interpret, offs)
+    return out
+
+
+@dataclasses.dataclass
+class DistributedStencil:
+    """A stencil problem decomposed over a device mesh."""
+
+    spec: StencilSpec
+    coeffs: StencilCoeffs
+    plan: BlockPlan
+    mesh: Mesh
+    decomp: Decomposition
+    global_shape: Tuple[int, ...]
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.interpret is None:
+            self.interpret = common.default_interpret()
+        for d in range(self.spec.ndim):
+            n = self.decomp.shards(self.mesh, d)
+            if self.global_shape[d] % n != 0:
+                raise ValueError(
+                    f"grid axis {d} ({self.global_shape[d]}) not divisible by"
+                    f" {n} shards")
+            local = self.global_shape[d] // n
+            if local % self.plan.block_shape[d] != 0:
+                raise ValueError(
+                    f"local extent {local} on axis {d} not divisible by block"
+                    f" {self.plan.block_shape[d]}; shrink the block")
+            if local < self.plan.halo:
+                raise ValueError(
+                    f"halo {self.plan.halo} exceeds local extent {local}; "
+                    f"reduce par_time or shards")
+
+    def sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self.decomp.pspec())
+
+    def superstep_fn(self):
+        """Returns a jit-able global-array -> global-array superstep."""
+        spec, plan, decomp = self.spec, self.plan, self.decomp
+        gshape, interpret = self.global_shape, self.interpret
+        pspec = decomp.pspec()
+
+        body = partial(_local_superstep, spec=spec, plan=plan, decomp=decomp,
+                       global_shape=gshape, interpret=interpret)
+        mapped = jax.shard_map(
+            body, mesh=self.mesh,
+            in_specs=(pspec, P(), P()),
+            out_specs=pspec,
+            check_vma=False,
+        )
+
+        def step(grid, center, neighbors):
+            return mapped(grid, center, neighbors)
+
+        return step
+
+    def run_fn(self, supersteps: int):
+        """Returns fn advancing ``supersteps * par_time`` time steps."""
+        step = self.superstep_fn()
+
+        def run(grid, center, neighbors):
+            def body(_, g):
+                return step(g, center, neighbors)
+            return lax.fori_loop(0, supersteps, body, grid)
+
+        return run
+
+    # Convenience eager wrappers -------------------------------------------
+
+    def superstep(self, grid):
+        fn = jax.jit(self.superstep_fn())
+        return fn(grid, self.coeffs.center, self.coeffs.neighbors)
+
+    def run(self, grid, steps: int):
+        if steps % self.plan.par_time:
+            raise ValueError("steps must be a multiple of par_time; use the "
+                             "single-chip engine for remainders")
+        fn = jax.jit(self.run_fn(steps // self.plan.par_time))
+        return fn(grid, self.coeffs.center, self.coeffs.neighbors)

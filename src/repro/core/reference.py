@@ -1,0 +1,46 @@
+"""Pure-jnp reference stencils — the oracle every kernel is validated against.
+
+``stencil_step`` / ``stencil_nsteps`` are deliberately naive: edge-pad the whole
+grid, apply the shifted-slice update, repeat.  No blocking of any kind — this is
+the semantic ground truth for (a) the Pallas kernels (interpret-mode allclose),
+(b) the temporal-blocking driver, and (c) the distributed halo-exchange stepper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.codegen import clamped_update
+from repro.core.spec import StencilCoeffs, StencilSpec
+
+Array = jnp.ndarray
+
+
+def stencil_step(spec: StencilSpec, coeffs: StencilCoeffs, grid: Array) -> Array:
+    """One time step with clamp boundary; output shape == input shape."""
+    return clamped_update(spec, coeffs, grid)
+
+
+def stencil_nsteps(spec: StencilSpec, coeffs: StencilCoeffs, grid: Array,
+                   steps: int) -> Array:
+    """``steps`` time steps, the straightforward iteration (paper eq. 3 loop)."""
+
+    def body(_, g):
+        return stencil_step(spec, coeffs, g)
+
+    return lax.fori_loop(0, steps, body, grid)
+
+
+def stencil_nsteps_unrolled(spec: StencilSpec, coeffs: StencilCoeffs,
+                            grid: Array, steps: int) -> Array:
+    """Python-unrolled variant (identical math; useful for small oracle runs)."""
+    for _ in range(steps):
+        grid = stencil_step(spec, coeffs, grid)
+    return grid
+
+
+def random_grid(spec: StencilSpec, shape, seed: int = 0) -> Array:
+    key = jax.random.PRNGKey(seed)
+    return jax.random.uniform(key, shape, dtype=spec.dtype, minval=-1.0, maxval=1.0)

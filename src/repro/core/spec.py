@@ -1,0 +1,176 @@
+"""Stencil specification — the paper's parameterized-radius star stencil.
+
+The paper's contribution #2 is a *single* kernel whose stencil radius is a
+compile-time parameter.  ``StencilSpec`` is the JAX analogue: radius (and
+dimensionality) are Python-level static fields, so one traced kernel body
+specializes to any order — the same way their OpenCL kernel specializes via a
+preprocessor define.
+
+Coefficient convention (paper eq. 1, the *worst case* with no coefficient
+sharing):
+
+    f_c^{t+1} = c_c * f_c^t
+              + sum_{i=1..rad} sum_{dir in directions} c[dir, i] * f_{dir, i}^t
+
+with ``directions`` = (west, east, south, north) for 2D and additionally
+(below, above) for 3D.  FLOP per cell update is therefore
+
+    2D:  (4*rad + 1) MUL + 4*rad ADD = 8*rad + 1
+    3D:  (6*rad + 1) MUL + 6*rad ADD = 12*rad + 1
+
+matching paper Table I exactly (their table counts 2D as ``8*rad+1``:
+rad 1..4 -> 9, 17, 25, 33; 3D -> 13, 25, 37, 49).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+# Axis ordering: arrays are (Y, X) for 2D and (Z, Y, X) for 3D.  The minor
+# (lane) dimension is always X, mirroring the paper's vectorized x dimension.
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilSpec:
+    """Static description of a star-shaped stencil.
+
+    Attributes:
+      ndim:    2 or 3.
+      radius:  stencil radius/order (paper studies 1..4; any value >= 1 works).
+      dtype:   element dtype (paper uses float32).
+      boundary: only "clamp" is supported — out-of-bound neighbors fall back
+        on the border cell, the paper's boundary condition (§IV.B).
+    """
+
+    ndim: int
+    radius: int
+    dtype: str = "float32"
+    boundary: str = "clamp"
+
+    def __post_init__(self):
+        if self.ndim not in (2, 3):
+            raise ValueError(f"ndim must be 2 or 3, got {self.ndim}")
+        if self.radius < 1:
+            raise ValueError(f"radius must be >= 1, got {self.radius}")
+        if self.boundary != "clamp":
+            raise ValueError("only clamp (paper) boundary is implemented")
+
+    # ---- paper Table I characteristics ------------------------------------
+
+    @property
+    def num_directions(self) -> int:
+        return 2 * self.ndim
+
+    @property
+    def flops_per_cell(self) -> int:
+        """8*rad+1 (2D) or 12*rad+1 (3D) — paper Table I."""
+        return 2 * self.num_directions * self.radius + 1
+
+    @property
+    def flops_per_cell_shared(self) -> int:
+        """Shared-coefficient variant (paper §IV.A/§V.A): neighbors at the
+        same distance share one coefficient, so per distance the update is
+        one pre-sum over 2*ndim neighbors ((2*ndim-1) adds) + 1 mul, plus
+        rad accumulation adds and the center mul:
+        FLOP = (2*ndim+1)*rad + 1.  The paper notes this saves only FMULs on
+        the FPGA (one DSP per cell update, since FADDs still occupy DSPs)."""
+        return (self.num_directions + 1) * self.radius + 1
+
+    @property
+    def muls_per_cell(self) -> int:
+        return self.num_directions * self.radius + 1
+
+    @property
+    def adds_per_cell(self) -> int:
+        return self.num_directions * self.radius
+
+    @property
+    def bytes_per_cell(self) -> int:
+        """One read + one write at full on-chip reuse (paper Table I)."""
+        itemsize = jnp.dtype(self.dtype).itemsize
+        return 2 * itemsize
+
+    @property
+    def flop_per_byte(self) -> float:
+        return self.flops_per_cell / self.bytes_per_cell
+
+    # ---- coefficients ------------------------------------------------------
+
+    def default_coeffs(self, seed: int = 0) -> "StencilCoeffs":
+        """Distinct per-direction-per-distance coefficients (paper's worst case).
+
+        Coefficients are scaled so the operator is a convex-ish average
+        (sum of |coeffs| <= 1) — keeps iterates bounded so long multi-step
+        tests do not overflow.
+        """
+        rng = np.random.RandomState(seed)
+        n = self.num_directions
+        raw = rng.uniform(0.2, 1.0, size=(n, self.radius)).astype(self.dtype)
+        raw /= 2.0 * raw.sum()
+        center = np.asarray(0.5, dtype=self.dtype)
+        return StencilCoeffs(
+            center=jnp.asarray(center),
+            neighbors=jnp.asarray(raw),
+        )
+
+    def shared_coeffs(self, seed: int = 0) -> "StencilCoeffs":
+        """Distance-shared coefficients (the symmetric-operator case the
+        paper's GPU/FPGA comparisons [10, 18, 19] use).  Represented in the
+        same (directions, radius) layout — every direction row equal — so
+        the identical kernels apply; the FLOP accounting difference is
+        reported by ``flops_per_cell_shared``."""
+        rng = np.random.RandomState(seed)
+        row = rng.uniform(0.2, 1.0, size=(1, self.radius)).astype(self.dtype)
+        raw = np.tile(row, (self.num_directions, 1))
+        raw /= 2.0 * raw.sum()
+        center = np.asarray(0.5, dtype=self.dtype)
+        return StencilCoeffs(center=jnp.asarray(center),
+                             neighbors=jnp.asarray(raw))
+
+
+@dataclasses.dataclass
+class StencilCoeffs:
+    """Runtime coefficient arrays.
+
+    ``neighbors`` has shape (2*ndim, radius): row order is
+    (west, east, south, north[, below, above]) = (-x, +x, -y, +y[, -z, +z]).
+    """
+
+    center: Array
+    neighbors: Array
+
+    def astype(self, dtype) -> "StencilCoeffs":
+        return StencilCoeffs(self.center.astype(dtype), self.neighbors.astype(dtype))
+
+    def as_tuple(self) -> Tuple[Array, Array]:
+        return (self.center, self.neighbors)
+
+
+# Direction index constants into StencilCoeffs.neighbors rows.
+WEST, EAST, SOUTH, NORTH, BELOW, ABOVE = range(6)
+
+
+def axis_for_direction(ndim: int, direction: int) -> Tuple[int, int]:
+    """Returns (array_axis, sign) for a direction index.
+
+    Arrays are (Y, X) / (Z, Y, X); axis numbers are positions from the left.
+    West/East move along X (last axis), South/North along Y, Below/Above along Z.
+    """
+    last = ndim - 1
+    table_2d = {
+        WEST: (last, -1),
+        EAST: (last, +1),
+        SOUTH: (last - 1, -1),
+        NORTH: (last - 1, +1),
+    }
+    if direction in table_2d:
+        return table_2d[direction]
+    if ndim == 3 and direction in (BELOW, ABOVE):
+        return (0, -1 if direction == BELOW else +1)
+    raise ValueError(f"direction {direction} invalid for ndim={ndim}")

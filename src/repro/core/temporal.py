@@ -1,0 +1,55 @@
+"""Temporal-blocking engine: planning + execution for a single chip.
+
+``StencilEngine`` bundles a spec, coefficients, and a blocking plan chosen by
+the performance model (paper §V.A's tuning loop) and exposes:
+
+* ``superstep(grid)``  — advance ``par_time`` steps, one HBM round trip
+* ``run(grid, steps)`` — arbitrary step counts (chained supersteps)
+* ``estimate()``       — the model's predicted throughput for the plan
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.analysis.hw import TpuChip, V5E
+from repro.core.blocking import BlockPlan, PlanEstimate, estimate, plan_blocking
+from repro.core.spec import StencilCoeffs, StencilSpec
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class StencilEngine:
+    spec: StencilSpec
+    coeffs: StencilCoeffs
+    plan: BlockPlan
+    hw: TpuChip = V5E
+    interpret: Optional[bool] = None
+
+    @classmethod
+    def create(cls, spec: StencilSpec, grid_shape: Tuple[int, ...],
+               coeffs: Optional[StencilCoeffs] = None,
+               hw: TpuChip = V5E, plan: Optional[BlockPlan] = None,
+               max_par_time: int = 64,
+               interpret: Optional[bool] = None) -> "StencilEngine":
+        if coeffs is None:
+            coeffs = spec.default_coeffs()
+        if plan is None:
+            plan = plan_blocking(spec, hw, grid_shape,
+                                 max_par_time=max_par_time).plan
+        return cls(spec=spec, coeffs=coeffs, plan=plan, hw=hw,
+                   interpret=interpret)
+
+    def superstep(self, grid: jnp.ndarray) -> jnp.ndarray:
+        return ops.stencil_superstep(grid, self.spec, self.coeffs, self.plan,
+                                     interpret=self.interpret)
+
+    def run(self, grid: jnp.ndarray, steps: int) -> jnp.ndarray:
+        return ops.stencil_run(grid, self.spec, self.coeffs, self.plan, steps,
+                               interpret=self.interpret)
+
+    def estimate(self) -> PlanEstimate:
+        return estimate(self.plan, self.hw)

@@ -1,0 +1,5 @@
+"""Data pipelines: synthetic LM streams, memmap corpus, prefetch."""
+
+from repro.data.pipeline import MemmapCorpus, Prefetcher, SyntheticLM
+
+__all__ = ["MemmapCorpus", "Prefetcher", "SyntheticLM"]

@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: the stencil itself."""

@@ -1,0 +1,242 @@
+"""Shared Pallas machinery for the temporal-blocked stencil kernels.
+
+TPU-native design (see DESIGN.md §2 for the FPGA -> TPU map):
+
+* The input grid lives in HBM (``MemorySpace.ANY``); each pallas grid step
+  DMAs one *halo-extended* block into a VMEM scratch buffer — the analogue of
+  the paper's shift-register fill.  Halo'd input windows overlap, which Blocked
+  BlockSpecs cannot express, hence the manual ``make_async_copy``.
+* ``par_time`` stencil applications run back-to-back on the VMEM-resident
+  block (the paper's chained PEs), each shrinking the valid region by
+  ``radius`` — overlapped temporal blocking, eq. 2.
+* After each fused step, out-of-grid positions are re-clamped to the border
+  cell value (paper §III.B's generated boundary conditions).  Without this
+  fixup, pre-padded halos go stale after one step and orders >= 1 diverge at
+  the boundary for par_time >= 2.
+* The output block is written through a regular Blocked BlockSpec — output
+  tiles never overlap.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.blocking import BlockPlan
+from repro.core.codegen import interior_update
+from repro.core.spec import StencilCoeffs, StencilSpec
+
+
+def clamp_fixup(cur: jnp.ndarray, starts, true_shape: Tuple[int, ...]):
+    """Restore clamp-to-edge semantics on out-of-grid positions.
+
+    ``starts[d]`` is the (traced) global coordinate of ``cur``'s origin along
+    axis d; positions outside [0, true_shape[d]) are overwritten with the
+    value at the clamped border coordinate, so the next fused time step reads
+    correct boundary values.  For fully-interior blocks every select is a
+    no-op.
+    """
+    for d in range(cur.ndim):
+        size = cur.shape[d]
+        n = true_shape[d]
+        pos = starts[d] + lax.broadcasted_iota(jnp.int32, cur.shape, d)
+        # Border-cell slabs (1-wide along axis d), indices clipped into range
+        # so dynamic_slice never reads out of the buffer.
+        left_idx = jnp.clip(-starts[d], 0, size - 1)
+        right_idx = jnp.clip((n - 1) - starts[d], 0, size - 1)
+        left = lax.dynamic_slice_in_dim(cur, left_idx, 1, axis=d)
+        right = lax.dynamic_slice_in_dim(cur, right_idx, 1, axis=d)
+        cur = jnp.where(pos < 0, left, cur)
+        cur = jnp.where(pos > n - 1, right, cur)
+    return cur
+
+
+def build_superstep_kernel(spec: StencilSpec, plan: BlockPlan,
+                           true_shape: Tuple[int, ...]):
+    """Returns the pallas kernel body for one superstep (par_time fused steps).
+
+    ``true_shape`` is the *global* grid shape; the ``offs`` input carries this
+    shard's global origin (all zeros on a single device), so clamp fixup
+    happens exactly at the physical grid boundary even under domain
+    decomposition.
+    """
+    ndim = spec.ndim
+    block = plan.block_shape
+    padded_block = plan.padded_shape
+    halo = plan.halo
+    r = spec.radius
+    T = plan.par_time
+
+    def kernel(offs_ref, c_ref, n_ref, in_ref, o_ref, buf_ref, sem):
+        pids = [pl.program_id(d) for d in range(ndim)]
+        window = tuple(
+            pl.ds(pids[d] * block[d], padded_block[d]) for d in range(ndim))
+        cp = pltpu.make_async_copy(in_ref.at[window], buf_ref, sem)
+        cp.start()
+        cp.wait()
+
+        coeffs = StencilCoeffs(center=c_ref[0, 0], neighbors=n_ref[...])
+        cur = buf_ref[...]
+        for t in range(1, T + 1):
+            cur = interior_update(spec, coeffs, cur)
+            if t < T:
+                starts = tuple(
+                    offs_ref[d] + pids[d] * block[d] - halo + t * r
+                    for d in range(ndim))
+                cur = clamp_fixup(cur, starts, true_shape)
+        o_ref[...] = cur
+
+    return kernel
+
+
+def build_pipelined_kernel(spec: StencilSpec, plan: BlockPlan,
+                           true_shape: Tuple[int, ...], grid: Tuple[int, ...]):
+    """Double-buffered variant: the DMA for block g+1 is issued before block
+    g's compute — the TPU-native analogue of the paper's deep pipeline
+    (their PEs consume a stream while the next block fills the shift
+    register).  Two VMEM buffers + two DMA semaphores alternate by grid
+    parity; scratch persists across sequential grid steps on a TPU core.
+    """
+    ndim = spec.ndim
+    block = plan.block_shape
+    padded_block = plan.padded_shape
+    halo = plan.halo
+    r = spec.radius
+    T = plan.par_time
+    import math
+    total = math.prod(grid)
+
+    def _coords(lin):
+        idx = []
+        rem = lin
+        for d in range(ndim - 1, -1, -1):
+            idx.append(rem % grid[d])
+            rem = rem // grid[d]
+        return tuple(reversed(idx))
+
+    def kernel(offs_ref, c_ref, n_ref, in_ref, o_ref, buf0, buf1, sem0,
+               sem1):
+        pids = [pl.program_id(d) for d in range(ndim)]
+        lin = pids[0]
+        for d in range(1, ndim):
+            lin = lin * grid[d] + pids[d]
+        parity = jax.lax.rem(lin, 2)
+
+        def _copy(lin_idx, buf, sem):
+            coords = _coords(lin_idx)
+            window = tuple(pl.ds(coords[d] * block[d], padded_block[d])
+                           for d in range(ndim))
+            return pltpu.make_async_copy(in_ref.at[window], buf, sem)
+
+        @pl.when(lin == 0)
+        def _prologue():
+            _copy(lin, buf0, sem0).start()
+
+        nxt = lin + 1
+
+        @pl.when((nxt < total) & (parity == 0))
+        def _prefetch_odd():
+            _copy(nxt, buf1, sem1).start()
+
+        @pl.when((nxt < total) & (parity == 1))
+        def _prefetch_even():
+            _copy(nxt, buf0, sem0).start()
+
+        coeffs = StencilCoeffs(center=c_ref[0, 0], neighbors=n_ref[...])
+
+        def _compute(buf, sem):
+            _copy(lin, buf, sem).wait()
+            cur = buf[...]
+            for t in range(1, T + 1):
+                cur = interior_update(spec, coeffs, cur)
+                if t < T:
+                    starts = tuple(
+                        offs_ref[d] + pids[d] * block[d] - halo + t * r
+                        for d in range(ndim))
+                    cur = clamp_fixup(cur, starts, true_shape)
+            o_ref[...] = cur
+
+        @pl.when(parity == 0)
+        def _run_even():
+            _compute(buf0, sem0)
+
+        @pl.when(parity == 1)
+        def _run_odd():
+            _compute(buf1, sem1)
+
+    return kernel
+
+
+def default_interpret() -> bool:
+    """Pallas TPU kernels run in interpret mode on CPU hosts."""
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "plan", "true_shape", "interpret", "pipelined"),
+)
+def superstep_call(padded: jnp.ndarray, center: jnp.ndarray,
+                   neighbors: jnp.ndarray, spec: StencilSpec, plan: BlockPlan,
+                   true_shape: Tuple[int, ...], interpret: bool,
+                   offsets: jnp.ndarray | None = None,
+                   pipelined: bool = False) -> jnp.ndarray:
+    """Invoke the pallas kernel over a pre-padded grid.
+
+    ``padded`` has shape ``rounded_up(local) + 2*halo`` per axis, already
+    halo-filled (edge-padded on a single device; neighbor-exchanged +
+    edge-clamped under domain decomposition).  ``true_shape`` is the GLOBAL
+    grid shape and ``offsets`` this shard's global origin.  Returns the
+    rounded-up local grid after ``par_time`` steps; caller slices back.
+    """
+    ndim = spec.ndim
+    block = plan.block_shape
+    halo = plan.halo
+    rounded = tuple(padded.shape[d] - 2 * halo for d in range(ndim))
+    grid = tuple(rounded[d] // block[d] for d in range(ndim))
+
+    if offsets is None:
+        offsets = jnp.zeros((ndim,), jnp.int32)
+    c2 = center.reshape((1, 1)).astype(padded.dtype)
+    nb = neighbors.astype(padded.dtype)
+
+    if pipelined:
+        kernel = build_pipelined_kernel(spec, plan, true_shape, grid)
+        scratch = [
+            pltpu.VMEM(plan.padded_shape, padded.dtype),
+            pltpu.VMEM(plan.padded_shape, padded.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ]
+    else:
+        kernel = build_superstep_kernel(spec, plan, true_shape)
+        scratch = [
+            pltpu.VMEM(plan.padded_shape, padded.dtype),
+            pltpu.SemaphoreType.DMA,
+        ]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec(c2.shape, lambda *g: (0,) * 2),
+            pl.BlockSpec(nb.shape, lambda *g: (0,) * 2),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        ],
+        out_specs=pl.BlockSpec(block, lambda *g: g),
+        out_shape=jax.ShapeDtypeStruct(rounded, padded.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(offsets.astype(jnp.int32), c2, nb, padded)
+    return out

@@ -1,0 +1,49 @@
+"""Public jit'd entry points for the stencil kernels.
+
+``stencil_superstep`` dispatches on spec.ndim; ``stencil_run`` advances an
+arbitrary number of time steps by chaining supersteps (+ one remainder
+superstep with a reduced par_time), preserving exact clamp-boundary
+semantics throughout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.blocking import BlockPlan
+from repro.core.spec import StencilCoeffs, StencilSpec
+from repro.kernels.stencil2d import stencil2d_superstep
+from repro.kernels.stencil3d import stencil3d_superstep
+
+
+def stencil_superstep(grid, spec: StencilSpec, coeffs: StencilCoeffs,
+                      plan: BlockPlan, *, interpret: Optional[bool] = None,
+                      pipelined: bool = False):
+    if spec.ndim == 2:
+        return stencil2d_superstep(grid, spec, coeffs, plan,
+                                   interpret=interpret, pipelined=pipelined)
+    return stencil3d_superstep(grid, spec, coeffs, plan, interpret=interpret,
+                               pipelined=pipelined)
+
+
+def stencil_run(grid, spec: StencilSpec, coeffs: StencilCoeffs,
+                plan: BlockPlan, steps: int, *,
+                interpret: Optional[bool] = None):
+    """Advance ``steps`` time steps using temporal blocking.
+
+    steps = k * par_time + rem: k full supersteps, then one superstep with
+    par_time = rem (same spatial blocks, shallower halo).
+    """
+    if steps < 0:
+        raise ValueError("steps must be >= 0")
+    full, rem = divmod(steps, plan.par_time)
+    for _ in range(full):
+        grid = stencil_superstep(grid, spec, coeffs, plan, interpret=interpret)
+    if rem:
+        rem_plan = dataclasses.replace(plan, par_time=rem)
+        grid = stencil_superstep(grid, spec, coeffs, rem_plan,
+                                 interpret=interpret)
+    return grid

@@ -1,0 +1,21 @@
+"""Pure-jnp oracles for the stencil kernels (re-exported from core).
+
+Every pallas kernel result must match these bit-for-bit up to float
+associativity (we keep the same summation order, so tolerances are tight).
+"""
+
+from __future__ import annotations
+
+from repro.core.reference import (  # noqa: F401
+    random_grid,
+    stencil_nsteps,
+    stencil_nsteps_unrolled,
+    stencil_step,
+)
+
+__all__ = [
+    "stencil_step",
+    "stencil_nsteps",
+    "stencil_nsteps_unrolled",
+    "random_grid",
+]

@@ -1,0 +1,183 @@
+"""Training launcher.
+
+CPU-scale real runs (examples, tests) and the full production wiring:
+logical-axis shardings, gradient accumulation, compression, async
+checkpointing with auto-resume, straggler watchdog.
+
+Usage (reduced CPU run):
+    PYTHONPATH=src python -m repro.launch.train --arch starcoder2-7b \
+        --reduced --steps 50 --batch 8 --seq 64 --mesh none
+
+Production meshes are exercised via ``repro.launch.dryrun`` (no TPU here).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, shardings_from_specs
+from repro.configs import get_arch
+from repro.data import Prefetcher, SyntheticLM
+from repro.models import common, transformer
+from repro.optim import AdamW, GradCompression, WarmupCosine
+from repro.runtime import mesh_rules
+from repro.runtime.fault import StepWatchdog
+from repro.runtime.trainer import make_train_step
+
+
+@dataclasses.dataclass
+class TrainRun:
+    """Bundles everything a (re)startable training run needs."""
+
+    model: transformer.LMModel
+    optimizer: AdamW
+    compression: GradCompression
+    train_step: Any
+    params: Any
+    opt_state: Any
+    comp_error: Any
+    ckpt: Optional[CheckpointManager]
+    watchdog: StepWatchdog
+    step: int = 0
+
+    def state_tree(self):
+        tree = {"params": self.params, "opt": self.opt_state}
+        if self.comp_error is not None:
+            tree["comp_error"] = self.comp_error
+        return tree
+
+    def load_state_tree(self, tree):
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        if self.comp_error is not None:
+            self.comp_error = tree["comp_error"]
+
+
+def build_run(cfg, *, steps: int, lr: float = 3e-4, accum: int = 1,
+              compression: str = "none", ckpt_dir: Optional[str] = None,
+              seed: int = 0, mesh=None, rules=None) -> TrainRun:
+    model = transformer.build(cfg)
+    optimizer = AdamW(schedule=WarmupCosine(peak_lr=lr, warmup_steps=min(
+        100, steps // 10 + 1), total_steps=steps),
+        moment_dtype=cfg.moment_dtype)
+    comp = GradCompression(compression)
+
+    params_p = model.init(jax.random.PRNGKey(seed))
+    params, specs = common.split_params(params_p)
+    if mesh is not None and rules is not None:
+        shardings = shardings_from_specs(mesh, rules, specs)
+        params = jax.tree.map(jax.device_put, params, shardings)
+    opt_state = optimizer.init(params)
+    comp_error = comp.init_error(params) if compression != "none" else None
+
+    step_fn = make_train_step(model, optimizer, accum=accum, compression=comp)
+    if mesh is not None:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+
+    ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    return TrainRun(model=model, optimizer=optimizer, compression=comp,
+                    train_step=step_fn, params=params, opt_state=opt_state,
+                    comp_error=comp_error, ckpt=ckpt,
+                    watchdog=StepWatchdog())
+
+
+def train_loop(run: TrainRun, data, steps: int, *, checkpoint_every: int = 100,
+               log_every: int = 10, resume: bool = True, mesh=None,
+               rules=None, quiet: bool = False) -> Dict[str, float]:
+    start = 0
+    if run.ckpt is not None and resume:
+        latest = run.ckpt.latest_step()
+        if latest is not None:
+            tree = run.ckpt.restore(latest, run.state_tree())
+            run.load_state_tree(tree)
+            start = latest
+            if not quiet:
+                print(f"[train] resumed from step {start}")
+
+    prefetch = Prefetcher(data, start_step=start)
+    last_metrics: Dict[str, float] = {}
+    ctx = mesh_rules.use_rules(rules) if rules is not None else None
+    if ctx is not None:
+        ctx.__enter__()
+    try:
+        with (mesh or _nullcontext()):
+            for step in range(start, steps):
+                t0 = time.monotonic()
+                _, batch = prefetch.next()
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                run.params, run.opt_state, run.comp_error, metrics = \
+                    run.train_step(run.params, run.opt_state, run.comp_error,
+                                   batch)
+                if step % log_every == 0 or step == steps - 1:
+                    last_metrics = {k: float(v) for k, v in metrics.items()}
+                    if not quiet:
+                        print(f"[train] step={step} "
+                              + " ".join(f"{k}={v:.4f}"
+                                         for k, v in last_metrics.items()))
+                dt = time.monotonic() - t0
+                if run.watchdog.observe(step, dt) and run.ckpt is not None:
+                    run.ckpt.save(step + 1, run.state_tree(), blocking=False)
+                if run.ckpt is not None and (step + 1) % checkpoint_every == 0:
+                    run.ckpt.save(step + 1, run.state_tree(), blocking=False)
+            if run.ckpt is not None:
+                run.ckpt.save(steps, run.state_tree(), blocking=True)
+    finally:
+        if ctx is not None:
+            ctx.__exit__(None, None, None)
+        prefetch.close()
+    run.step = steps
+    return last_metrics
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "bf16", "int8"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    run = build_run(cfg, steps=args.steps, lr=args.lr, accum=args.accum,
+                    compression=args.compression, ckpt_dir=args.ckpt_dir,
+                    seed=args.seed)
+    n = common.param_count(run.params)
+    print(f"[train] arch={cfg.name} params={n:,}")
+    data = SyntheticLM(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        num_codebooks=cfg.num_codebooks,
+        frontend=(cfg.img_tokens, cfg.frontend_dim) if cfg.frontend_dim
+        else None,
+        seed=args.seed)
+    metrics = train_loop(run, data, args.steps)
+    print(f"[train] done: {metrics}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model substrate: attention variants, MoE, Mamba, RWKV6, transformer factory."""
+
+from repro.models.transformer import LMModel, build
+
+__all__ = ["LMModel", "build"]

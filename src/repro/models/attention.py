@@ -1,0 +1,372 @@
+"""Attention variants for the assigned architectures.
+
+* GQA (starcoder2, gemma2/3, llava, jamba, musicgen, grok, granite, minicpm
+  at kv=40 == MHA) with optional sliding window (gemma local layers), attn
+  logit softcap (gemma2), QK-norm (gemma3).
+* MLA (minicpm3): low-rank q/kv compression with decoupled RoPE; decode uses
+  the absorbed-matmul form so the cache holds only (c_kv, k_rope).
+* Training/prefill use a flash-style chunked online-softmax scan (no S x S
+  materialization) — required to fit prefill_32k.
+* Decode uses either a full cache or a ring (sliding-window) cache.  The ring
+  cache is the paper-technique reuse: a window-W attention layer is a radius-W
+  1D stencil over the sequence, and the ring buffer is its shift register
+  (DESIGN.md §5).
+
+Cache layout: (batch, cache_len, kv_heads, head_dim); ``pos`` carries absolute
+positions (-1 = empty) so ring wraparound and masking stay exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AttnCfg
+from repro.models import common
+from repro.models.common import Param, apply_rope, dense_param, rms_norm_headwise, softcap
+from repro.runtime.mesh_rules import shard
+
+NEG_INF = -2.0e38
+
+
+# =============================================================================
+# Caches
+# =============================================================================
+
+class KVCache(NamedTuple):
+    """GQA cache; for window layers cache_len == window (ring buffer)."""
+    k: jnp.ndarray            # (B, L, KV, D)
+    v: jnp.ndarray            # (B, L, KV, D)
+    pos: jnp.ndarray          # (B, L) int32 absolute positions, -1 = empty
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray         # (B, L, kv_lora)
+    k_rope: jnp.ndarray       # (B, L, rope_dim)
+    pos: jnp.ndarray          # (B, L) int32
+
+
+def init_kv_cache(cfg: AttnCfg, batch: int, length: int, dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+        pos=jnp.full((batch, length), -1, jnp.int32),
+    )
+
+
+def init_mla_cache(cfg: AttnCfg, batch: int, length: int, dtype) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, length, cfg.kv_lora), dtype),
+        k_rope=jnp.zeros((batch, length, cfg.rope_dim), dtype),
+        pos=jnp.full((batch, length), -1, jnp.int32),
+    )
+
+
+def _ring_slot(step: jnp.ndarray, length: int) -> jnp.ndarray:
+    """Write slot for absolute position ``step`` in a length-L ring."""
+    return jnp.mod(step, length)
+
+
+# =============================================================================
+# Flash-style chunked attention (train / prefill)
+# =============================================================================
+
+def _mask_bias(q_pos, k_pos, window: Optional[int]):
+    """Causal (+ sliding window) mask as an additive bias.
+
+    q_pos: (..., Sq), k_pos: (..., Sk) -> bias (..., Sq, Sk).
+    """
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    ok = (dk <= dq) & (dk >= 0)
+    if window is not None:
+        ok &= (dq - dk) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, *, window: Optional[int],
+                      cap: Optional[float], scale: float,
+                      chunk: int = 1024) -> jnp.ndarray:
+    """Online-softmax attention over key chunks.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KV, D); positions int32 (B, S*).
+    Returns (B, Sq, H, D).  H = KV * G.
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    chunk = min(chunk, Sk)
+    n_chunks = Sk // chunk
+    assert Sk % chunk == 0, (Sk, chunk)
+
+    qg = (q * scale).reshape(B, Sq, KV, G, D)
+    qg = shard(qg, "batch", "seq", "kv_heads", None, None)
+
+    # (n, B, C, KV, D) / (n, B, C)
+    ks = jnp.moveaxis(k.reshape(B, n_chunks, chunk, KV, D), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, n_chunks, chunk, KV, D), 1, 0)
+    kps = jnp.moveaxis(k_pos.reshape(B, n_chunks, chunk), 1, 0)
+
+    # Online-softmax carries must stay head-sharded: without these
+    # constraints GSPMD reshards (all-gathers) the carry on every KV chunk of
+    # the scan — measured 400+ GB/device on the MoE train cells.
+    m0 = shard(jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32),
+               "batch", "seq", "kv_heads", None)
+    l0 = shard(jnp.zeros((B, Sq, KV, G), jnp.float32),
+               "batch", "seq", "kv_heads", None)
+    a0 = shard(jnp.zeros((B, Sq, KV, G, D), jnp.float32),
+               "batch", "seq", "kv_heads", None, None)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, kpc = xs
+        s = jnp.einsum("bskgd,bckd->bskgc", qg, kc,
+                       preferred_element_type=jnp.float32)
+        s = softcap(s, cap)
+        bias = _mask_bias(q_pos, kpc, window)   # (B, Sq, C)
+        s = s + bias[:, :, None, None, :]       # broadcast over KV, G
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bskgc,bckd->bskgd", p, vc.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    # Flash semantics require RECOMPUTING s/p in the backward pass; without
+    # this checkpoint, scan saves every chunk's probabilities -> a full
+    # S x S f32 materialization (measured 11+ TB/device on grok train_4k,
+    # §Perf hillclimb B iteration 1).
+    body = jax.checkpoint(body)
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kps))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# =============================================================================
+# GQA
+# =============================================================================
+
+def init_gqa(key, d_model: int, cfg: AttnCfg, dtype):
+    """Projections stored FLATTENED 2-D ((d, H*hd) etc.).
+
+    H*hd is always divisible by the 16-way model axis even when H is not
+    (e.g. minicpm H=40, starcoder H=36), so flattened layouts keep attention
+    tensor-parallel for every assigned arch (DESIGN §6); apply() reshapes to
+    (B, S, H, hd) after the matmul.
+    """
+    ks = jax.random.split(key, 4)
+    H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_param(ks[0], (d_model, H * D), ("d_model", "heads"), dtype),
+        "wk": dense_param(ks[1], (d_model, KV * D), ("d_model", "kv_heads"), dtype),
+        "wv": dense_param(ks[2], (d_model, KV * D), ("d_model", "kv_heads"), dtype),
+        "wo": dense_param(ks[3], (H * D, d_model), ("heads", "d_model"), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = common.zeros_param((D,), (None,), dtype)
+        p["k_scale"] = common.zeros_param((D,), (None,), dtype)
+    return p
+
+
+def _qk_scale(cfg: AttnCfg) -> float:
+    return cfg.query_scale if cfg.query_scale is not None \
+        else 1.0 / np.sqrt(cfg.head_dim)
+
+
+def apply_gqa(params, x, cfg: AttnCfg, *, positions, window: Optional[int],
+              cache: Optional[KVCache] = None, chunk: int = 1024,
+              rope_theta: Optional[float] = None):
+    """x: (B, S, d).  Training/prefill when cache is None; else one-step decode
+    (S == 1) appending into the cache.  Returns (out, new_cache)."""
+    B, S, _ = x.shape
+    H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, D)
+    k = (x @ params["wk"]).reshape(B, S, KV, D)
+    v = (x @ params["wv"]).reshape(B, S, KV, D)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+
+    if cfg.qk_norm:
+        q = rms_norm_headwise(q, params["q_scale"])
+        k = rms_norm_headwise(k, params["k_scale"])
+    if cfg.use_rope:
+        theta = rope_theta if rope_theta is not None else cfg.rope_theta
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    scale = _qk_scale(cfg)
+
+    if cache is None:
+        out = chunked_attention(q, k, v, positions, positions, window=window,
+                                cap=cfg.softcap, scale=scale, chunk=chunk)
+    else:
+        L = cache.k.shape[1]
+        slot = _ring_slot(positions[:, 0], L)              # (B,)
+        bidx = jnp.arange(B)
+        new_k = cache.k.at[bidx, slot].set(k[:, 0])
+        new_v = cache.v.at[bidx, slot].set(v[:, 0])
+        new_pos = cache.pos.at[bidx, slot].set(positions[:, 0])
+        cache = KVCache(new_k, new_v, new_pos)
+        out = decode_attention(q, cache, window=window, cap=cfg.softcap,
+                               scale=scale)
+    out = out.reshape(B, S, H * D) @ params["wo"]
+    return shard(out, "batch", "seq", None), cache
+
+
+def decode_attention(q, cache: KVCache, *, window: Optional[int],
+                     cap: Optional[float], scale: float) -> jnp.ndarray:
+    """Single-token attention over a (possibly ring) cache.
+
+    q: (B, 1, H, D).  Masking is positional (cache.pos), so ring wraparound
+    needs no special casing.  The full-cache einsum is sharded over batch and
+    kv_heads; for the sequence-parallel long-context path see
+    ``seqpar_decode_attention``.
+    """
+    B, _, H, D = q.shape
+    KV = cache.k.shape[2]
+    G = H // KV
+    qg = (q * scale).reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,blkd->bkgl", qg, cache.k,
+                   preferred_element_type=jnp.float32)
+    s = softcap(s, cap)
+    q_pos = jnp.max(cache.pos, axis=1)                     # (B,) current pos
+    ok = (cache.pos >= 0) & (cache.pos <= q_pos[:, None])
+    if window is not None:
+        ok &= (q_pos[:, None] - cache.pos) < window
+    s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgl,blkd->bkgd", p, cache.v.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# =============================================================================
+# MLA (minicpm3)
+# =============================================================================
+
+def init_mla(key, d_model: int, cfg: AttnCfg, dtype):
+    """Up-projections stored flattened (rank, H*dim) — same rationale as
+    init_gqa; apply() reshapes per head."""
+    ks = jax.random.split(key, 6)
+    H = cfg.n_heads
+    qk_dim = cfg.nope_dim + cfg.rope_dim
+    return {
+        "wq_a": dense_param(ks[0], (d_model, cfg.q_lora), ("d_model", None), dtype),
+        "q_norm": common.zeros_param((cfg.q_lora,), (None,), dtype),
+        "wq_b": dense_param(ks[1], (cfg.q_lora, H * qk_dim), (None, "heads"), dtype),
+        "wkv_a": dense_param(ks[2], (d_model, cfg.kv_lora + cfg.rope_dim),
+                             ("d_model", None), dtype),
+        "kv_norm": common.zeros_param((cfg.kv_lora,), (None,), dtype),
+        "wk_b": dense_param(ks[3], (cfg.kv_lora, H * cfg.nope_dim),
+                            (None, "heads"), dtype),
+        "wv_b": dense_param(ks[4], (cfg.kv_lora, H * cfg.v_dim),
+                            (None, "heads"), dtype),
+        "wo": dense_param(ks[5], (H * cfg.v_dim, d_model),
+                          ("heads", "d_model"), dtype),
+    }
+
+
+def _mla_qkr(params, x, cfg: AttnCfg, positions):
+    """Shared q / compressed-kv projections."""
+    B, S, _ = x.shape
+    qk_dim = cfg.nope_dim + cfg.rope_dim
+    ql = common.rms_norm_headwise(x @ params["wq_a"], params["q_norm"])
+    q = (ql @ params["wq_b"]).reshape(B, S, cfg.n_heads, qk_dim)
+    q_nope = q[..., : cfg.nope_dim]
+    q_rope = apply_rope(q[..., cfg.nope_dim:], positions, cfg.rope_theta)
+
+    kv = x @ params["wkv_a"]
+    c_kv = common.rms_norm_headwise(kv[..., : cfg.kv_lora], params["kv_norm"])
+    # Shared (per-token, head-less) rope key: add a singleton head axis.
+    k_rope = apply_rope(kv[..., None, cfg.kv_lora:], positions,
+                        cfg.rope_theta)[..., 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def apply_mla(params, x, cfg: AttnCfg, *, positions,
+              cache: Optional[MLACache] = None, chunk: int = 1024):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    scale = cfg.query_scale if cfg.query_scale is not None \
+        else 1.0 / np.sqrt(cfg.nope_dim + cfg.rope_dim)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(params, x, cfg, positions)
+
+    if cache is None:
+        # Materialized path (train / prefill).
+        k_nope = (c_kv @ params["wk_b"]).reshape(B, S, H, cfg.nope_dim)
+        v = (c_kv @ params["wv_b"]).reshape(B, S, H, cfg.v_dim)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, H, cfg.rope_dim))], axis=-1)
+        # Pad v up to qk_dim for the shared chunked kernel, slice after.
+        qk_dim = cfg.nope_dim + cfg.rope_dim
+        v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - cfg.v_dim)))
+        out = chunked_attention(q, k, v_p, positions, positions, window=None,
+                                cap=None, scale=scale, chunk=chunk)
+        out = out[..., : cfg.v_dim]
+        new_cache = None
+    else:
+        # Absorbed decode: scores in latent space; cache stays compressed.
+        L = cache.c_kv.shape[1]
+        slot = _ring_slot(positions[:, 0], L)
+        bidx = jnp.arange(B)
+        cache = MLACache(
+            c_kv=cache.c_kv.at[bidx, slot].set(c_kv[:, 0]),
+            k_rope=cache.k_rope.at[bidx, slot].set(k_rope[:, 0]),
+            pos=cache.pos.at[bidx, slot].set(positions[:, 0]),
+        )
+        # q_eff[h, l] = q_nope[h, :] @ wk_b[l, h, :]  (absorbed form)
+        wk_b = params["wk_b"].reshape(cfg.kv_lora, H, cfg.nope_dim)
+        q_eff = jnp.einsum("bshk,lhk->bshl", q_nope, wk_b)
+        s = jnp.einsum("bshl,bLl->bshL", q_eff * scale, cache.c_kv,
+                       preferred_element_type=jnp.float32)
+        s += jnp.einsum("bshk,bLk->bshL", q_rope * scale, cache.k_rope,
+                        preferred_element_type=jnp.float32)
+        q_pos = positions[:, :1]
+        ok = (cache.pos >= 0) & (cache.pos <= q_pos)       # (B, L)
+        s += jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bshL,bLl->bshl", p,
+                         cache.c_kv.astype(jnp.float32)).astype(x.dtype)
+        wv_b = params["wv_b"].reshape(cfg.kv_lora, H, cfg.v_dim)
+        out = jnp.einsum("bshl,lhk->bshk", ctx, wv_b)
+        new_cache = cache
+
+    y = out.reshape(B, S, H * cfg.v_dim) @ params["wo"]
+    return shard(y, "batch", "seq", None), new_cache
+
+
+# =============================================================================
+# Unified entry
+# =============================================================================
+
+def init_attention(key, d_model: int, cfg: AttnCfg, dtype):
+    if cfg.kind == "mla":
+        return init_mla(key, d_model, cfg, dtype)
+    return init_gqa(key, d_model, cfg, dtype)
+
+
+def apply_attention(params, x, cfg: AttnCfg, *, positions,
+                    window: Optional[int] = None, cache=None,
+                    chunk: int = 1024, rope_theta: Optional[float] = None):
+    if cfg.kind == "mla":
+        return apply_mla(params, x, cfg, positions=positions, cache=cache,
+                         chunk=chunk)
+    return apply_gqa(params, x, cfg, positions=positions, window=window,
+                     cache=cache, chunk=chunk, rope_theta=rope_theta)
+
+
+def init_cache(cfg: AttnCfg, batch: int, length: int,
+               window: Optional[int], dtype):
+    """Window layers get a ring cache of size min(window, length)."""
+    L = min(window, length) if window is not None else length
+    if cfg.kind == "mla":
+        return init_mla_cache(cfg, batch, L, dtype)
+    return init_kv_cache(cfg, batch, L, dtype)

@@ -1,0 +1,263 @@
+"""Shared model components: params-with-specs, norms, RoPE, MLPs, softcap.
+
+Convention: every ``init_*`` returns a pytree whose leaves are ``Param``
+tuples ``(value, logical_axes)``; ``split_params`` separates them into a
+value tree (what jit sees) and a logical-spec tree (what the launcher turns
+into NamedShardings via runtime.mesh_rules).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.mesh_rules import shard
+
+
+class Param(NamedTuple):
+    value: jnp.ndarray            # array OR ShapeDtypeStruct (abstract init)
+    axes: Tuple[Optional[str], ...]
+
+
+class LogicalAxes:
+    """Pytree *leaf* carrying a param's logical axis names.
+
+    Deliberately not registered as a pytree node, so spec trees built from it
+    can be jax.tree.map'ed in lockstep with value trees."""
+
+    __slots__ = ("names",)
+
+    def __init__(self, names):
+        self.names = tuple(names)
+
+    def __repr__(self):
+        return f"LogicalAxes{self.names}"
+
+    def __eq__(self, other):
+        return isinstance(other, LogicalAxes) and self.names == other.names
+
+    def __hash__(self):
+        return hash(self.names)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """Param tree -> (values tree, LogicalAxes-leaf spec tree)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    specs = jax.tree.map(lambda p: LogicalAxes(p.axes), tree,
+                         is_leaf=is_param)
+    return values, specs
+
+
+def param_count(values) -> int:
+    return sum(int(np.prod(v.shape)) for v in jax.tree.leaves(values))
+
+
+# Abstract-init mode: initializers return ShapeDtypeStructs instead of
+# allocating — how 314B-param trees are "created" on a CPU host for the
+# dry-run (.lower() only needs shapes).
+_ABSTRACT = False
+
+
+class abstract_init:
+    def __enter__(self):
+        global _ABSTRACT
+        self._prev, _ABSTRACT = _ABSTRACT, True
+        return self
+
+    def __exit__(self, *exc):
+        global _ABSTRACT
+        _ABSTRACT = self._prev
+
+
+def _maybe_abstract(shape, dtype) -> Optional[jax.ShapeDtypeStruct]:
+    if _ABSTRACT:
+        return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+    return None
+
+
+def dense_param(key, shape, axes, dtype, scale: Optional[float] = None) -> Param:
+    """Truncated-normal init with 1/sqrt(fan_in) default scale."""
+    a = _maybe_abstract(shape, dtype)
+    if a is not None:
+        return Param(a, axes)
+    if scale is None:
+        scale = 1.0 / np.sqrt(shape[0])
+    v = scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return Param(v.astype(dtype), axes)
+
+
+def zeros_param(shape, axes, dtype) -> Param:
+    a = _maybe_abstract(shape, dtype)
+    return Param(a if a is not None else jnp.zeros(shape, dtype), axes)
+
+
+def ones_param(shape, axes, dtype) -> Param:
+    a = _maybe_abstract(shape, dtype)
+    return Param(a if a is not None else jnp.ones(shape, dtype), axes)
+
+
+def const_param(value, axes) -> Param:
+    return Param(jnp.asarray(value), axes)
+
+
+def stack_param_trees(trees):
+    """Stack a list of identically-structured Param trees on a new leading
+    "unit" axis (SDS-aware for abstract init)."""
+
+    def stack(*ps):
+        v0 = ps[0].value
+        axes = ("unit",) + tuple(ps[0].axes)
+        if isinstance(v0, jax.ShapeDtypeStruct):
+            return Param(jax.ShapeDtypeStruct((len(ps),) + tuple(v0.shape),
+                                              v0.dtype), axes)
+        return Param(jnp.stack([p.value for p in ps]), axes)
+
+    return jax.tree.map(stack, *trees, is_leaf=is_param)
+
+
+def as_sds(values):
+    """Value tree -> uniform ShapeDtypeStruct tree."""
+    return jax.tree.map(
+        lambda v: v if isinstance(v, jax.ShapeDtypeStruct)
+        else jax.ShapeDtypeStruct(jnp.shape(v), jnp.result_type(v)), values)
+
+
+# ---- normalization ----------------------------------------------------------
+
+def init_norm(key, d, dtype, kind: str):
+    del key
+    if kind == "rms":          # weight stored zero-centered, applied as (1+w)
+        return {"scale": zeros_param((d,), ("d_model",), dtype)}
+    if kind == "layer":
+        return {"scale": ones_param((d,), ("d_model",), dtype),
+                "bias": zeros_param((d,), ("d_model",), dtype)}
+    raise ValueError(kind)
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        y = y * (1.0 + params["scale"].astype(jnp.float32))
+    elif kind == "layer":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) \
+            + params["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(kind)
+    return y.astype(x.dtype)
+
+
+def rms_norm_headwise(x, scale, eps: float = 1e-6):
+    """QK-norm (gemma3): RMS over head_dim with a learned scale."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+# ---- rotary / sinusoidal positions ------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+
+    Pair layout: (x[..., :half], x[..., half:]) rotated jointly — the
+    HF/NeoX convention used by all assigned archs.
+    """
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                       # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (..., s, half)
+    cos = jnp.cos(ang)[..., None, :]                             # (..., s, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """MusicGen-style sinusoidal position embedding; positions (..., s)."""
+    half = d // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---- activations / capping --------------------------------------------------
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def gelu_tanh(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS = {
+    "gelu": gelu_tanh,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+}
+
+
+# ---- MLPs --------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, kind: str):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "wi_gate": dense_param(ks[0], (d_model, d_ff), ("d_model", "d_ff"), dtype),
+            "wi_up": dense_param(ks[1], (d_model, d_ff), ("d_model", "d_ff"), dtype),
+            "wo": dense_param(ks[2], (d_ff, d_model), ("d_ff", "d_model"), dtype),
+        }
+    if kind == "gelu_mlp":
+        return {
+            "wi": dense_param(ks[0], (d_model, d_ff), ("d_model", "d_ff"), dtype),
+            "wo": dense_param(ks[1], (d_ff, d_model), ("d_ff", "d_model"), dtype),
+        }
+    raise ValueError(kind)
+
+
+def apply_mlp(params, x, kind: str, act: str = "silu"):
+    f = ACTIVATIONS[act]
+    if kind == "swiglu":
+        h = f(x @ params["wi_gate"]) * (x @ params["wi_up"])
+    elif kind == "gelu_mlp":
+        h = f(x @ params["wi"])
+    else:
+        raise ValueError(kind)
+    h = shard(h, "batch", "seq", "d_ff")
+    return h @ params["wo"]
+
+
+# ---- embeddings --------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int, dtype):
+    a = _maybe_abstract((vocab, d_model), dtype)
+    if a is not None:
+        return Param(a, ("vocab", "d_model"))
+    v = jax.random.normal(key, (vocab, d_model), jnp.float32).astype(dtype)
+    return Param(v, ("vocab", "d_model"))
+
+
+def take_embed(table, tokens):
+    return jnp.take(table, tokens, axis=0)

@@ -1,0 +1,137 @@
+"""Mixture-of-Experts layer: top-k routing with capacity, EP and TP shardings.
+
+Dispatch is index-based (scatter/gather), not one-hot-einsum: per sequence,
+each token's k experts get a position-in-expert via a cumulative count; tokens
+beyond capacity are dropped (GShard-style).  This keeps the dispatch tensors
+at O(S*k) integers instead of O(S*E*C) floats — the difference between
+compiling grok-1 at 4k seq and OOMing at lower+compile.
+
+Sharding modes (DESIGN §6):
+  "ep": expert dim over the "model" mesh axis (requires E % axis == 0, e.g.
+        jamba's 16e); dispatch/combine become all-to-alls under GSPMD.
+  "tp": d_ff of every expert over "model" (grok's 8e and granite's 40e don't
+        divide the 16-way axis).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoECfg
+from repro.models import common
+from repro.models.common import dense_param
+from repro.runtime.mesh_rules import shard
+
+# (E, d, f) weight layouts.  d_model rides the FSDP ("data") axis in both
+# modes so expert weights are 2-D sharded — without it grok-1's 620 GB of
+# expert weights only shard 16-way and blow HBM (measured 258 GiB/dev).
+AXES_EP = ("experts", "d_model", "d_ff")   # d_ff dedups to None under EP
+AXES_TP = (None, "d_model", "d_ff")
+
+
+def _w_axes(cfg: MoECfg, out: bool) -> Tuple:
+    a = AXES_EP if cfg.mode == "ep" else AXES_TP
+    if out:  # (E, f, d)
+        return (a[0], a[2], a[1])
+    return (a[0], a[1], a[2])
+
+
+def init_moe(key, d_model: int, cfg: MoECfg, dtype, mlp_kind: str):
+    ks = jax.random.split(key, 4)
+    E, F = cfg.num_experts, cfg.d_ff
+    p = {"router": dense_param(ks[0], (d_model, E), ("d_model", None), dtype)}
+    if mlp_kind == "swiglu":
+        p["wi_gate"] = dense_param(ks[1], (E, d_model, F), _w_axes(cfg, False), dtype)
+        p["wi_up"] = dense_param(ks[2], (E, d_model, F), _w_axes(cfg, False), dtype)
+    else:
+        p["wi"] = dense_param(ks[1], (E, d_model, F), _w_axes(cfg, False), dtype)
+    p["wo"] = dense_param(ks[3], (E, F, d_model), _w_axes(cfg, True), dtype)
+    return p
+
+
+def capacity(cfg: MoECfg, seq: int) -> int:
+    c = int(seq * cfg.top_k / cfg.num_experts * cfg.capacity_factor)
+    return max(cfg.top_k, (c + 3) // 4 * 4)
+
+
+def _route_one(x, router_logits, cfg: MoECfg, cap: int):
+    """Routing for one sequence: x (S, d), logits (S, E).
+
+    Returns (expert_idx, slot_idx, weight, keep) each (S, k)."""
+    S, E = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    weight, expert_idx = jax.lax.top_k(probs, cfg.top_k)          # (S, k)
+    weight = weight / jnp.maximum(weight.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each (token, choice) within its expert: flatten in token
+    # order (priority to earlier tokens), count per expert cumulatively.
+    flat_e = expert_idx.reshape(-1)                                # (S*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)            # (S*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - 1                      # inclusive-1
+    slot = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = slot < cap
+    return (expert_idx, slot.reshape(S, cfg.top_k),
+            weight.astype(x.dtype), keep.reshape(S, cfg.top_k), probs)
+
+
+def apply_moe(params, x, cfg: MoECfg, mlp_kind: str, act: str):
+    """x: (B, S, d) -> (out, aux) with aux = {lb_loss, z_loss}."""
+    B, S, d = x.shape
+    E, F, k = cfg.num_experts, cfg.d_ff, cfg.top_k
+    cap = capacity(cfg, S)
+    f = common.ACTIVATIONS[act]
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"])
+
+    def dispatch_one(xb, lb):
+        expert_idx, slot, weight, keep, probs = _route_one(xb, lb, cfg, cap)
+        inp = jnp.zeros((E, cap, d), xb.dtype)
+        for j in range(k):
+            upd = xb * keep[:, j, None].astype(xb.dtype)
+            inp = inp.at[expert_idx[:, j], slot[:, j]].add(upd)
+        return inp, (expert_idx, slot, weight, keep, probs)
+
+    inp, route = jax.vmap(dispatch_one)(x, logits)       # (B, E, C, d)
+    inp = shard(inp, "batch", "experts", None, None)
+
+    if mlp_kind == "swiglu":
+        h = f(jnp.einsum("becd,edf->becf", inp, params["wi_gate"])) \
+            * jnp.einsum("becd,edf->becf", inp, params["wi_up"])
+    else:
+        h = f(jnp.einsum("becd,edf->becf", inp, params["wi"]))
+    h = shard(h, "batch", "experts", None, "d_ff" if cfg.mode == "tp" else None)
+    out_e = jnp.einsum("becf,efd->becd", h, params["wo"])
+    # NOTE: deliberately no sharding constraint on out_e in TP mode — forcing
+    # replication here would all-reduce the big (B,E,C,d) tensor; leaving it
+    # partial lets GSPMD defer the reduction to the (B,S,d) combine output,
+    # an E*C/S-fold smaller collective.
+    if cfg.mode == "ep":
+        out_e = shard(out_e, "batch", "experts", None, None)
+
+    expert_idx, slot, weight, keep, probs = route
+
+    def combine_one(oe, eidx, sl, w, kp):
+        y = jnp.zeros((S, d), oe.dtype)
+        for j in range(k):
+            g = oe[eidx[:, j], sl[:, j]]                 # (S, d)
+            y += g * (w[:, j] * kp[:, j].astype(w.dtype))[:, None]
+        return y
+
+    y = jax.vmap(combine_one)(out_e, expert_idx, slot, weight, keep)
+    y = shard(y, "batch", "seq", None)
+
+    # Aux losses (f32): Switch load-balance + router z-loss.
+    pf = probs.astype(jnp.float32)                        # (B, S, E)
+    me = pf.mean(axis=(0, 1))                             # mean router prob
+    dispatch_frac = jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32) \
+        .mean(axis=(0, 1))                                # top-1 dispatch share
+    lb = E * jnp.sum(me * dispatch_frac)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    z = jnp.mean(jnp.square(lse))
+    aux = {"lb_loss": cfg.lb_loss_weight * lb,
+           "z_loss": cfg.router_z_weight * z,
+           "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return y, aux

@@ -1,0 +1,246 @@
+"""RWKV-6 (Finch) blocks: data-dependent-decay linear attention + channel mix.
+
+Time-mix recurrence (per head, k/v dims = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(w0 + lora_w(x~_t))) data-dependent per channel (the Finch
+novelty vs RWKV-5), and the five token-shift mixes (r,k,v,w,g) produced by a
+shared low-rank MLP.  State is O(1) in sequence length — this is the arch
+that makes ``long_500k`` trivial (DESIGN §5).
+
+Same chunked-scan + checkpoint strategy as mamba.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RwkvCfg
+from repro.models.common import Param, dense_param, zeros_param
+from repro.runtime.mesh_rules import shard
+
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+class RwkvState(NamedTuple):
+    wkv: jnp.ndarray          # (B, H, hd, hd) f32
+    shift_tm: jnp.ndarray     # (B, d) last token seen by time-mix
+    shift_cm: jnp.ndarray     # (B, d) last token seen by channel-mix
+
+
+def init_time_mix(key, d_model: int, cfg: RwkvCfg, dtype):
+    ks = jax.random.split(key, 12)
+    H = d_model // cfg.head_dim
+    hd = cfg.head_dim
+    r = cfg.mix_lora
+    p = {
+        "mu_x": zeros_param((d_model,), (None,), dtype),
+        "mix_w1": dense_param(ks[0], (d_model, 5 * r), ("d_model", None), dtype),
+        "mix_w2": Param(
+            jax.random.normal(ks[1], (5, r, d_model), jnp.float32)
+            .astype(dtype) * 0.02, (None, None, "d_model")),
+        "mu": zeros_param((5, d_model), (None, None), dtype),
+        "w0": Param(jnp.zeros((d_model,), jnp.float32) - 0.6, (None,)),
+        "w_lora1": dense_param(ks[2], (d_model, cfg.decay_lora),
+                               ("d_model", None), dtype),
+        "w_lora2": dense_param(ks[3], (cfg.decay_lora, d_model),
+                               (None, "d_model"), dtype, scale=0.02),
+        "wr": dense_param(ks[4], (d_model, d_model), ("d_model", "rwkv_heads"), dtype),
+        "wk": dense_param(ks[5], (d_model, d_model), ("d_model", "rwkv_heads"), dtype),
+        "wv": dense_param(ks[6], (d_model, d_model), ("d_model", "rwkv_heads"), dtype),
+        "wg": dense_param(ks[7], (d_model, d_model), ("d_model", "rwkv_heads"), dtype),
+        "u": Param(jnp.zeros((H, hd), jnp.float32), (None, None)),
+        "ln_scale": Param(jnp.ones((d_model,), jnp.float32), (None,)),
+        "ln_bias": Param(jnp.zeros((d_model,), jnp.float32), (None,)),
+        "wo": dense_param(ks[8], (d_model, d_model), ("rwkv_heads", "d_model"), dtype),
+    }
+    return p
+
+
+def init_channel_mix(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": zeros_param((d_model,), (None,), dtype),
+        "mu_r": zeros_param((d_model,), (None,), dtype),
+        "wk": dense_param(ks[0], (d_model, d_ff), ("d_model", "d_ff"), dtype),
+        "wv": dense_param(ks[1], (d_ff, d_model), ("d_ff", "d_model"), dtype),
+        "wr": dense_param(ks[2], (d_model, d_model), ("d_model", None), dtype),
+    }
+
+
+def _token_shift(x, prev):
+    """Shift right by one: position t sees token t-1.  prev: (B, d) carry."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _group_norm(x, scale, bias, H: int, eps: float = 64e-5):
+    """Per-head LayerNorm over head_dim (official ln_x)."""
+    B, S, d = x.shape
+    xh = x.reshape(B, S, H, d // H).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(B, S, d) * scale + bias).astype(x.dtype)
+
+
+def _wkv_scan(r, k, v, w, u, h0, chunk: int):
+    """Faithful per-token recurrence (the oracle; O(S) sequential steps).
+
+    r,k,v,w: (B, S, H, hd); u: (H, hd); h0: (B, H, hd, hd) f32."""
+    B, S, H, hd = r.shape
+
+    def step(h, xs):
+        r_t, k_t, v_t, w_t = (t.astype(jnp.float32) for t in xs)  # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]                # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, h + u[..., None] * kv)
+        h = w_t[..., :, None] * h + kv
+        return h, y
+
+    @jax.checkpoint
+    def chunk_fn(h, xs):
+        return jax.lax.scan(step, h, xs)
+
+    n = S // chunk
+    assert S % chunk == 0, (S, chunk)
+
+    def to_chunks(t):
+        return jnp.moveaxis(t, 1, 0).reshape(n, chunk, B, H, hd)
+
+    h, ys = jax.lax.scan(chunk_fn, h0, tuple(map(to_chunks, (r, k, v, w))))
+    return jnp.moveaxis(ys.reshape(S, B, H, hd), 0, 1), h
+
+
+def _wkv_chunked(r, k, v, w, u, h0, chunk: int):
+    """Chunked-parallel wkv (flash-linear-attention / GLA form).
+
+    Within a chunk of C tokens the recurrence unrolls to
+        y_t = (r_t ⊙ e^{cum_{t-1}}) S_0
+            + Σ_{i<t} (r_t · (e^{cum_{t-1}-cum_i} ⊙ k_i)) v_i
+            + (r_t · (u ⊙ k_t)) v_t
+    with cum = cumsum(log w) — all matmul-shaped, so HBM traffic per token
+    drops from O(hd²) (state read+write per step) to O(C·hd)+O(hd²/C)
+    amortized.  The decay-difference tensor is materialized per chunk in
+    log space: every exponent is ≤ 0 (w ∈ (0,1), i < t), so no overflow.
+    §Perf hillclimb A: 286 s → see EXPERIMENTS.md.
+    """
+    B, S, H, hd = r.shape
+    n = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    C = chunk
+    tri = (jnp.arange(C)[:, None] > jnp.arange(C)[None, :])   # t > i strict
+
+    def chunk_fn(S0, xs):
+        rc, kc, vc, wc = (t.astype(jnp.float32) for t in xs)  # (B,C,H,K)
+        logw = jnp.log(wc)
+        cum = jnp.cumsum(logw, axis=1)
+        cum_prev = cum - logw                                  # cum[t-1]
+        # cross-chunk: decayed read of the carried state
+        y_cross = jnp.einsum("bchk,bhkv->bchv", rc * jnp.exp(cum_prev), S0)
+        # intra-chunk: strict-lower-triangular decay products (<= 1).
+        # (§Perf iteration 2 tried bf16 for the (B,C,C,H,K) tensor: refuted —
+        # no traffic change (the 5-D intermediate comes from the 3-operand
+        # einsum's contraction order, not Dm storage) and 10% output error.)
+        diff = cum_prev[:, :, None] - cum[:, None]             # (B,t,i,H,K)
+        Dm = jnp.where(tri[None, :, :, None, None], jnp.exp(diff), 0.0)
+        Wti = jnp.einsum("bthk,btihk,bihk->bthi", rc, Dm, kc)
+        y_intra = jnp.einsum("bthi,bihv->bthv", Wti, vc)
+        bonus = jnp.einsum("bthk,hk,bthk->bth", rc, u, kc)
+        y = y_cross + y_intra + bonus[..., None] * vc
+        # state to next chunk
+        cum_last = cum[:, -1]                                  # (B,H,K)
+        E = jnp.exp(cum_last[:, None] - cum)                   # <= 1
+        S_new = jnp.exp(cum_last)[..., None] * S0 \
+            + jnp.einsum("bchk,bchv->bhkv", kc * E, vc)
+        S_new = shard(S_new, "batch", "rwkv_heads", None, None)
+        return S_new, y
+
+    chunk_fn = jax.checkpoint(chunk_fn)
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(B, n, C, H, hd), 1, 0)
+
+    h0 = shard(h0, "batch", "rwkv_heads", None, None)
+    h, ys = jax.lax.scan(chunk_fn, h0, tuple(map(to_chunks, (r, k, v, w))))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd)
+    return y, h
+
+
+def _mixed_inputs(p, x, shifted):
+    """The five data-dependent token-shift mixes."""
+    B, S, d = x.shape
+    xx = shifted - x
+    base = x + xx * p["mu_x"]
+    lora = jnp.tanh(base @ p["mix_w1"])                     # (B,S,5r)
+    r5 = lora.reshape(B, S, 5, -1)
+    deltas = jnp.einsum("bsnr,nrd->bsnd", r5, p["mix_w2"])  # (B,S,5,d)
+    outs = []
+    for i in range(5):
+        mi = p["mu"][i] + deltas[:, :, i, :]
+        outs.append(x + xx * mi)
+    return outs  # order: w, k, v, r, g
+
+
+def apply_time_mix(p, x, cfg: RwkvCfg, *, state: Optional[RwkvState] = None):
+    B, S, d = x.shape
+    H, hd = d // cfg.head_dim, cfg.head_dim
+    prev = state.shift_tm if state is not None \
+        else jnp.zeros((B, d), x.dtype)
+    shifted = _token_shift(x, prev)
+    xw, xk, xv, xr, xg = _mixed_inputs(p, x, shifted)
+
+    r = (xr @ p["wr"]).reshape(B, S, H, hd)
+    k = (xk @ p["wk"]).reshape(B, S, H, hd)
+    v = (xv @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    w_log = p["w0"] + jnp.tanh(xw @ p["w_lora1"]) @ p["w_lora2"]
+    w = jnp.exp(-jnp.exp(w_log.astype(jnp.float32))).reshape(B, S, H, hd)
+
+    h0 = state.wkv if state is not None \
+        else jnp.zeros((B, H, hd, hd), jnp.float32)
+    if S == 1 and state is not None:
+        r1, k1, v1, w1 = (t[:, 0].astype(jnp.float32) for t in (r, k, v, w))
+        kv = k1[..., :, None] * v1[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r1,
+                       h0 + p["u"][..., None] * kv)[:, None]
+        h = w1[..., :, None] * h0 + kv
+    else:
+        chunk = min(cfg.chunk, S)
+        impl = _wkv_chunked if cfg.impl == "chunked" else _wkv_scan
+        y, h = impl(r, k, v, w, p["u"], h0, chunk)
+
+    y = _group_norm(y.reshape(B, S, d).astype(x.dtype),
+                    p["ln_scale"], p["ln_bias"], H)
+    out = (y * g) @ p["wo"]
+    out = shard(out, "batch", "seq", None)
+    new_state = None
+    if state is not None:
+        new_state = state._replace(wkv=h, shift_tm=x[:, -1, :])
+    return out, new_state
+
+
+def apply_channel_mix(p, x, *, state: Optional[RwkvState] = None):
+    B, S, d = x.shape
+    prev = state.shift_cm if state is not None \
+        else jnp.zeros((B, d), x.dtype)
+    shifted = _token_shift(x, prev)
+    xx = shifted - x
+    xk = x + xx * p["mu_k"]
+    xr = x + xx * p["mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    kk = shard(kk, "batch", "seq", "d_ff")
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (kk @ p["wv"])
+    new_state = state._replace(shift_cm=x[:, -1, :]) if state is not None \
+        else None
+    return shard(out, "batch", "seq", None), new_state
+
+
+def init_state(cfg: RwkvCfg, d_model: int, batch: int, dtype) -> RwkvState:
+    H, hd = d_model // cfg.head_dim, cfg.head_dim
+    return RwkvState(
+        wkv=jnp.zeros((batch, H, hd, hd), jnp.float32),
+        shift_tm=jnp.zeros((batch, d_model), dtype),
+        shift_cm=jnp.zeros((batch, d_model), dtype),
+    )

@@ -1,0 +1,382 @@
+"""LM model factory: scanned pattern-units covering all 10 assigned archs.
+
+A model is ``units`` repetitions of ``cfg.pattern`` (+ a tail for
+non-divisible layer counts, e.g. gemma3's 34 = 5x[5 local + 1 global] + 4).
+Unit parameters are stacked on a leading axis and iterated with ``lax.scan``,
+keeping HLO size O(pattern) instead of O(layers) — what makes compiling
+62-layer models x 68 dry-run cells feasible (DESIGN §9).
+
+Layer kinds: attn (GQA/MLA, window, softcap, qk-norm), mamba, rwkv; FFN
+kinds: dense (swiglu/gelu), moe, rwkv channel-mix.  Multimodal stubs: a
+projector consumes precomputed patch/frame embeddings (``frontend_dim``);
+musicgen embeds/predicts ``num_codebooks`` parallel streams.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerCfg
+from repro.models import attention, common, mamba as mamba_mod, moe as moe_mod, rwkv as rwkv_mod
+from repro.models.common import Param, apply_norm, dense_param, init_norm, softcap
+from repro.runtime.mesh_rules import shard
+
+AUX_KEYS = ("lb_loss", "z_loss")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOutputs:
+    logits: jnp.ndarray
+    aux: Dict[str, jnp.ndarray]
+
+
+class LMModel:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg.validate()
+
+    # ------------------------------------------------------------------ init
+
+    def _init_layer(self, key, lcfg: LayerCfg):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 6)
+        p: Dict[str, Any] = {"pre_norm": init_norm(ks[0], cfg.d_model, dtype,
+                                                   cfg.norm)}
+        if lcfg.kind == "attn":
+            p["mixer"] = attention.init_attention(ks[1], cfg.d_model,
+                                                  cfg.attn, dtype)
+        elif lcfg.kind == "mamba":
+            p["mixer"] = mamba_mod.init_mamba(ks[1], cfg.d_model, cfg.mamba,
+                                              dtype)
+        elif lcfg.kind == "rwkv":
+            p["mixer"] = rwkv_mod.init_time_mix(ks[1], cfg.d_model, cfg.rwkv,
+                                                dtype)
+        else:
+            raise ValueError(lcfg.kind)
+        if cfg.post_norms:
+            p["post_mixer_norm"] = init_norm(ks[2], cfg.d_model, dtype,
+                                             cfg.norm)
+
+        p["ffn_norm"] = init_norm(ks[3], cfg.d_model, dtype, cfg.norm)
+        if lcfg.ffn == "dense":
+            p["ffn"] = common.init_mlp(ks[4], cfg.d_model, cfg.d_ff, dtype,
+                                       cfg.mlp)
+        elif lcfg.ffn == "moe":
+            p["ffn"] = moe_mod.init_moe(ks[4], cfg.d_model, cfg.moe, dtype,
+                                        cfg.mlp)
+        elif lcfg.ffn == "rwkv":
+            p["ffn"] = rwkv_mod.init_channel_mix(ks[4], cfg.d_model, cfg.d_ff,
+                                                 dtype)
+        else:
+            raise ValueError(lcfg.ffn)
+        if cfg.post_norms:
+            p["post_ffn_norm"] = init_norm(ks[5], cfg.d_model, dtype, cfg.norm)
+        return p
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        keys = jax.random.split(key, 8)
+        params: Dict[str, Any] = {}
+
+        pv = cfg.padded_vocab
+        if cfg.num_codebooks > 1:
+            embeds = [common.init_embed(jax.random.fold_in(keys[0], i), pv,
+                                        cfg.d_model, dtype)
+                      for i in range(cfg.num_codebooks)]
+            params["embed"] = common.stack_param_trees(embeds)
+            params["embed"] = Param(params["embed"].value,
+                                    (None, "vocab", "d_model"))
+        else:
+            params["embed"] = common.init_embed(keys[0], pv, cfg.d_model,
+                                                dtype)
+        if cfg.frontend_dim:
+            params["frontend_proj"] = dense_param(
+                keys[1], (cfg.frontend_dim, cfg.d_model), (None, "d_model"),
+                dtype)
+        if not cfg.tie_embeddings:
+            if cfg.num_codebooks > 1:
+                params["lm_head"] = dense_param(
+                    keys[2], (cfg.num_codebooks, cfg.d_model, pv),
+                    (None, "d_model", "vocab"), dtype)
+            else:
+                params["lm_head"] = dense_param(
+                    keys[2], (cfg.d_model, pv), ("d_model", "vocab"), dtype)
+        params["final_norm"] = init_norm(keys[3], cfg.d_model, dtype, cfg.norm)
+
+        # Stacked unit params: one init per unit, stacked on a "unit" axis
+        # (SDS-aware, so abstract init never allocates).
+        unit_params = []
+        for pos, lcfg in enumerate(cfg.pattern):
+            pos_key = jax.random.fold_in(keys[4], pos)
+            unit_keys = jax.random.split(pos_key, cfg.units)
+            per_unit = [self._init_layer(unit_keys[u], lcfg)
+                        for u in range(cfg.units)]
+            unit_params.append(common.stack_param_trees(per_unit))
+        params["units"] = tuple(unit_params)
+
+        tail_params = []
+        for pos, lcfg in enumerate(cfg.tail):
+            tail_params.append(self._init_layer(
+                jax.random.fold_in(keys[5], pos), lcfg))
+        params["tail"] = tuple(tail_params)
+        return params
+
+    # ------------------------------------------------------------- embedding
+
+    def embed_inputs(self, params, tokens, frontend_embeds=None):
+        """tokens: (B, S) or (B, S, K); frontend_embeds: (B, T, F) or None.
+
+        Returns (x, positions).  Frontend embeddings (VLM patches / audio
+        frames) are projected and prepended — the modality stub per brief.
+        """
+        cfg = self.cfg
+        if cfg.num_codebooks > 1:
+            parts = [common.take_embed(params["embed"][i], tokens[..., i])
+                     for i in range(cfg.num_codebooks)]
+            x = sum(parts)
+        else:
+            x = common.take_embed(params["embed"], tokens)
+        if cfg.embed_scale:
+            x = (x.astype(jnp.float32) * jnp.sqrt(float(cfg.d_model))
+                 ).astype(x.dtype)
+        if frontend_embeds is not None:
+            proj = frontend_embeds.astype(x.dtype) @ params["frontend_proj"]
+            x = jnp.concatenate([proj, x], axis=1)
+        x = x.astype(jnp.dtype(cfg.compute_dtype))
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        if cfg.pos == "sinusoidal":
+            pe = common.sinusoidal_embedding(positions, cfg.d_model)
+            x = x + pe.astype(x.dtype)
+        return x, positions
+
+    # ----------------------------------------------------------- layer apply
+
+    # f32-sensitive leaves never downcast (decay/SSM dynamics, groupnorm)
+    _KEEP_F32 = frozenset({"a_log", "d", "w0", "u", "ln_scale", "ln_bias",
+                           "dt_bias"})
+
+    def _cast_layer_params(self, lp):
+        """Mixed-precision policy: weights cast to compute_dtype at use."""
+        compute = jnp.dtype(self.cfg.compute_dtype)
+
+        def cast(path, w):
+            name = str(getattr(path[-1], "key", getattr(path[-1], "name", "")))
+            if name in self._KEEP_F32 or not jnp.issubdtype(w.dtype,
+                                                            jnp.floating):
+                return w
+            return w.astype(compute)
+
+        return jax.tree_util.tree_map_with_path(cast, lp)
+
+    def _apply_layer(self, lcfg: LayerCfg, lp, x, positions, cache=None):
+        cfg = self.cfg
+        lp = self._cast_layer_params(lp)
+        aux = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+        h = apply_norm(lp["pre_norm"], x, cfg.norm)
+        if lcfg.kind == "attn":
+            out, new_mixer_cache = attention.apply_attention(
+                lp["mixer"], h, cfg.attn, positions=positions,
+                window=lcfg.window, rope_theta=lcfg.rope_theta,
+                cache=None if cache is None else cache["mixer"])
+        elif lcfg.kind == "mamba":
+            out, new_mixer_cache = mamba_mod.apply_mamba(
+                lp["mixer"], h, cfg.mamba,
+                state=None if cache is None else cache["mixer"])
+        elif lcfg.kind == "rwkv":
+            out, new_mixer_cache = rwkv_mod.apply_time_mix(
+                lp["mixer"], h, cfg.rwkv,
+                state=None if cache is None else cache["mixer"])
+        else:
+            raise ValueError(lcfg.kind)
+        if cfg.post_norms:
+            out = apply_norm(lp["post_mixer_norm"], out, cfg.norm)
+        x = x + out.astype(x.dtype)
+
+        h = apply_norm(lp["ffn_norm"], x, cfg.norm)
+        new_ffn_cache = None
+        if lcfg.ffn == "dense":
+            out = common.apply_mlp(lp["ffn"], h, cfg.mlp, cfg.act)
+        elif lcfg.ffn == "moe":
+            out, moe_aux = moe_mod.apply_moe(lp["ffn"], h, cfg.moe, cfg.mlp,
+                                             cfg.act)
+            aux = {k: aux[k] + moe_aux.get(k, 0.0) for k in AUX_KEYS}
+        elif lcfg.ffn == "rwkv":
+            out, new_ffn_cache = rwkv_mod.apply_channel_mix(
+                lp["ffn"], h,
+                state=None if cache is None else cache["mixer"])
+            # channel-mix shift state rides on the same RwkvState
+            if new_ffn_cache is not None and new_mixer_cache is not None:
+                new_mixer_cache = new_mixer_cache._replace(
+                    shift_cm=new_ffn_cache.shift_cm)
+        else:
+            raise ValueError(lcfg.ffn)
+        if cfg.post_norms:
+            out = apply_norm(lp["post_ffn_norm"], out, cfg.norm)
+        x = x + out.astype(x.dtype)
+        x = shard(x, "batch", "seq", "residual")
+        # (§Perf B3, refuted: a cotangent-dtype cast here is a no-op — JAX
+        # cotangents already match primal dtypes, so bf16 residuals get bf16
+        # gradients by construction.)
+
+        new_cache = None if cache is None else {"mixer": new_mixer_cache}
+        return x, new_cache, aux
+
+    # ---------------------------------------------------------------- forward
+
+    def forward(self, params, tokens, frontend_embeds=None) -> ModelOutputs:
+        cfg = self.cfg
+        x, positions = self.embed_inputs(params, tokens, frontend_embeds)
+        aux = {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+        def apply_one(lcfg, lp, x, positions):
+            x, _, a = self._apply_layer(lcfg, lp, x, positions)
+            return x, a
+
+        if cfg.remat == "layer":
+            # per-layer remat: heavier recompute, smallest live set (jamba's
+            # mamba internals don't fit at unit granularity)
+            apply_one = jax.checkpoint(apply_one, static_argnums=(0,))
+
+        def unit_body(carry, unit_lp):
+            x, aux = carry
+            for pos, lcfg in enumerate(cfg.pattern):
+                x, a = apply_one(lcfg, unit_lp[pos], x, positions)
+                aux = {k: aux[k] + a[k] for k in AUX_KEYS}
+            return (x, aux), None
+
+        if cfg.remat == "unit":
+            unit_body = jax.checkpoint(unit_body)
+        (x, aux), _ = jax.lax.scan(unit_body, (x, aux), params["units"])
+
+        for pos, lcfg in enumerate(cfg.tail):
+            x, _, a = self._apply_layer(lcfg, params["tail"][pos], x,
+                                        positions)
+            aux = {k: aux[k] + a[k] for k in AUX_KEYS}
+
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        logits = self._head(params, x)
+        return ModelOutputs(logits=logits, aux=aux)
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        if cfg.num_codebooks > 1:
+            if cfg.tie_embeddings:
+                logits = jnp.einsum("bsd,kvd->bskv", x, params["embed"])
+            else:
+                logits = jnp.einsum("bsd,kdv->bskv", x, params["lm_head"])
+        else:
+            if cfg.tie_embeddings:
+                logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+            else:
+                logits = x @ params["lm_head"]
+        logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        if cfg.padded_vocab != cfg.vocab:
+            # mask padded-vocab logits (Megatron-style): never sampled,
+            # zero mass in the CE denominator.
+            ids = jnp.arange(cfg.padded_vocab)
+            logits = jnp.where(ids >= cfg.vocab, -1e9, logits)
+        return logits
+
+    # ------------------------------------------------------------------ loss
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """batch: tokens (B,S[,K]), labels (B,S[,K]) with -100 = ignore,
+        optional frontend_embeds.  Standard next-token CE (labels already
+        shifted by the data pipeline)."""
+        cfg = self.cfg
+        outs = self.forward(params, batch["tokens"],
+                            batch.get("frontend_embeds"))
+        logits = outs.logits
+        labels = batch["labels"]
+        if cfg.frontend_dim and logits.shape[1] != labels.shape[1]:
+            logits = logits[:, -labels.shape[1]:]     # drop image prefix
+        valid = labels >= 0
+        safe = jnp.where(valid, labels, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        nll = jnp.where(valid, nll, 0.0)
+        denom = jnp.maximum(valid.sum(), 1)
+        ce = nll.sum() / denom
+        total = ce + sum(outs.aux[k] for k in AUX_KEYS)
+        metrics = {"ce": ce, **outs.aux,
+                   "tokens": denom.astype(jnp.float32)}
+        return total, metrics
+
+    # ---------------------------------------------------------------- decode
+
+    def _init_layer_cache(self, lcfg: LayerCfg, batch: int, cache_len: int):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        if lcfg.kind == "attn":
+            return {"mixer": attention.init_cache(cfg.attn, batch, cache_len,
+                                                  lcfg.window, dtype)}
+        if lcfg.kind == "mamba":
+            return {"mixer": mamba_mod.init_state(cfg.mamba, batch, dtype)}
+        if lcfg.kind == "rwkv":
+            return {"mixer": rwkv_mod.init_state(cfg.rwkv, cfg.d_model, batch,
+                                                 dtype)}
+        raise ValueError(lcfg.kind)
+
+    def init_caches(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        unit_caches = []
+        for pos, lcfg in enumerate(cfg.pattern):
+            one = self._init_layer_cache(lcfg, batch, cache_len)
+            stacked = jax.tree.map(
+                lambda v: jnp.broadcast_to(v[None], (cfg.units,) + v.shape),
+                one)
+            unit_caches.append(stacked)
+        tail_caches = tuple(self._init_layer_cache(l, batch, cache_len)
+                            for l in cfg.tail)
+        return {"units": tuple(unit_caches), "tail": tail_caches}
+
+    def decode_step(self, params, caches, tokens, pos):
+        """One decode step.  tokens: (B, 1[, K]); pos: (B, 1) int32 absolute.
+
+        Returns (logits (B, 1[, K], V), new_caches)."""
+        cfg = self.cfg
+        if cfg.num_codebooks > 1:
+            parts = [common.take_embed(params["embed"][i], tokens[..., i])
+                     for i in range(cfg.num_codebooks)]
+            x = sum(parts)
+        else:
+            x = common.take_embed(params["embed"], tokens)
+        if cfg.embed_scale:
+            x = (x.astype(jnp.float32) * jnp.sqrt(float(cfg.d_model))
+                 ).astype(x.dtype)
+        x = x.astype(jnp.dtype(cfg.compute_dtype))
+        if cfg.pos == "sinusoidal":
+            pe = common.sinusoidal_embedding(pos, cfg.d_model)
+            x = x + pe.astype(x.dtype)
+
+        def unit_body(x, xs):
+            unit_lp, unit_cache = xs
+            new_unit_cache = []
+            for p, lcfg in enumerate(cfg.pattern):
+                x, nc, _ = self._apply_layer(lcfg, unit_lp[p], x, pos,
+                                             cache=unit_cache[p])
+                new_unit_cache.append(nc)
+            return x, tuple(new_unit_cache)
+
+        x, new_units = jax.lax.scan(unit_body, x,
+                                    (params["units"], caches["units"]))
+        new_tail = []
+        for p, lcfg in enumerate(cfg.tail):
+            x, nc, _ = self._apply_layer(lcfg, params["tail"][p], x, pos,
+                                         cache=caches["tail"][p])
+            new_tail.append(nc)
+
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        logits = self._head(params, x)
+        return logits, {"units": new_units, "tail": tuple(new_tail)}
+
+
+def build(cfg: ArchConfig) -> LMModel:
+    return LMModel(cfg)

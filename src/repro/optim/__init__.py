@@ -1,0 +1,8 @@
+"""Optimizers: AdamW (dtype policies, sharded state), schedules, compression."""
+
+from repro.optim.adamw import AdamW, AdamWState, global_norm
+from repro.optim.compression import GradCompression
+from repro.optim.schedule import WarmupCosine
+
+__all__ = ["AdamW", "AdamWState", "GradCompression", "WarmupCosine",
+           "global_norm"]

@@ -1,0 +1,99 @@
+"""AdamW with dtype policies and global-norm clipping.
+
+Dtype policy (per ArchConfig):
+  * ``moment_dtype="bfloat16"`` halves optimizer state — the policy that lets
+    grok-1 train within v5e HBM (DESIGN §6).  Moments are stored in the low
+    dtype but the update math runs in f32.
+  * Moments inherit each parameter's sharding (the launcher applies the param
+    PartitionSpec to the whole opt-state tree), i.e. ZeRO-style 2-D sharded
+    optimizer state for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.schedule import WarmupCosine
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+class _Upd(NamedTuple):
+    p: Any
+    mu: Any
+    nu: Any
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    schedule: Callable = WarmupCosine()
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: str = "float32"
+
+    def init(self, params) -> AdamWState:
+        dt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def abstract_state(self, params_sds) -> AdamWState:
+        dt = jnp.dtype(self.moment_dtype)
+        z = lambda p: jax.ShapeDtypeStruct(p.shape, dt)  # noqa: E731
+        return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                          mu=jax.tree.map(z, params_sds),
+                          nu=jax.tree.map(z, params_sds))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = self.schedule(step)
+
+        gnorm = global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        else:
+            scale = 1.0
+
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        dt = jnp.dtype(self.moment_dtype)
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32) * scale
+            mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g
+            nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g)
+            mhat = mu32 / c1
+            vhat = nu32 / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            # decoupled weight decay on >=2D params only (skip norms/biases)
+            if p.ndim >= 2:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return _Upd(new_p.astype(p.dtype), mu32.astype(dt), nu32.astype(dt))
+
+        is_upd = lambda t: isinstance(t, _Upd)  # noqa: E731
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_params = jax.tree.map(lambda t: t.p, out, is_leaf=is_upd)
+        new_mu = jax.tree.map(lambda t: t.mu, out, is_leaf=is_upd)
+        new_nu = jax.tree.map(lambda t: t.nu, out, is_leaf=is_upd)
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, AdamWState(step, new_mu, new_nu), metrics

@@ -1,0 +1,24 @@
+"""LR schedules: linear warmup + cosine decay to a floor."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmupCosine:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    floor_ratio: float = 0.1
+
+    def __call__(self, step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = self.peak_lr * step / max(self.warmup_steps, 1)
+        prog = jnp.clip((step - self.warmup_steps)
+                        / max(self.total_steps - self.warmup_steps, 1), 0, 1)
+        cos = self.peak_lr * (self.floor_ratio + (1 - self.floor_ratio)
+                              * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < self.warmup_steps, warm, cos)

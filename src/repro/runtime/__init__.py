@@ -1,0 +1,1 @@
+"""Distributed runtime: mesh rules, fault tolerance, pipeline parallelism."""

@@ -1,0 +1,131 @@
+"""Logical-axis sharding rules: one table maps model-space axis names to mesh
+axes, so every arch/shape cell shares the same annotation code.
+
+Logical axes:
+  batch     — global batch               -> ("pod", "data")  [all shapes]
+  seq       — sequence (activations)     -> None (kept local)
+  cache_seq — KV-cache sequence          -> None; ("pod","data") for long_500k
+              (sequence-parallel cache, batch=1)
+  heads     — attention query heads      -> "model"
+  kv_heads  — attention KV heads         -> "model"
+  d_model   — embedding dim (params)     -> "data" (FSDP / ZeRO-3 axis)
+  d_ff      — MLP hidden (params)        -> "model" (TP)
+  vocab     — vocabulary                 -> "model"
+  experts   — MoE expert dim             -> "model" in EP mode, else None
+  unit      — scanned layer-stack dim    -> None
+  none      — explicitly unsharded
+
+The FSDP axis assignment ("d_model" -> "data") gives every large matrix a
+2-D (data x model) sharding, which is what lets grok-1 (314B params) fit v5e
+HBM; see DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    table: dict
+
+    def mesh_axes(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None or logical == "none":
+            return None
+        if logical not in self.table:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        return self.table[logical]
+
+    def pspec(self, logical_axes: Tuple[Optional[str], ...]) -> P:
+        used = set()
+        out = []
+        for name in logical_axes:
+            axes = self.mesh_axes(name)
+            # A mesh axis may appear at most once in a PartitionSpec; later
+            # occurrences degrade to replicated (e.g. d_model x d_ff when both
+            # map somewhere already used).
+            if axes is None:
+                out.append(None)
+                continue
+            tup = (axes,) if isinstance(axes, str) else tuple(axes)
+            tup = tuple(a for a in tup if a not in used)
+            used.update(tup)
+            if not tup:
+                out.append(None)
+            elif len(tup) == 1:
+                out.append(tup[0])
+            else:
+                out.append(tup)
+        return P(*out)
+
+
+def default_rules(multi_pod: bool, *, seq_parallel_cache: bool = False,
+                  expert_parallel: bool = False,
+                  shard_residual: bool = True,
+                  fsdp_over_pod: bool = False) -> AxisRules:
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    fsdp_axes = ("pod", "data") if (multi_pod and fsdp_over_pod) else "data"
+    return AxisRules(table={
+        "batch": batch_axes,
+        "seq": None,
+        "cache_seq": batch_axes if seq_parallel_cache else None,
+        "heads": "model",
+        "kv_heads": "model",
+        "d_model": fsdp_axes,
+        "d_ff": "model",
+        "vocab": "model",
+        "experts": "model" if expert_parallel else None,
+        "unit": None,
+        "mamba_inner": "model",
+        "rwkv_heads": "model",
+        # Megatron-style activation sharding at layer boundaries: d_model of
+        # the residual stream over "model" — trades per-layer all-gathers for
+        # the activation memory that lets 314B-scale remat fit (DESIGN §6).
+        "residual": "model" if shard_residual else None,
+    })
+
+
+# ---- thread-local rules context (used by model code) -----------------------
+
+_ctx = threading.local()
+
+
+def set_rules(rules: Optional[AxisRules]):
+    _ctx.rules = rules
+
+
+def get_rules() -> Optional[AxisRules]:
+    return getattr(_ctx, "rules", None)
+
+
+class use_rules:
+    def __init__(self, rules: Optional[AxisRules]):
+        self.rules = rules
+
+    def __enter__(self):
+        self.prev = get_rules()
+        set_rules(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        set_rules(self.prev)
+
+
+def shard(x, *logical_axes: Optional[str]):
+    """with_sharding_constraint by logical axis names; no-op without rules."""
+    rules = get_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.pspec(tuple(logical_axes)))
+
+
+def named_sharding(mesh: Mesh, rules: AxisRules,
+                   logical_axes: Tuple[Optional[str], ...]) -> NamedSharding:
+    return NamedSharding(mesh, rules.pspec(logical_axes))

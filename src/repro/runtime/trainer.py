@@ -1,0 +1,87 @@
+"""Train/serve step builders: the jit-able functions every launcher and the
+dry-run lower.
+
+``make_train_step`` builds:
+    (params, opt_state, comp_error, batch) -> (params, opt_state, comp_error, metrics)
+with optional gradient accumulation (scan over microbatches, f32 accumulators)
+and optional gradient compression with error feedback.
+
+``make_prefill_step`` / ``make_decode_step`` build the serving functions the
+decode shapes lower.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import LMModel
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim.compression import GradCompression
+
+
+def make_train_step(model: LMModel, optimizer: AdamW,
+                    accum: int = 1,
+                    compression: Optional[GradCompression] = None
+                    ) -> Callable:
+    comp = compression or GradCompression("none")
+    acc_dt = jnp.dtype(model.cfg.accum_dtype)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(params, opt_state: AdamWState, comp_error, batch):
+        if accum == 1:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % accum == 0, (b, accum)
+                return x.reshape(accum, b // accum, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+            def acc_body(carry, mb):
+                g_acc, _ = carry
+                (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + (b / accum).astype(a.dtype), g_acc, g)
+                return (g_acc, m), None
+
+            zero_m = {"ce": jnp.zeros((), jnp.float32),
+                      "lb_loss": jnp.zeros((), jnp.float32),
+                      "z_loss": jnp.zeros((), jnp.float32),
+                      "tokens": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(
+                acc_body, (zero_g, zero_m), micro)
+
+        grads, comp_error = comp.compress(grads, comp_error)
+        params, opt_state, opt_metrics = optimizer.update(
+            grads, opt_state, params)
+        metrics = {**metrics, **opt_metrics}
+        return params, opt_state, comp_error, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: LMModel) -> Callable:
+    def prefill(params, batch) -> jnp.ndarray:
+        outs = model.forward(params, batch["tokens"],
+                             batch.get("frontend_embeds"))
+        return outs.logits[:, -1]
+
+    return prefill
+
+
+def make_decode_step(model: LMModel) -> Callable:
+    def decode(params, caches, tokens, pos):
+        logits, caches = model.decode_step(params, caches, tokens, pos)
+        return logits, caches
+
+    return decode

@@ -1,0 +1,9 @@
+"""Common prologue for distributed test scripts: set fake device count
+BEFORE importing jax.  Device count comes from XLA_FORCE_DEVICES (default 8).
+"""
+
+import os
+
+n = os.environ.get("XLA_FORCE_DEVICES", "8")
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + f" --xla_force_host_platform_device_count={n}")

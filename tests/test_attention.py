@@ -1,0 +1,120 @@
+"""Attention variants: chunked==naive, decode==prefill, windows, MLA."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttnCfg
+from repro.models import attention as A
+from repro.models import common
+
+
+def naive_attention(q, k, v, window, cap, scale):
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = (q * scale).reshape(B, S, KV, G, D)
+    s = jnp.einsum("bskgd,btkd->bskgt", qg, k).astype(jnp.float32)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    ok = ki <= qi
+    if window:
+        ok &= (qi - ki) < window
+    s = s + jnp.where(ok, 0.0, A.NEG_INF)[None, :, None, None, :]
+    p = jax.nn.softmax(s, -1)
+    out = jnp.einsum("bskgt,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D)
+
+
+@pytest.fixture(scope="module")
+def qkv():
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, D = 2, 64, 4, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    return q, k, v, pos
+
+
+@pytest.mark.parametrize("window,cap", [(None, None), (16, None),
+                                        (None, 50.0), (8, 30.0)])
+def test_chunked_equals_naive(qkv, window, cap):
+    q, k, v, pos = qkv
+    got = A.chunked_attention(q, k, v, pos, pos, window=window, cap=cap,
+                              scale=0.25, chunk=16)
+    want = naive_attention(q, k, v, window, cap, 0.25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def _params(cfg, d_model=32, seed=1):
+    p = A.init_attention(jax.random.PRNGKey(seed), d_model, cfg, jnp.float32)
+    return jax.tree.map(lambda x: x.value, p, is_leaf=common.is_param)
+
+
+@pytest.mark.parametrize("window", [None, 8])
+def test_gqa_decode_equals_prefill(window):
+    B, S = 2, 64
+    cfg = AttnCfg(n_heads=4, n_kv_heads=2, head_dim=16, qk_norm=True,
+                  softcap=20.0)
+    p = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, 32))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    out_full, _ = A.apply_gqa(p, x, cfg, positions=pos, window=window,
+                              chunk=16)
+    cache = A.init_cache(cfg, B, S, window, jnp.float32)
+    if window is not None:
+        assert cache.k.shape[1] == window   # ring buffer, not full length
+    outs = []
+    for t in range(S):
+        o, cache = A.apply_gqa(p, x[:, t:t + 1], cfg,
+                               positions=pos[:, t:t + 1], window=window,
+                               cache=cache)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(out_full), atol=1e-4)
+
+
+def test_mla_decode_equals_prefill():
+    B, S = 2, 48
+    cfg = AttnCfg(n_heads=4, n_kv_heads=4, head_dim=32, kind="mla",
+                  q_lora=24, kv_lora=16, rope_dim=8, nope_dim=16, v_dim=16)
+    p = _params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, 32))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    out_full, _ = A.apply_mla(p, x, cfg, positions=pos, chunk=16)
+    cache = A.init_cache(cfg, B, S, None, jnp.float32)
+    # MLA cache stores the compressed latent, not per-head K/V
+    assert cache.c_kv.shape == (B, S, cfg.kv_lora)
+    outs = []
+    for t in range(S):
+        o, cache = A.apply_mla(p, x[:, t:t + 1], cfg,
+                               positions=pos[:, t:t + 1], cache=cache)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(out_full), atol=1e-4)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE scores depend only on relative positions."""
+    D = 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, D))
+    p0 = jnp.arange(8)[None, :]
+    p1 = p0 + 100
+    r0 = common.apply_rope(x, p0, 10000.0)
+    r1 = common.apply_rope(x, p1, 10000.0)
+    s0 = jnp.einsum("bshd,bthd->bsht", r0, r0)
+    s1 = jnp.einsum("bshd,bthd->bsht", r1, r1)
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-4)
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = common.softcap(x, 30.0)
+    assert float(jnp.max(jnp.abs(y))) <= 30.0
+    np.testing.assert_allclose(np.asarray(common.softcap(x, None)),
+                               np.asarray(x))

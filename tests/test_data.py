@@ -1,0 +1,53 @@
+"""Data pipeline: prefetch ordering, memmap corpus, VLM/audio variants."""
+
+import numpy as np
+
+from repro.data import MemmapCorpus, Prefetcher, SyntheticLM
+
+
+def test_prefetcher_order_and_resume():
+    src = SyntheticLM(vocab=101, seq_len=8, global_batch=2, seed=1)
+    pf = Prefetcher(src, start_step=5, depth=2)
+    try:
+        steps = [pf.next()[0] for _ in range(4)]
+        assert steps == [5, 6, 7, 8]
+        direct = src.batch(6)
+        pf2 = Prefetcher(src, start_step=6, depth=1)
+        try:
+            _, b = pf2.next()
+            np.testing.assert_array_equal(b["tokens"], direct["tokens"])
+        finally:
+            pf2.close()
+    finally:
+        pf.close()
+
+
+def test_synthetic_vlm_audio_variants():
+    vlm = SyntheticLM(vocab=50, seq_len=8, global_batch=2,
+                      frontend=(4, 16)).batch(0)
+    assert vlm["frontend_embeds"].shape == (2, 4, 16)
+    audio = SyntheticLM(vocab=50, seq_len=8, global_batch=2,
+                        num_codebooks=4).batch(0)
+    assert audio["tokens"].shape == (2, 8, 4)
+    assert audio["labels"].shape == (2, 8, 4)
+
+
+def test_synthetic_has_learnable_structure():
+    b = SyntheticLM(vocab=97, seq_len=256, global_batch=4, seed=0).batch(3)
+    toks, labels = b["tokens"], b["labels"]
+    pred = (toks * 31 + 7) % 97
+    agree = (pred == labels).mean()
+    assert agree > 0.10   # the 15% injected structure survives
+
+
+def test_memmap_corpus(tmp_path):
+    data = np.arange(10_000, dtype=np.int32) % 128
+    path = tmp_path / "corpus.bin"
+    data.tofile(path)
+    c = MemmapCorpus(str(path), vocab=128, seq_len=16, global_batch=4, seed=0)
+    b = c.batch(0)
+    assert b["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    b2 = MemmapCorpus(str(path), vocab=128, seq_len=16, global_batch=4,
+                      seed=0).batch(0)
+    np.testing.assert_array_equal(b["tokens"], b2["tokens"])

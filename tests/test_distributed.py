@@ -1,0 +1,33 @@
+"""Wrappers for multi-device subprocess tests (8 fake CPU devices)."""
+
+import pytest
+
+
+@pytest.mark.slow
+def test_distributed_stencil(dist_runner):
+    out = dist_runner("stencil_dist.py")
+    for marker in ("OK 2d_superstep", "OK 2d_multistep", "OK 3d_superstep",
+                   "OK r4_superstep", "OK hlo_has_permute"):
+        assert marker in out
+
+
+@pytest.mark.slow
+def test_elastic_and_pipeline(dist_runner):
+    out = dist_runner("elastic_pp.py")
+    for marker in ("OK elastic_reshard", "OK live_reshard",
+                   "OK pipeline_parallel"):
+        assert marker in out
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("group", [
+    ["minicpm3-4b", "starcoder2-7b", "gemma2-27b"],
+    ["gemma3-4b", "llava-next-34b", "musicgen-large"],
+    ["jamba-v0.1-52b", "grok-1-314b"],
+    ["granite-moe-3b-a800m", "rwkv6-7b"],
+])
+def test_dryrun_small_mesh(dist_runner, group):
+    out = dist_runner("dryrun_small.py", *group)
+    for arch in group:
+        assert f"OK {arch}" in out
+    assert "OK all" in out

@@ -1,0 +1,61 @@
+"""Fault tolerance: watchdog, preemption restart loop."""
+
+import pytest
+
+from repro.runtime.fault import (RestartReport, SimulatedPreemption,
+                                 StepWatchdog, run_with_restarts)
+
+
+def test_watchdog_flags_outliers():
+    wd = StepWatchdog(threshold=3.0, warmup_steps=3)
+    flagged = []
+    times = [0.1] * 10 + [0.9] + [0.1] * 5
+    for i, t in enumerate(times):
+        if wd.observe(i, t):
+            flagged.append(i)
+    assert flagged == [10]
+    assert wd.straggler_steps == [10]
+
+
+def test_restart_loop_recovers_from_preemption():
+    saved = {}
+    crashes = {"left": 2}
+    log = []
+
+    def make_state():
+        return 0, {"x": 0}
+
+    def step_fn(step, state):
+        if step == 7 and crashes["left"] > 0:
+            crashes["left"] -= 1
+            raise SimulatedPreemption("node lost")
+        log.append(step)
+        return {"x": state["x"] + 1}
+
+    def save_fn(step, state):
+        saved["ckpt"] = (step, dict(state))
+
+    def restore_fn():
+        return saved.get("ckpt")
+
+    report = run_with_restarts(make_state, step_fn, save_fn, restore_fn,
+                               total_steps=12, checkpoint_every=5,
+                               max_restarts=5)
+    assert isinstance(report, RestartReport)
+    assert report.restarts == 2
+    assert report.completed_steps == 12
+    assert saved["ckpt"][0] == 12
+    # steps 5 and 6 re-ran after each preemption (checkpoint at 5)
+    assert log.count(5) == 3 and log.count(6) == 3 and log.count(11) == 1
+
+
+def test_restart_loop_gives_up_after_max():
+    def make_state():
+        return 0, {}
+
+    def step_fn(step, state):
+        raise SimulatedPreemption("always")
+
+    with pytest.raises(SimulatedPreemption):
+        run_with_restarts(make_state, step_fn, lambda *a: None, lambda: None,
+                          total_steps=3, max_restarts=2)

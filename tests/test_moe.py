@@ -1,0 +1,87 @@
+"""MoE routing/dispatch/combine invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoECfg
+from repro.models import common, moe
+
+
+def _setup(mode="tp", E=4, k=2, d=16, F=32, B=2, S=24, cf=2.0, seed=0):
+    cfg = MoECfg(num_experts=E, top_k=k, d_ff=F, capacity_factor=cf,
+                 mode=mode)
+    p = moe.init_moe(jax.random.PRNGKey(seed), d, cfg, jnp.float32, "swiglu")
+    p = jax.tree.map(lambda x: x.value, p, is_leaf=common.is_param)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, S, d))
+    return cfg, p, x
+
+
+def test_output_finite_and_shaped():
+    cfg, p, x = _setup()
+    y, aux = moe.apply_moe(p, x, cfg, "swiglu", "silu")
+    assert y.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(y)))
+    for k in ("lb_loss", "z_loss", "dropped_frac"):
+        assert np.isfinite(float(aux[k]))
+
+
+def test_high_capacity_drops_nothing():
+    cfg, p, x = _setup(cf=4.0)
+    _, aux = moe.apply_moe(p, x, cfg, "swiglu", "silu")
+    assert float(aux["dropped_frac"]) == 0.0
+
+
+def test_tiny_capacity_drops_tokens():
+    cfg, p, x = _setup(cf=0.25)
+    y, aux = moe.apply_moe(p, x, cfg, "swiglu", "silu")
+    assert float(aux["dropped_frac"]) > 0.0
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_ep_tp_modes_agree_numerically():
+    """Sharding mode only changes annotations, never results (on 1 device)."""
+    cfg_tp, p, x = _setup(mode="tp", seed=3)
+    cfg_ep = MoECfg(num_experts=cfg_tp.num_experts, top_k=cfg_tp.top_k,
+                    d_ff=cfg_tp.d_ff, capacity_factor=cfg_tp.capacity_factor,
+                    mode="ep")
+    y1, _ = moe.apply_moe(p, x, cfg_tp, "swiglu", "silu")
+    y2, _ = moe.apply_moe(p, x, cfg_ep, "swiglu", "silu")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+
+
+def test_router_weights_normalized():
+    cfg, p, x = _setup()
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    _, slot, w, keep, probs = moe._route_one(
+        x[0], logits[0], cfg, moe.capacity(cfg, x.shape[1]))
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, atol=1e-5)
+    # slots within an expert are unique for kept tokens
+    eidx = jax.lax.top_k(jax.nn.softmax(logits[0]), cfg.top_k)[1]
+    seen = set()
+    S = x.shape[1]
+    for s in range(S):
+        for j in range(cfg.top_k):
+            if bool(keep[s, j]):
+                key = (int(eidx[s, j]), int(slot[s, j]))
+                assert key not in seen
+                seen.add(key)
+
+
+def test_expert_identity_property():
+    """If every expert were the identity map, MoE output would equal x (up
+    to dropped tokens x weight normalization)."""
+    cfg, p, x = _setup(cf=4.0, d=16, F=16)
+    # zero gate/up so h=0 -> y=0; checks pure combine path of zeros
+    p0 = dict(p)
+    p0["wo"] = jnp.zeros_like(p["wo"])
+    y, _ = moe.apply_moe(p0, x, cfg, "swiglu", "silu")
+    np.testing.assert_allclose(np.asarray(y), 0.0, atol=1e-7)
+
+
+def test_capacity_formula():
+    cfg = MoECfg(num_experts=8, top_k=2, d_ff=4, capacity_factor=1.25)
+    c = moe.capacity(cfg, 4096)
+    assert c >= 4096 * 2 / 8
+    assert c % 4 == 0

@@ -1,0 +1,109 @@
+"""AdamW + schedules + gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import AdamW, GradCompression, WarmupCosine, global_norm
+
+
+def test_warmup_cosine_shape():
+    s = WarmupCosine(peak_lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert float(s(5)) < 1.0
+    assert float(s(100)) <= float(s(50))
+    assert float(s(100)) >= 0.1 - 1e-6   # floor
+
+
+def test_adamw_minimizes_quadratic():
+    opt = AdamW(schedule=WarmupCosine(peak_lr=0.05, warmup_steps=5,
+                                      total_steps=200),
+                weight_decay=0.0, clip_norm=None)
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"]))
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adamw_bf16_moments_close_to_f32():
+    def run(moment_dtype):
+        opt = AdamW(schedule=lambda s: 0.01, weight_decay=0.0,
+                    clip_norm=None, moment_dtype=moment_dtype)
+        params = {"w": jnp.ones((8,)) * 2.0}
+        state = opt.init(params)
+        for _ in range(50):
+            g = jax.tree.map(lambda p: 2 * p, params)
+            params, state, _ = opt.update(g, state, params)
+        return np.asarray(params["w"])
+
+    w32 = run("float32")
+    w16 = run("bfloat16")
+    np.testing.assert_allclose(w16, w32, atol=0.05)
+
+
+def test_clipping_bounds_update():
+    opt = AdamW(schedule=lambda s: 1.0, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros((4,))}
+    state = opt.init(params)
+    g = {"w": jnp.full((4,), 1e6)}
+    new_params, _, metrics = opt.update(g, state, params)
+    assert float(metrics["grad_norm"]) > 1e5
+    assert np.all(np.abs(np.asarray(new_params["w"])) < 10.0)
+
+
+def test_global_norm():
+    t = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert abs(float(global_norm(t)) - 5.0) < 1e-6
+
+
+def test_compression_error_feedback_preserves_sum():
+    """With error feedback, the cumulative applied gradient converges to the
+    cumulative true gradient (the 1-bit-Adam property)."""
+    comp = GradCompression("int8")
+    grads_true = [{"w": jnp.full((16,), 0.001 * (i + 1))} for i in range(50)]
+    err = comp.init_error(grads_true[0])
+    applied = jnp.zeros((16,))
+    total = jnp.zeros((16,))
+    for g in grads_true:
+        dq, err = comp.compress(g, err)
+        applied += dq["w"]
+        total += g["w"]
+    resid = float(jnp.max(jnp.abs(applied + err["w"] - total)))
+    assert resid < 1e-4
+
+
+def test_compression_modes_roundtrip():
+    for mode, tol in [("bf16", 0.01), ("int8", 0.02)]:
+        comp = GradCompression(mode)
+        g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64,))}
+        err = comp.init_error(g)
+        dq, err = comp.compress(g, err)
+        rel = float(jnp.linalg.norm(dq["w"] - g["w"])
+                    / jnp.linalg.norm(g["w"]))
+        assert rel < tol, mode
+    assert GradCompression("bf16").wire_bytes_ratio() == 0.5
+    assert GradCompression("int8").wire_bytes_ratio() == 0.25
+
+
+def test_training_with_compression_converges():
+    opt = AdamW(schedule=lambda s: 0.05, weight_decay=0.0, clip_norm=None)
+    comp = GradCompression("int8")
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    state = opt.init(params)
+    err = comp.init_error(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"]))
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        g, err = comp.compress(g, err)
+        params, state, _ = opt.update(g, state, params)
+    assert float(loss(params)) < 1e-2

@@ -1,0 +1,109 @@
+"""Paper performance-model reproduction (the §VI validation).
+
+The paper's own numbers are the ground truth here:
+  * Table I characteristics — exact.
+  * Table III "Estimated Performance" — reproduced from (f_max, par_vec,
+    par_time, bsize, rad) by the published equations: <=2.5% error on every
+    2D row, <=6% on every 3D row (the full expression lives in their FPGA'18
+    paper [8]; see perf_model.py docstring).
+  * "Model Accuracy" column — measured/estimated, reproduced to <=2.5 pts.
+  * Tables IV/V "Roofline Ratio" — effective GB/s over device bandwidth,
+    reproduced to ~1% for FPGA rows.
+"""
+
+import numpy as np
+import pytest
+
+from repro.analysis.hw import PAPER_DEVICES
+from repro.core import perf_model as pm
+
+
+def test_flop_per_cell_matches_table1():
+    for rad, want in [(1, 9), (2, 17), (3, 25), (4, 33)]:
+        assert pm.flops_per_cell(2, rad) == want
+    for rad, want in [(1, 13), (2, 25), (3, 37), (4, 49)]:
+        assert pm.flops_per_cell(3, rad) == want
+
+
+def test_eq2_csize():
+    assert pm.csize(4096, 36, 1) == 4024      # paper 2D rad=1 row
+    assert pm.csize(4096, 22, 4) == 3920      # paper 2D rad=4 row
+    assert pm.csize(256, 12, 1) == 232        # paper 3D rad=1 row
+
+
+def test_eq4_dsp_budget():
+    assert pm.par_total_dsps(2, 1) == 1518 // 5
+    assert pm.par_total_dsps(3, 4) == 1518 // 25
+
+
+def test_eq5_eq6_paper_rows_feasible():
+    for row in pm.PAPER_TABLE3:
+        assert pm.constraint_eq5(row.par_time, row.par_vec, row.ndim, row.rad)
+        assert pm.constraint_eq6(row.par_time, row.rad), row
+
+
+@pytest.mark.parametrize("row", pm.PAPER_TABLE3,
+                         ids=[f"{r.ndim}d_r{r.rad}" for r in pm.PAPER_TABLE3])
+def test_reproduce_estimated_performance(row):
+    pred = pm.paper_predicted_gbps(row.f_mhz, row.par_vec, row.par_time,
+                                   row.bsize[0], row.rad)
+    err = abs(pred - row.estimated_gbps) / row.estimated_gbps
+    tol = 0.025 if row.ndim == 2 else 0.06
+    assert err <= tol, (row, pred, err)
+
+
+@pytest.mark.parametrize("row", pm.PAPER_TABLE3,
+                         ids=[f"{r.ndim}d_r{r.rad}" for r in pm.PAPER_TABLE3])
+def test_reproduce_model_accuracy_column(row):
+    pred = pm.paper_predicted_gbps(row.f_mhz, row.par_vec, row.par_time,
+                                   row.bsize[0], row.rad)
+    acc = row.measured_gbps / pred
+    # 3D estimates carry the ~5% expression gap (module docstring), which
+    # propagates into the accuracy column.
+    tol = 0.025 if row.ndim == 2 else 0.035
+    assert abs(acc - row.model_accuracy) <= tol, (row, acc)
+
+
+def test_derived_metric_consistency_table3():
+    """GFLOP/s and GCell/s columns follow from GB/s by Table I arithmetic."""
+    for row in pm.PAPER_TABLE3:
+        gcells = pm.gbps_to_gcells(row.measured_gbps)
+        gflops = pm.gcells_to_gflops(gcells, row.ndim, row.rad)
+        assert abs(gcells - row.measured_gcells) / row.measured_gcells < 0.01
+        assert abs(gflops - row.measured_gflops) / row.measured_gflops < 0.01
+
+
+def test_roofline_ratio_reproduction():
+    """Paper Tables IV/V roofline-ratio arithmetic for the FPGA rows."""
+    bw = PAPER_DEVICES["arria10"].mem_bw_gbps
+    for rad, (gflops, gcells, _, ratio) in pm.PAPER_TABLE4_2D["arria10"].items():
+        eff_gbps = gcells * pm.bytes_per_cell()
+        assert abs(pm.roofline_ratio(eff_gbps, bw) - ratio) < 0.03, rad
+    for rad, (gflops, gcells, _, ratio) in pm.PAPER_TABLE5_3D["arria10"].items():
+        eff_gbps = gcells * pm.bytes_per_cell()
+        assert abs(pm.roofline_ratio(eff_gbps, bw) - ratio) < 0.03, rad
+
+
+def test_temporal_blocking_needed_above_ratio_one():
+    """Paper claim: roofline ratio > 1 is unreachable without temporal
+    blocking; CPU/GPU rows must all be < 1, FPGA rows > 1."""
+    for dev, rows in {**pm.PAPER_TABLE4_2D, **pm.PAPER_TABLE5_3D}.items():
+        for rad, (_, _, _, ratio) in rows.items():
+            if dev == "arria10":
+                assert ratio > 1.0
+            else:
+                assert ratio < 1.0
+
+
+def test_config_enumeration_ranks_paper_configs_high():
+    """The §V.A sweep with the paper's f_max should rank a configuration at
+    least as good as the paper's published one (the model can't do worse
+    than the config the authors picked with the same model)."""
+    for row in pm.PAPER_TABLE3[:4]:   # 2D rows
+        cfgs = pm.enumerate_fpga_configs(row.ndim, row.rad, row.f_mhz,
+                                         bsizes=[row.bsize])
+        assert cfgs, row
+        best = cfgs[0]
+        paper_pred = pm.paper_predicted_gbps(
+            row.f_mhz, row.par_vec, row.par_time, row.bsize[0], row.rad)
+        assert best.predicted_gbps() >= paper_pred * 0.999

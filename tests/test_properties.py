@@ -1,0 +1,96 @@
+"""Hypothesis property tests on system invariants."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import reference as ref
+from repro.core.blocking import BlockPlan
+from repro.core.spec import StencilCoeffs, StencilSpec
+from repro.kernels import ops
+from repro.models import moe
+from repro.configs.base import MoECfg
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=12,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+
+@given(rad=st.integers(1, 4),
+       h=st.integers(9, 24), w=st.integers(9, 40),
+       seed=st.integers(0, 10_000))
+def test_kernel_equals_reference_any_shape(rad, h, w, seed):
+    """The central correctness property: pallas temporal-blocked kernel ==
+    naive reference for arbitrary shapes/radii/seeds."""
+    spec = StencilSpec(ndim=2, radius=rad)
+    coeffs = spec.default_coeffs(seed=seed % 7)
+    plan = BlockPlan(spec=spec, block_shape=(8, 128), par_time=2)
+    g = ref.random_grid(spec, (h, w), seed=seed)
+    got = ops.stencil_superstep(g, spec, coeffs, plan)
+    want = ref.stencil_nsteps_unrolled(spec, coeffs, g, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+@given(rad=st.integers(1, 4), seed=st.integers(0, 100))
+def test_stencil_contraction(rad, seed):
+    """|coeffs| summing to 1 keep sup-norm non-increasing (stability)."""
+    spec = StencilSpec(ndim=2, radius=rad)
+    coeffs = spec.default_coeffs(seed=seed)
+    g = ref.random_grid(spec, (16, 24), seed=seed)
+    out = ref.stencil_step(spec, coeffs, g)
+    assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(g))) + 1e-5
+
+
+@given(bsize=st.integers(32, 512), pt=st.integers(1, 8), rad=st.integers(1, 4))
+def test_csize_consistency_with_plan(bsize, pt, rad):
+    """paper eq. 2 == BlockPlan halo algebra."""
+    spec = StencilSpec(ndim=2, radius=rad)
+    plan = BlockPlan(spec=spec, block_shape=(bsize, bsize), par_time=pt)
+    from repro.core.perf_model import csize
+    assert plan.padded_shape[0] - 2 * plan.halo == bsize
+    assert csize(plan.padded_shape[0], pt, rad) == bsize
+
+
+@given(e=st.integers(2, 8), k=st.integers(1, 4), s=st.integers(4, 32),
+       seed=st.integers(0, 1000))
+def test_router_invariants(e, k, s, seed):
+    k = min(k, e)
+    cfg = MoECfg(num_experts=e, top_k=k, d_ff=8, capacity_factor=2.0)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (s, 8))
+    logits = jax.random.normal(jax.random.PRNGKey(seed + 1), (s, e))
+    cap = moe.capacity(cfg, s)
+    eidx, slot, w, keep, probs = moe._route_one(x, logits, cfg, cap)
+    assert eidx.shape == (s, k)
+    # weights normalized over selected experts
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, atol=1e-4)
+    # kept slots within capacity
+    assert int(jnp.max(jnp.where(keep, slot, 0))) < cap
+    # probs are a distribution
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, atol=1e-4)
+
+
+@given(seed=st.integers(0, 1000), w=st.integers(2, 16))
+def test_ring_cache_positions(seed, w):
+    """Ring cache never attends to future or beyond-window positions."""
+    from repro.configs.base import AttnCfg
+    from repro.models import attention as A
+    cfg = AttnCfg(n_heads=2, n_kv_heads=2, head_dim=8)
+    cache = A.init_cache(cfg, 1, 64, w, jnp.float32)
+    assert cache.k.shape[1] == min(w, 64)
+    S = 20
+    k = jax.random.normal(jax.random.PRNGKey(seed), (1, 1, 2, 8))
+    for t in range(S):
+        slot = A._ring_slot(jnp.asarray([t]), cache.k.shape[1])
+        cache = A.KVCache(
+            k=cache.k.at[jnp.arange(1), slot].set(k[:, 0]),
+            v=cache.v.at[jnp.arange(1), slot].set(k[:, 0]),
+            pos=cache.pos.at[jnp.arange(1), slot].set(t))
+    pos = np.asarray(cache.pos[0])
+    valid = pos[pos >= 0]
+    assert valid.max() == S - 1
+    assert (S - 1) - valid.min() < max(w, 1) + 1

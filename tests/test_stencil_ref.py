@@ -1,0 +1,94 @@
+"""Reference-stencil semantics + paper Table I characteristics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import reference as ref
+from repro.core.spec import StencilCoeffs, StencilSpec
+
+
+@pytest.mark.parametrize("ndim", [2, 3])
+@pytest.mark.parametrize("rad", [1, 2, 3, 4])
+def test_table1_characteristics(ndim, rad):
+    """FLOP/byte per cell update must match paper Table I exactly."""
+    spec = StencilSpec(ndim=ndim, radius=rad)
+    expected_flops = {2: {1: 9, 2: 17, 3: 25, 4: 33},
+                      3: {1: 13, 2: 25, 3: 37, 4: 49}}[ndim][rad]
+    assert spec.flops_per_cell == expected_flops
+    assert spec.bytes_per_cell == 8
+    assert abs(spec.flop_per_byte - expected_flops / 8) < 1e-12
+    assert spec.muls_per_cell == 2 * ndim * rad + 1
+    assert spec.adds_per_cell == 2 * ndim * rad
+
+
+@pytest.mark.parametrize("ndim,shape", [(2, (24, 33)), (3, (10, 12, 17))])
+def test_constant_grid_fixed_point(ndim, shape):
+    """default_coeffs sum to 1 -> constant grids are exact fixed points,
+    including at clamp boundaries."""
+    spec = StencilSpec(ndim=ndim, radius=3)
+    coeffs = spec.default_coeffs()
+    g = jnp.full(shape, 0.7, jnp.float32)
+    out = ref.stencil_nsteps_unrolled(spec, coeffs, g, 3)
+    np.testing.assert_allclose(np.asarray(out), 0.7, rtol=2e-6)
+
+
+def test_linearity():
+    spec = StencilSpec(ndim=2, radius=2)
+    coeffs = spec.default_coeffs(seed=3)
+    a = ref.random_grid(spec, (20, 30), seed=1)
+    b = ref.random_grid(spec, (20, 30), seed=2)
+    lhs = ref.stencil_step(spec, coeffs, 2.0 * a + 3.0 * b)
+    rhs = 2.0 * ref.stencil_step(spec, coeffs, a) \
+        + 3.0 * ref.stencil_step(spec, coeffs, b)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=1e-5)
+
+
+def test_clamp_boundary_matches_manual():
+    """Radius-1 1-step result checked against a hand-rolled clamp update."""
+    spec = StencilSpec(ndim=2, radius=1)
+    coeffs = spec.default_coeffs(seed=0)
+    g = ref.random_grid(spec, (5, 6), seed=9)
+    out = np.asarray(ref.stencil_step(spec, coeffs, g))
+    gn = np.asarray(g)
+    c = float(coeffs.center)
+    nb = np.asarray(coeffs.neighbors)
+    H, W = gn.shape
+    for i in range(H):
+        for j in range(W):
+            acc = c * gn[i, j]
+            acc += nb[0, 0] * gn[i, max(j - 1, 0)]       # west
+            acc += nb[1, 0] * gn[i, min(j + 1, W - 1)]   # east
+            acc += nb[2, 0] * gn[max(i - 1, 0), j]       # south
+            acc += nb[3, 0] * gn[min(i + 1, H - 1), j]   # north
+            assert abs(acc - out[i, j]) < 1e-5, (i, j)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        StencilSpec(ndim=4, radius=1)
+    with pytest.raises(ValueError):
+        StencilSpec(ndim=2, radius=0)
+    with pytest.raises(ValueError):
+        StencilSpec(ndim=2, radius=1, boundary="periodic")
+
+
+def test_shared_coefficients():
+    """Paper §IV/V: shared-coefficient stencils (refs [10,18,19]) use the
+    same kernel; only the FLOP accounting changes (FMULs collapse)."""
+    spec = StencilSpec(ndim=3, radius=4)
+    shared = spec.shared_coeffs(seed=1)
+    # every direction row equal
+    nb = np.asarray(shared.neighbors)
+    for d in range(1, 6):
+        np.testing.assert_array_equal(nb[0], nb[d])
+    # shared-mode muls < worst-case muls; adds unchanged in the update
+    assert spec.flops_per_cell_shared < spec.flops_per_cell
+    # kernel result still matches the reference with shared coeffs
+    g = ref.random_grid(spec, (12, 14, 40), seed=2)
+    out = ref.stencil_step(spec, shared, g)
+    assert np.isfinite(np.asarray(out)).all()
+    # symmetric operator: flipping the grid along any axis commutes
+    flipped = ref.stencil_step(spec, shared, jnp.flip(g, axis=0))
+    np.testing.assert_allclose(np.asarray(jnp.flip(flipped, axis=0)),
+                               np.asarray(out), atol=1e-5)
