@@ -4,16 +4,19 @@ These numbers are CPU-interpreter timings — they validate the measurement
 harness and relative blocking behaviour, NOT TPU performance (that is the
 roofline analysis' job).  Derived column reports MCell/s and the speedup of
 temporal blocking vs par_time=1 at equal steps.
+
+Stencils are described as ``StencilProgram``s and lowered through the
+backend registry; a box/periodic row exercises the non-star path end to end.
 """
 
 import time
 
 import jax
 
+from repro.backends import lower
 from repro.core import reference as ref
 from repro.core.blocking import BlockPlan
-from repro.core.spec import StencilSpec
-from repro.kernels import ops
+from repro.core.program import StencilProgram
 
 
 def _time(fn, *args, reps=3):
@@ -28,27 +31,40 @@ def _time(fn, *args, reps=3):
 
 def run():
     rows = []
-    for ndim, shape, block in [(2, (256, 512), (64, 128)),
-                               (3, (32, 64, 256), (8, 16, 128))]:
+    cases = [(2, (256, 512), (64, 128), "star", "clamp"),
+             (3, (32, 64, 256), (8, 16, 128), "star", "clamp")]
+    programs = []
+    for ndim, shape, block, pshape, boundary in cases:
         for rad in (1, 2, 4):
-            spec = StencilSpec(ndim=ndim, radius=rad)
-            coeffs = spec.default_coeffs()
-            cells = 1
-            for s in shape:
-                cells *= s
+            programs.append((StencilProgram(ndim=ndim, radius=rad,
+                                            shape=pshape, boundary=boundary),
+                             shape, block))
+    # non-star coverage through the identical lowering
+    programs.append((StencilProgram(ndim=2, radius=1, shape="box",
+                                    boundary="periodic"),
+                     (256, 512), (64, 128)))
 
-            plan1 = BlockPlan(spec=spec, block_shape=block, par_time=1)
-            plan2 = BlockPlan(spec=spec, block_shape=block, par_time=2)
-            g = ref.random_grid(spec, shape, seed=0)
+    for prog, shape, block in programs:
+        cells = 1
+        for s in shape:
+            cells *= s
 
-            f1 = jax.jit(lambda g: ops.stencil_run(g, spec, coeffs, plan1, 2))
-            f2 = jax.jit(lambda g: ops.stencil_superstep(g, spec, coeffs,
-                                                         plan2))
-            t1 = _time(f1, g)
-            t2 = _time(f2, g)
-            mcells = cells * 2 / t2 / 1e6
-            rows.append((
-                f"kernel_{ndim}d_r{rad}", t2 * 1e6,
-                f"mcells_per_s={mcells:.1f};"
-                f"tb_speedup_vs_pt1={t1 / t2:.2f}x"))
+        plan1 = BlockPlan(spec=prog, block_shape=block, par_time=1)
+        plan2 = BlockPlan(spec=prog, block_shape=block, par_time=2)
+        low1 = lower(prog, plan1)
+        low2 = lower(prog, plan2)
+        g = ref.random_grid(prog, shape, seed=0)
+
+        f1 = jax.jit(lambda g: low1.run(g, 2))
+        f2 = jax.jit(lambda g: low2.superstep(g))
+        t1 = _time(f1, g)
+        t2 = _time(f2, g)
+        mcells = cells * 2 / t2 / 1e6
+        tag = f"kernel_{prog.ndim}d_r{prog.radius}"
+        if prog.shape != "star":
+            tag += f"_{prog.shape}_{prog.boundary}"
+        rows.append((
+            tag, t2 * 1e6,
+            f"mcells_per_s={mcells:.1f};"
+            f"tb_speedup_vs_pt1={t1 / t2:.2f}x"))
     return rows

@@ -12,7 +12,7 @@ bandwidth-bound side, and our v5e planner for the temporal-blocked side.
 from repro.analysis.hw import V5E
 from repro.core import perf_model as pm
 from repro.core.blocking import plan_blocking
-from repro.core.spec import StencilSpec
+from repro.core.program import StencilProgram
 
 
 def run():
@@ -31,7 +31,7 @@ def run():
     for ndim in (2, 3):
         cells, flops = [], []
         for rad in (1, 2, 3, 4):
-            spec = StencilSpec(ndim=ndim, radius=rad)
+            spec = StencilProgram(ndim=ndim, radius=rad)
             est = plan_blocking(spec, V5E, max_par_time=32)
             cells.append(est.gcells_per_s)
             flops.append(est.gflops_per_s)

@@ -4,7 +4,7 @@ Emits one CSV row per (ndim, radius): FLOP/cell, byte/cell, FLOP/byte —
 asserted equal to the paper's printed values.
 """
 
-from repro.core.spec import StencilSpec
+from repro.core.program import StencilProgram
 
 PAPER = {
     (2, 1): (9, 8, 1.125), (2, 2): (17, 8, 2.125),
@@ -17,7 +17,7 @@ PAPER = {
 def run():
     rows = []
     for (ndim, rad), (fl, by, r) in sorted(PAPER.items()):
-        spec = StencilSpec(ndim=ndim, radius=rad)
+        spec = StencilProgram(ndim=ndim, radius=rad)
         assert spec.flops_per_cell == fl, (ndim, rad)
         assert spec.bytes_per_cell == by
         assert abs(spec.flop_per_byte - r) < 1e-9

@@ -10,7 +10,7 @@ on TPU" projection the dry-run validates structurally.
 from repro.analysis.hw import PAPER_DEVICES, V5E
 from repro.core import perf_model as pm
 from repro.core.blocking import plan_blocking
-from repro.core.spec import StencilSpec
+from repro.core.program import StencilProgram
 
 
 def run():
@@ -28,7 +28,7 @@ def run():
     # v5e projection rows (the paper's technique, our hardware)
     for ndim in (2, 3):
         for rad in (1, 2, 3, 4):
-            spec = StencilSpec(ndim=ndim, radius=rad)
+            spec = StencilProgram(ndim=ndim, radius=rad)
             est = plan_blocking(spec, V5E, max_par_time=32)
             gcells = est.gcells_per_s / 1e9
             gflops = gcells * spec.flops_per_cell

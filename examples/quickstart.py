@@ -1,9 +1,10 @@
 """Quickstart: high-order heat diffusion with combined spatial+temporal
 blocking.
 
-Runs a radius-4 2D stencil (paper's hardest 2D case) on a small grid with
-the planner-chosen blocking, verifies against the naive reference, and
-prints the performance-model estimate for TPU v5e.
+Describes a radius-4 2D stencil (paper's hardest 2D case) as a
+``StencilProgram``, lowers it through the backend registry with the
+planner-chosen blocking, verifies against the naive reference, and prints
+the performance-model estimate for TPU v5e.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,32 +13,37 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.hw import V5E
-from repro.core import StencilSpec
-from repro.core.reference import random_grid, stencil_nsteps_unrolled
-from repro.core.temporal import StencilEngine
+from repro.backends import lower
+from repro.core import StencilProgram
+from repro.core.blocking import estimate
+from repro.core.reference import program_nsteps_unrolled, random_grid
 
 
 def main():
-    spec = StencilSpec(ndim=2, radius=4)
-    print(f"stencil: 2D radius={spec.radius}  "
-          f"FLOP/cell={spec.flops_per_cell} (paper Table I: 33)")
+    program = StencilProgram(ndim=2, radius=4, shape="star",
+                             boundary="clamp")
+    print(f"program: 2D star radius={program.radius}  "
+          f"taps={program.num_taps}  "
+          f"FLOP/cell={program.flops_per_cell} (paper Table I: 33)")
 
     grid_shape = (256, 512)
-    engine = StencilEngine.create(spec, grid_shape, max_par_time=4)
-    plan = engine.plan
+    lowered = lower(program, grid_shape=grid_shape)
+    plan = lowered.plan
+    print(f"backend: {lowered.backend_name} v{lowered.backend_version}")
     print(f"plan: block={plan.block_shape} par_time={plan.par_time} "
           f"halo={plan.halo} vmem={plan.vmem_bytes / 2**20:.1f} MiB")
 
-    est = engine.estimate()
+    est = estimate(plan, V5E)
     print(f"v5e model: {est.gcells_per_s / 1e9:.0f} GCell/s "
           f"{est.gflops_per_s / 1e9:.0f} GFLOP/s ({est.bound}-bound), "
-          f"effective {est.gcells_per_s * spec.bytes_per_cell / 1e9:.0f} GB/s"
+          f"effective "
+          f"{est.gcells_per_s * program.bytes_per_cell / 1e9:.0f} GB/s"
           f" vs {V5E.hbm_bytes_per_s / 1e9:.0f} GB/s HBM")
 
-    grid = random_grid(spec, grid_shape, seed=0)
+    grid = random_grid(program, grid_shape, seed=0)
     steps = 2 * plan.par_time
-    out = engine.run(grid, steps)
-    want = stencil_nsteps_unrolled(spec, engine.coeffs, grid, steps)
+    out = lowered.run(grid, steps)
+    want = program_nsteps_unrolled(program, lowered.coeffs, grid, steps)
     err = float(jnp.max(jnp.abs(out - want)))
     assert np.allclose(out, want, atol=1e-4), err
     print(f"{steps} steps via temporal blocking == naive reference "

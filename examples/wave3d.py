@@ -14,15 +14,20 @@ the temporal-blocking engine and check energy stays bounded (CFL respected).
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import StencilSpec
+from repro.core import StencilProgram
 from repro.core.blocking import BlockPlan
-from repro.core.spec import StencilCoeffs
+from repro.core.program import ProgramCoeffs
 from repro.kernels import ops
 
 
-def laplacian_coeffs(rad: int, courant2: float) -> StencilCoeffs:
+def laplacian_coeffs(program: StencilProgram,
+                     courant2: float) -> ProgramCoeffs:
     """4th-order-accurate central-difference Laplacian weights (radius 4),
     folded into the paper's update  u' = c_c*u + sum c_i u_i.
+
+    The Laplacian is distance-symmetric, so the weights are exactly the
+    IR's *distance-shared* coefficient case: one value per shell, expanded
+    to the full tap vector by ``coeffs_from_shells``.
 
     For the damped-wave surrogate used here we apply
         u' = u + k * L(u)
@@ -31,16 +36,17 @@ def laplacian_coeffs(rad: int, courant2: float) -> StencilCoeffs:
     limit, which exercises the identical compute/memory pattern)."""
     # 8th-order central difference weights for d2/dx2, radius 4:
     w = np.array([-205.0 / 72, 8.0 / 5, -1.0 / 5, 8.0 / 315, -1.0 / 560])
-    center = 1.0 + 3 * w[0] * courant2
-    neigh = np.tile(w[1:] * courant2, (6, 1)).astype(np.float32)
-    return StencilCoeffs(center=jnp.float32(center),
-                         neighbors=jnp.asarray(neigh))
+    center = np.float32(1.0 + 3 * w[0] * courant2)
+    shells = (w[1:] * courant2).astype(np.float32)
+    return program.coeffs_from_shells(jnp.float32(center),
+                                      jnp.asarray(shells))
 
 
 def main():
-    spec = StencilSpec(ndim=3, radius=4)
+    spec = StencilProgram(ndim=3, radius=4, shape="star",
+                          coeff_sharing="distance")
     courant2 = 0.05   # well inside stability for the surrogate update
-    coeffs = laplacian_coeffs(4, courant2)
+    coeffs = laplacian_coeffs(spec, courant2)
 
     shape = (32, 48, 256)
     plan = BlockPlan(spec=spec, block_shape=(8, 16, 128), par_time=2)

@@ -44,6 +44,7 @@ _WHILE_RE = re.compile(
     r"while\(.*?body=%([\w.\-]+)")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
 _OPERANDS_RE = re.compile(r"%([\w.\-]+)")
 _OPCODE_RE = re.compile(r"(?:\{[^}]*\}\s*)?([a-z][a-z0-9\-]*)\(")
 _CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
@@ -255,6 +256,13 @@ def _parse_module(hlo_text: str):
                     r"(?:branch_computations=\{|true_computation=|"
                     r"false_computation=)%?([\w.\-]+)", rest):
                 cur.calls.append(("cond", cm.group(1), 1))
+        elif opcode == "call":
+            # plain computation call (e.g. the CPU backend's parallel-task
+            # wrappers): flops recurse like a fusion; bytes resolved below
+            # with the callee's slice-awareness.
+            am = _TOAPPLY_RE.search(rest)
+            if am:
+                cur.calls.append(("fusion", am.group(1), 1))
         else:
             for cm in _CALLS_RE.finditer(rest):
                 cur.calls.append(("fusion", cm.group(1), 1))
@@ -291,10 +299,11 @@ def _parse_module(hlo_text: str):
         # ---- bytes (top-level only; fusion internals estimated later) ------
         if opcode in _FREE_OPS or opcode in ("while", "conditional"):
             pass
-        elif opcode == "fusion":
+        elif opcode in ("fusion", "call"):
             # resolved in a second pass once the callee is parsed
             callee = None
-            cm = _CALLS_RE.search(rest)
+            cm = _CALLS_RE.search(rest) if opcode == "fusion" \
+                else _TOAPPLY_RE.search(rest)
             if cm:
                 callee = cm.group(1)
             cur.fusion_calls_bytes.append(
@@ -332,9 +341,27 @@ def _parse_module(hlo_text: str):
             c.wire_bytes = wire
 
     # third pass: fusion byte estimates with gather/DUS-aware operand costs
+    def _unwrap(sub, depth=0):
+        """Follow trivial wrapper computations (a single fusion/call whose
+        operands are exactly the wrapper's params, e.g. the CPU backend's
+        ``parallel_*`` outer-partitioned wrappers) to the computation that
+        actually consumes the params, so slice-awareness survives the hop."""
+        while sub is not None and depth < 8:
+            if (len(sub.fusion_calls_bytes) == 1
+                    and sub.fusion_calls_bytes[0][0]
+                    and list(sub.fusion_calls_bytes[0][1]) == list(sub.params)):
+                nxt = comps.get(sub.fusion_calls_bytes[0][0])
+                if nxt is None:
+                    break
+                sub = nxt
+                depth += 1
+            else:
+                break
+        return sub
+
     for comp in comps.values():
         for callee, operand_names, result_bytes in comp.fusion_calls_bytes:
-            sub = comps.get(callee) if callee else None
+            sub = _unwrap(comps.get(callee)) if callee else None
             total = result_bytes
             if sub is not None and sub.dus_dest_params:
                 # fusion wraps an in-place dynamic-update-slice: the full-
@@ -421,6 +448,18 @@ def parse_collectives(hlo_text: str) -> Dict[str, float]:
     """Back-compat wrapper returning only the collective byte counts."""
     c = parse_hlo_costs(hlo_text)
     return {k: v for k, v in c.items() if k not in ("flops", "bytes")}
+
+
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns a one-element list of dicts (per device assignment);
+    newer JAX returns the dict directly.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
 
 
 @dataclasses.dataclass

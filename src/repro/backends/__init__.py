@@ -1,0 +1,25 @@
+"""Stencil backend registry — ``lower(program, plan)`` to an executable.
+
+Importing this package registers the built-in backends:
+``pallas-tpu``, ``pallas-interpret``, ``xla-reference``.
+"""
+
+from repro.backends.registry import (  # noqa: F401
+    LoweredStencil,
+    available_backends,
+    default_backend_name,
+    get_backend,
+    lower,
+    register_backend,
+)
+from repro.backends import pallas_backend as _pallas  # noqa: F401
+from repro.backends import xla_ref as _xla  # noqa: F401
+
+__all__ = [
+    "LoweredStencil",
+    "available_backends",
+    "default_backend_name",
+    "get_backend",
+    "lower",
+    "register_backend",
+]

@@ -1,0 +1,46 @@
+"""Pallas backends: the temporal-blocked superstep kernels behind the registry.
+
+Version 1 targets the post-rename Pallas API through the compat shim in
+``kernels/common.py`` (``MemorySpace`` vs ``TPUMemorySpace`` resolved at
+import); a future API break becomes a ``version=2`` registration rather than
+an edit-in-place, so old lowerings remain addressable.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.blocking import BlockPlan
+from repro.core.program import ProgramCoeffs, StencilProgram
+from repro.backends.registry import LoweredStencil, register_backend
+from repro.kernels import ops
+
+
+def _make(program: StencilProgram, plan: Optional[BlockPlan],
+          coeffs: ProgramCoeffs, interpret: bool,
+          pipelined: bool) -> LoweredStencil:
+    if plan is None:
+        raise ValueError("pallas backends need a BlockPlan")
+
+    def superstep_fn(grid, c):
+        return ops.stencil_superstep(grid, program, c, plan,
+                                     interpret=interpret,
+                                     pipelined=pipelined)
+
+    def run_fn(grid, c, steps):
+        return ops.stencil_run(grid, program, c, plan, steps,
+                               interpret=interpret)
+
+    return LoweredStencil(program, plan, coeffs, superstep_fn, run_fn)
+
+
+@register_backend("pallas-tpu", version=1)
+def pallas_tpu(program, plan, coeffs) -> LoweredStencil:
+    """Compiled Pallas kernels (requires a TPU backend)."""
+    return _make(program, plan, coeffs, interpret=False, pipelined=False)
+
+
+@register_backend("pallas-interpret", version=1)
+def pallas_interpret(program, plan, coeffs) -> LoweredStencil:
+    """Same kernels under the Pallas interpreter — CPU CI / debugging."""
+    return _make(program, plan, coeffs, interpret=True, pipelined=False)

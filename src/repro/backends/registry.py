@@ -1,0 +1,134 @@
+"""Versioned stencil-backend registry behind a single ``lower()`` entry point.
+
+The frontend (``StencilProgram``) describes *what* to compute; a backend
+decides *how*.  This mirrors the layered lowering the paper's toolchain
+implies (OpenCL source -> AOC -> bitstream) and that Stencil-HMLS makes
+explicit (DSL -> MLIR dialects -> target): the IR stays fixed while backends
+evolve independently — and carry a version so API-drift shims (e.g. the
+Pallas ``MemorySpace`` rename) can be introduced as new versions without
+deleting the old lowering.
+
+Built-in backends (registered in ``repro.backends``):
+
+* ``pallas-tpu``       — temporal-blocked Pallas kernels, compiled mode.
+* ``pallas-interpret`` — same kernels under the Pallas interpreter (CPU CI).
+* ``xla-reference``    — naive jnp step loop through XLA; the semantic
+                         oracle, also the fallback when Pallas is unavailable.
+
+Usage::
+
+    program = StencilProgram(ndim=2, radius=3, shape="box",
+                             boundary="periodic")
+    lowered = lower(program, plan)           # best default backend
+    out = lowered.run(grid, steps=12)
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+from repro.core.blocking import BlockPlan, plan_blocking
+from repro.core.program import (ProgramCoeffs, StencilProgram, as_program,
+                                normalize_coeffs)
+
+
+class LoweredStencil:
+    """A program bound to a backend: ``superstep``/``run`` execute it.
+
+    ``backend_name``/``backend_version`` are stamped by :func:`lower` from
+    the registry entry that produced this object — factories need not (and
+    should not) hardcode them.
+    """
+
+    def __init__(self, program: StencilProgram, plan: Optional[BlockPlan],
+                 coeffs: ProgramCoeffs, superstep_fn, run_fn,
+                 backend_name: Optional[str] = None,
+                 backend_version: Optional[int] = None):
+        self.program = program
+        self.plan = plan
+        self.coeffs = coeffs
+        self._superstep_fn = superstep_fn
+        self._run_fn = run_fn
+        self.backend_name = backend_name
+        self.backend_version = backend_version
+
+    def superstep(self, grid, coeffs=None):
+        """Advance ``plan.par_time`` steps (1 for plan-less backends)."""
+        c = self.coeffs if coeffs is None else \
+            normalize_coeffs(self.program, coeffs)
+        return self._superstep_fn(grid, c)
+
+    def run(self, grid, steps: int, coeffs=None):
+        """Advance an arbitrary number of time steps."""
+        c = self.coeffs if coeffs is None else \
+            normalize_coeffs(self.program, coeffs)
+        return self._run_fn(grid, c, steps)
+
+
+#: factory(program, plan, coeffs) -> LoweredStencil
+BackendFactory = Callable[[StencilProgram, Optional[BlockPlan],
+                           ProgramCoeffs], LoweredStencil]
+
+_REGISTRY: Dict[str, Dict[int, BackendFactory]] = {}
+
+
+def register_backend(name: str, version: int = 1):
+    """Decorator registering a backend factory under (name, version)."""
+
+    def deco(factory: BackendFactory) -> BackendFactory:
+        _REGISTRY.setdefault(name, {})
+        if version in _REGISTRY[name]:
+            raise ValueError(f"backend {name!r} v{version} already registered")
+        _REGISTRY[name][version] = factory
+        return factory
+
+    return deco
+
+
+def available_backends() -> Dict[str, tuple]:
+    """name -> sorted tuple of registered versions."""
+    return {n: tuple(sorted(v)) for n, v in _REGISTRY.items()}
+
+
+def get_backend(name: str,
+                version: Optional[int] = None) -> "tuple[BackendFactory, int]":
+    """Resolve (factory, version); highest version wins when unspecified."""
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown backend {name!r}; available: {sorted(_REGISTRY)}")
+    versions = _REGISTRY[name]
+    v = max(versions) if version is None else version
+    if v not in versions:
+        raise KeyError(f"backend {name!r} has no version {v}; "
+                       f"available: {sorted(versions)}")
+    return versions[v], v
+
+
+def default_backend_name() -> str:
+    import jax
+    return "pallas-tpu" if jax.default_backend() == "tpu" \
+        else "pallas-interpret"
+
+
+def lower(program, plan: Optional[BlockPlan] = None, *,
+          coeffs=None, backend: Optional[str] = None,
+          version: Optional[int] = None,
+          grid_shape=None) -> LoweredStencil:
+    """Lower a program (or legacy spec) through a registered backend.
+
+    ``plan`` defaults to the perf-model's pick (paper §V.A tuning loop) for
+    plan-driven backends; ``coeffs`` defaults to ``program.default_coeffs()``.
+    """
+    prog = as_program(program)
+    if coeffs is None:
+        c = prog.default_coeffs()
+    else:
+        c = normalize_coeffs(prog, coeffs)
+    name = backend or default_backend_name()
+    factory, v = get_backend(name, version)
+    if plan is None and name != "xla-reference":
+        plan = plan_blocking(prog, grid_shape=grid_shape).plan
+    lowered = factory(prog, plan, c)
+    lowered.backend_name = name
+    lowered.backend_version = v
+    return lowered

@@ -1,0 +1,26 @@
+"""xla-reference backend: the naive jnp oracle behind the registry interface.
+
+No blocking of any kind — boundary-pad the full grid, apply the tap-set
+update, repeat.  Semantically authoritative (it *is* the oracle the Pallas
+kernels are tested against) and runs anywhere XLA does.  A ``plan`` is
+accepted so ``superstep`` advances the same ``par_time`` steps as the Pallas
+backends, making lowered results directly comparable.
+"""
+
+from __future__ import annotations
+
+from repro.core import reference as ref
+from repro.backends.registry import LoweredStencil, register_backend
+
+
+@register_backend("xla-reference", version=1)
+def xla_reference(program, plan, coeffs) -> LoweredStencil:
+    par_time = plan.par_time if plan is not None else 1
+
+    def superstep_fn(grid, c):
+        return ref.program_nsteps_unrolled(program, c, grid, par_time)
+
+    def run_fn(grid, c, steps):
+        return ref.program_nsteps(program, c, grid, steps)
+
+    return LoweredStencil(program, plan, coeffs, superstep_fn, run_fn)

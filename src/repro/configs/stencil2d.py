@@ -2,7 +2,9 @@
 
 Shapes: the paper's single-device grid (~16k^2, Table III) plus a
 cluster-scale grid for the production mesh (per-chip share comparable to the
-paper's per-FPGA load).
+paper's per-FPGA load).  Workloads carry a ``StencilProgram`` (unified IR);
+the star entries reproduce the paper, the box/periodic entry exercises the
+shape/boundary generality through the identical pipeline.
 """
 
 from __future__ import annotations
@@ -10,13 +12,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Tuple
 
-from repro.core.spec import StencilSpec
+from repro.core.program import StencilProgram
 
 
 @dataclasses.dataclass(frozen=True)
 class StencilWorkload:
     name: str
-    spec: StencilSpec
+    spec: StencilProgram
     grid_shape: Tuple[int, ...]
     block_shape: Tuple[int, ...]
     par_time: int
@@ -25,7 +27,7 @@ class StencilWorkload:
 def workloads(radius: int = 4) -> Dict[str, StencilWorkload]:
     out = {}
     for rad in range(1, radius + 1):
-        spec = StencilSpec(ndim=2, radius=rad)
+        spec = StencilProgram(ndim=2, radius=rad)
         # paper-like single-chip grid (Table III uses 15680..16096 squared)
         out[f"2d_r{rad}_paper"] = StencilWorkload(
             name=f"2d_r{rad}_paper", spec=spec, grid_shape=(16384, 16384),
@@ -34,4 +36,11 @@ def workloads(radius: int = 4) -> Dict[str, StencilWorkload]:
         out[f"2d_r{rad}_pod"] = StencilWorkload(
             name=f"2d_r{rad}_pod", spec=spec, grid_shape=(65536, 65536),
             block_shape=(1024, 1024), par_time=max(1, 8 // rad))
+    # non-star coverage: 9-point box with periodic wrap (e.g. lattice
+    # Boltzmann / convolution-like workloads), same blocking machinery
+    out["2d_box_periodic_pod"] = StencilWorkload(
+        name="2d_box_periodic_pod",
+        spec=StencilProgram(ndim=2, radius=1, shape="box",
+                            boundary="periodic"),
+        grid_shape=(65536, 65536), block_shape=(1024, 1024), par_time=4)
     return out

@@ -5,7 +5,7 @@ from __future__ import annotations
 from typing import Dict
 
 from repro.configs.stencil2d import StencilWorkload
-from repro.core.spec import StencilSpec
+from repro.core.program import StencilProgram
 
 
 # §Perf hillclimb C: per-radius par_time from the measured sweep — per-step
@@ -17,7 +17,7 @@ _POD_PAR_TIME = {1: 8, 2: 4, 3: 3, 4: 3}
 def workloads(radius: int = 4) -> Dict[str, StencilWorkload]:
     out = {}
     for rad in range(1, radius + 1):
-        spec = StencilSpec(ndim=3, radius=rad)
+        spec = StencilProgram(ndim=3, radius=rad)
         # ~paper volume (696^3 ~= 3.4e8 cells) with mesh-divisible extents
         out[f"3d_r{rad}_paper"] = StencilWorkload(
             name=f"3d_r{rad}_paper", spec=spec, grid_shape=(512, 1024, 704),

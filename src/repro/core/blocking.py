@@ -22,6 +22,7 @@ import math
 from typing import Optional, Sequence, Tuple
 
 from repro.analysis.hw import TpuChip, V5E
+from repro.core.program import StencilProgram, as_program
 from repro.core.spec import StencilSpec
 
 SUBLANE = 8
@@ -32,9 +33,12 @@ LANE = 128
 class BlockPlan:
     """A concrete blocking configuration for the temporal-blocked kernel.
 
+    spec:        a ``StencilSpec`` (legacy) or ``StencilProgram``; halo and
+                 FLOP accounting are derived from its tap set.
     block_shape: the *output* tile each pallas grid step produces (csize).
     par_time:    time steps fused per HBM round trip.
-    halo:        par_time * radius (per side).
+    halo:        par_time * halo_radius (per side), where halo_radius is the
+                 max |offset| component over the tap set.
     """
 
     spec: StencilSpec
@@ -42,8 +46,12 @@ class BlockPlan:
     par_time: int
 
     @property
+    def program(self) -> StencilProgram:
+        return as_program(self.spec)
+
+    @property
     def halo(self) -> int:
-        return self.par_time * self.spec.radius
+        return self.par_time * self.program.halo_radius
 
     @property
     def padded_shape(self) -> Tuple[int, ...]:
@@ -74,12 +82,13 @@ class BlockPlan:
 
     def flops_per_block(self) -> int:
         """Sum over the shrinking valid regions of each fused time step."""
-        r = self.spec.radius
+        prog = self.program
+        r = prog.halo_radius
         total = 0
         for t in range(self.par_time):
             # region computed at step t has shape padded - 2*(t+1)*r
             sizes = [p - 2 * (t + 1) * r for p in self.padded_shape]
-            total += math.prod(sizes) * self.spec.flops_per_cell
+            total += math.prod(sizes) * prog.flops_per_cell
         return total
 
     def useful_cells_per_block(self) -> int:

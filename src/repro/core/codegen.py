@@ -4,89 +4,132 @@ The paper could not express radius-parametric boundary conditions efficiently in
 unrolled OpenCL loops, so they wrote a *code generator* that emits the clamped
 neighbor accesses into the kernel source (§III.B).  Under JAX tracing we get the
 same effect natively: these builders emit the exact set of shifted-slice reads
-for a given (ndim, radius) at trace time, producing straight-line HLO with no
-branches — the moral equivalent of their generated source.
+for a given tap set at trace time, producing straight-line HLO with no branches
+— the moral equivalent of their generated source.
+
+The emitter is driven by ``StencilProgram.neighbor_taps``: one static
+``lax.slice`` per tap, offset along every axis the tap displaces (star taps
+displace one axis; box/diamond taps may displace several).  Accumulation order
+is the canonical tap order and is never reassociated — for star programs this
+is bit-identical to the legacy hardcoded-direction emitter.
 
 Two flavors:
 
-* ``interior_update`` — assumes the input already carries a halo of >= radius
-  on every side (how kernels and the distributed stepper call it); produces an
-  output smaller by 2*radius per axis.  All slices are static.
-* ``clamped_update`` — full-grid update with clamp-to-edge boundary (paper
-  §IV.B), built as edge-pad + interior_update.
+* ``tap_interior_update`` — assumes the input already carries a halo of
+  >= halo_radius on every side (how kernels and the distributed stepper call
+  it); produces an output smaller by 2*halo_radius per axis.  All slices are
+  static.
+* ``program_update`` — full-grid update with the program's boundary mode,
+  built as boundary-pad + tap_interior_update.
+
+The legacy ``interior_update`` / ``clamped_update`` entry points survive as
+thin wrappers that lift ``StencilSpec``/``StencilCoeffs`` into the IR.
 """
 
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Sequence, Tuple
 
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.spec import StencilCoeffs, StencilSpec, axis_for_direction
+from repro.core.program import (ProgramCoeffs, StencilProgram, as_program,
+                                normalize_coeffs)
 
 Array = jnp.ndarray
 
+_PAD_MODE = {"clamp": "edge", "periodic": "wrap", "constant": "constant"}
 
-def _shifted_slice(a: Array, axis: int, offset: int, radius: int,
-                   out_sizes: Sequence[int]) -> Array:
-    """Static slice of ``a`` shifted by ``offset`` along ``axis``.
 
-    For every axis, the output region is [radius, radius + out_size); the
-    requested neighbor view starts at ``radius + offset`` along ``axis``.
+def boundary_pad(program: StencilProgram, grid: Array, pad_width) -> Array:
+    """Pad ``grid`` according to the program's boundary mode.
+
+    ``pad_width`` follows ``jnp.pad`` conventions (scalar, or per-axis
+    (lo, hi) pairs).  clamp -> edge replication (paper §IV.B), periodic ->
+    wraparound, constant -> ``program.boundary_value`` fill.
+    """
+    mode = _PAD_MODE[program.boundary]
+    if program.boundary == "constant":
+        return jnp.pad(grid, pad_width, mode=mode,
+                       constant_values=program.boundary_value)
+    return jnp.pad(grid, pad_width, mode=mode)
+
+
+def _tap_slice(a: Array, offset: Tuple[int, ...], margin: int,
+               out_sizes: Sequence[int]) -> Array:
+    """Static slice of ``a`` shifted by the tap ``offset``.
+
+    The output region is [margin, margin + out_size) per axis; the tap view
+    starts at ``margin + offset[ax]`` along each axis.
     """
     starts = []
     limits = []
     for ax, out_size in enumerate(out_sizes):
-        start = radius + (offset if ax == axis else 0)
+        start = margin + offset[ax]
         starts.append(start)
         limits.append(start + out_size)
     return lax.slice(a, starts, limits)
 
 
-def interior_update(spec: StencilSpec, coeffs: StencilCoeffs, a: Array) -> Array:
+def tap_interior_update(program: StencilProgram, coeffs: ProgramCoeffs,
+                        a: Array) -> Array:
     """One stencil application on the interior of a halo-carrying block.
 
-    a has shape (s_0 .. s_{n-1}); the result has shape (s_i - 2*radius).
-    Exactly ``spec.muls_per_cell`` multiplies and ``spec.adds_per_cell`` adds
-    per output cell, matching paper Table I (no coefficient sharing, no
-    floating-point reassociation beyond summation order, which we keep fixed:
-    center first, then directions in (W, E, S, N, B, A) order, distances
-    ascending — mirroring paper eq. 1).
+    ``a`` has shape (s_0 .. s_{n-1}); the result has shape
+    (s_i - 2*halo_radius).  Exactly ``program.num_neighbor_taps + 1``
+    multiplies and ``program.num_neighbor_taps`` adds per output cell
+    (paper Table I arithmetic for star/pertap), accumulated in canonical tap
+    order with no reassociation.
     """
-    r = spec.radius
+    r = program.halo_radius
     out_sizes = [s - 2 * r for s in a.shape]
     if any(s <= 0 for s in out_sizes):
-        raise ValueError(f"block {a.shape} too small for radius {r}")
+        raise ValueError(f"block {a.shape} too small for halo radius {r}")
 
-    center = _shifted_slice(a, axis=0, offset=0, radius=r, out_sizes=out_sizes)
-    acc = coeffs.center * center
-    for direction in range(spec.num_directions):
-        axis, sign = axis_for_direction(spec.ndim, direction)
-        for dist in range(1, r + 1):
-            c = coeffs.neighbors[direction, dist - 1]
-            acc = acc + c * _shifted_slice(a, axis, sign * dist, r, out_sizes)
+    zero = (0,) * program.ndim
+    acc = coeffs.center * _tap_slice(a, zero, r, out_sizes)
+    for k, off in enumerate(program.neighbor_taps):
+        acc = acc + coeffs.taps[k] * _tap_slice(a, off, r, out_sizes)
     return acc
 
 
-def clamped_update(spec: StencilSpec, coeffs: StencilCoeffs, grid: Array) -> Array:
-    """Full-grid stencil step with clamp-to-edge boundary (paper §IV.B)."""
-    r = spec.radius
-    padded = jnp.pad(grid, r, mode="edge")
-    return interior_update(spec, coeffs, padded)
+def program_update(program: StencilProgram, coeffs: ProgramCoeffs,
+                   grid: Array) -> Array:
+    """Full-grid stencil step honoring the program's boundary mode."""
+    padded = boundary_pad(program, grid, program.halo_radius)
+    return tap_interior_update(program, coeffs, padded)
 
 
-def multi_step_interior(spec: StencilSpec, coeffs: StencilCoeffs, a: Array,
-                        steps: int) -> Array:
+def multi_step_interior(program, coeffs, a: Array, steps: int) -> Array:
     """``steps`` stencil applications on a halo-carrying block.
 
-    Input must carry a halo of ``steps * radius`` per side; output shrinks by
-    ``2 * steps * radius`` per axis.  This is the *overlapped temporal
-    blocking* compute pattern (paper §III.A): the valid region shrinks by
-    ``radius`` per time step, and the shrinkage is the redundant-compute halo.
-    Python loop => fully unrolled straight-line code, the analogue of the
-    paper's chained PEs.
+    Input must carry a halo of ``steps * halo_radius`` per side; output
+    shrinks by ``2 * steps * halo_radius`` per axis.  This is the *overlapped
+    temporal blocking* compute pattern (paper §III.A): the valid region
+    shrinks by the halo radius per time step, and the shrinkage is the
+    redundant-compute halo.  Python loop => fully unrolled straight-line
+    code, the analogue of the paper's chained PEs.
     """
+    prog = as_program(program)
+    c = normalize_coeffs(prog, coeffs)
     for _ in range(steps):
-        a = interior_update(spec, coeffs, a)
+        a = tap_interior_update(prog, c, a)
     return a
+
+
+# ---- legacy StencilSpec entry points (deprecated aliases) ------------------
+
+def interior_update(spec, coeffs, a: Array) -> Array:
+    """Legacy star entry point; lifts (spec, StencilCoeffs) into the IR.
+
+    Identical arithmetic in identical order to the pre-IR emitter, so star
+    results are bit-for-bit unchanged.
+    """
+    prog = as_program(spec)
+    return tap_interior_update(prog, normalize_coeffs(prog, coeffs), a)
+
+
+def clamped_update(spec, coeffs, grid: Array) -> Array:
+    """Legacy full-grid clamp step (paper §IV.B)."""
+    prog = as_program(spec)
+    return program_update(prog, normalize_coeffs(prog, coeffs), grid)

@@ -1,0 +1,39 @@
+"""JAX API-drift shims (mesh/shard_map level).
+
+The repo targets a range of JAX versions; the distributed stack touches
+several APIs that moved between releases:
+
+* ``jax.sharding.AxisType`` + ``jax.make_mesh(..., axis_types=...)`` —
+  newer JAX only; older versions build the same (fully ``Auto``) mesh
+  without the kwarg.
+* ``jax.shard_map`` — top-level since 0.6 (with ``check_vma``); older
+  versions expose ``jax.experimental.shard_map.shard_map`` (with
+  ``check_rep``).
+
+Pallas-specific drift (``MemorySpace`` vs ``TPUMemorySpace``) is resolved in
+``repro.kernels.common`` next to the kernels that consume it.
+"""
+
+from __future__ import annotations
+
+import jax
+
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with all-Auto axis types where supported."""
+    if AxisType is not None:
+        return jax.make_mesh(axis_shapes, axis_names, devices=devices,
+                             axis_types=(AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` without replication checking, on any JAX version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)

@@ -2,21 +2,27 @@
 
 This lifts the paper's overlapped temporal blocking to the cluster level:
 instead of exchanging a radius-deep halo every time step (the naive
-distributed stencil), shards exchange a ``par_time * radius``-deep halo once
-per *superstep* — ``par_time`` time steps per ICI exchange.  The redundant
-halo compute is the same overlapped-blocking tax the paper pays between PEs;
-the win is a ``par_time``x reduction in collective count (and latency), which
-is exactly the paper's "one external-memory round trip per par_time steps"
-argument with HBM replaced by ICI.
+distributed stencil), shards exchange a ``par_time * halo_radius``-deep halo
+once per *superstep* — ``par_time`` time steps per ICI exchange.  The
+redundant halo compute is the same overlapped-blocking tax the paper pays
+between PEs; the win is a ``par_time``x reduction in collective count (and
+latency), which is exactly the paper's "one external-memory round trip per
+par_time steps" argument with HBM replaced by ICI.
+
+Halo depth *and* boundary synthesis are derived from the ``StencilProgram``:
+the exchange depth comes from the tap set (halo_radius), and the
+global-boundary halo is edge-replicated (clamp), wrapped around the mesh via
+a cyclic ppermute (periodic), or filled with the boundary value (constant).
 
 Mechanics (per superstep, inside shard_map):
   1. For each decomposed array axis, ``ppermute`` the h-deep boundary strips
-     to both neighbors.  The two permutes per axis are independent of each
-     other *and* of the block interior, so XLA's latency-hiding scheduler can
-     overlap them with local compute.
-  2. Shards at the global boundary synthesize their missing halo by edge
-     replication (clamp, paper §IV.B); the in-kernel fixup keeps the clamp
-     exact across fused time steps (see kernels/common.py).
+     to both neighbors — cyclically for periodic programs, so the wrap halo
+     travels the ICI ring instead of being synthesized locally.  The permutes
+     per axis are independent of each other *and* of the block interior, so
+     XLA's latency-hiding scheduler can overlap them with local compute.
+  2. Shards at the global boundary synthesize their missing halo per the
+     program's boundary mode; the in-kernel fixup keeps it exact across
+     fused time steps (see kernels/common.py).
   3. Run the single-chip temporal-blocked Pallas kernel on the haloed block,
      passing the shard's global origin so boundary fixup happens only at
      physical grid edges.
@@ -27,15 +33,18 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import partial
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import compat
 from repro.core.blocking import BlockPlan
-from repro.core.spec import StencilCoeffs, StencilSpec
+from repro.core.codegen import boundary_pad
+from repro.core.program import (ProgramCoeffs, StencilProgram, as_program,
+                                normalize_coeffs)
 from repro.kernels import common
 
 AxisNames = Tuple[str, ...]
@@ -49,34 +58,53 @@ def _repeat_edge(strip: jnp.ndarray, h: int, axis: int) -> jnp.ndarray:
 
 
 def exchange_halo(block: jnp.ndarray, axis: int, mesh_axes: AxisNames,
-                  h: int) -> jnp.ndarray:
+                  h: int, program: StencilProgram, n: int) -> jnp.ndarray:
     """Attach h-deep halos along ``axis``, sourced from mesh neighbors.
 
-    Returns block grown by 2h along ``axis``.  Global-edge shards get
-    clamp-replicated halos.
+    ``n`` is the (static) number of shards along ``mesh_axes`` — threaded in
+    from the mesh because the permutation tables must be built at trace time.
+    Returns block grown by 2h along ``axis``.  Global-edge shards get halos
+    synthesized per the program's boundary mode: clamp-replicated, wrapped
+    from the opposite end of the mesh (periodic — the ppermute ring closes),
+    or constant-filled.  With a single shard the whole halo is local
+    boundary padding.
     """
-    n = lax.axis_size(mesh_axes)
+    if n == 1:
+        pads = [(0, 0)] * block.ndim
+        pads[axis] = (h, h)
+        return boundary_pad(program, block, pads)
+
     idx = lax.axis_index(mesh_axes)
+    periodic = program.boundary == "periodic"
 
     size = block.shape[axis]
     lo = lax.slice_in_dim(block, 0, h, axis=axis)
     hi = lax.slice_in_dim(block, size - h, size, axis=axis)
 
-    if n > 1:
-        # Send my low strip "left" (to rank-1) so it becomes their high halo;
-        # send my high strip "right" (to rank+1) for their low halo.
+    # Send my low strip "left" (to rank-1) so it becomes their high halo;
+    # send my high strip "right" (to rank+1) for their low halo.  For
+    # periodic programs the ring closes: rank n-1 feeds rank 0.
+    if periodic:
+        fwd = [(i, (i + 1) % n) for i in range(n)]
+        bwd = [((i + 1) % n, i) for i in range(n)]
+    else:
         fwd = [(i, i + 1) for i in range(n - 1)]
         bwd = [(i + 1, i) for i in range(n - 1)]
-        from_left = lax.ppermute(hi, mesh_axes, fwd)   # my low halo
-        from_right = lax.ppermute(lo, mesh_axes, bwd)  # my high halo
-    else:
-        from_left = jnp.zeros_like(hi)
-        from_right = jnp.zeros_like(lo)
+    from_left = lax.ppermute(hi, mesh_axes, fwd)   # my low halo
+    from_right = lax.ppermute(lo, mesh_axes, bwd)  # my high halo
 
-    # Clamp at the global boundary: replicate own border cells.
-    edge_lo = _repeat_edge(lax.slice_in_dim(block, 0, 1, axis=axis), h, axis)
-    edge_hi = _repeat_edge(lax.slice_in_dim(block, size - 1, size, axis=axis),
-                           h, axis)
+    if periodic:
+        return jnp.concatenate([from_left, block, from_right], axis=axis)
+
+    # Synthesize the global-boundary halo locally.
+    if program.boundary == "constant":
+        edge_lo = jnp.full_like(lo, program.boundary_value)
+        edge_hi = jnp.full_like(hi, program.boundary_value)
+    else:  # clamp
+        edge_lo = _repeat_edge(lax.slice_in_dim(block, 0, 1, axis=axis), h,
+                               axis)
+        edge_hi = _repeat_edge(
+            lax.slice_in_dim(block, size - 1, size, axis=axis), h, axis)
     is_first = (idx == 0)
     is_last = (idx == n - 1)
     halo_lo = jnp.where(is_first, edge_lo, from_left)
@@ -103,12 +131,15 @@ class Decomposition:
             if self.partition[d] else 1
 
 
-def _local_superstep(block, center, neighbors, *, spec, plan, decomp,
-                     global_shape, interpret):
-    """shard_map body: halo exchange + local temporal-blocked kernel."""
+def _local_superstep(block, center, taps, *, program, plan, decomp,
+                     axis_shards, global_shape, interpret):
+    """shard_map body: halo exchange + local temporal-blocked kernel.
+
+    ``axis_shards[d]`` is the static shard count along grid axis d.
+    """
     h = plan.halo
     offsets = []
-    for d in range(spec.ndim):
+    for d in range(program.ndim):
         axes = decomp.partition[d]
         if axes:
             offsets.append(lax.axis_index(axes) * block.shape[d])
@@ -117,27 +148,32 @@ def _local_superstep(block, center, neighbors, *, spec, plan, decomp,
     offs = jnp.stack([jnp.asarray(o, jnp.int32) for o in offsets])
 
     haloed = block
-    for d in range(spec.ndim):
+    for d in range(program.ndim):
         axes = decomp.partition[d]
-        if axes and lax.axis_size(axes) > 1:
-            haloed = exchange_halo(haloed, d, axes, h)
+        if axes and axis_shards[d] > 1:
+            haloed = exchange_halo(haloed, d, axes, h, program,
+                                   axis_shards[d])
         else:
-            # Unsharded axis: plain edge padding provides the t=0 clamp halo.
-            pads = [(0, 0)] * spec.ndim
+            # Unsharded axis: plain boundary padding provides the t=0 halo.
+            pads = [(0, 0)] * program.ndim
             pads[d] = (h, h)
-            haloed = jnp.pad(haloed, pads, mode="edge")
+            haloed = boundary_pad(program, haloed, pads)
 
-    out = common.superstep_call(haloed, center, neighbors, spec, plan,
+    out = common.superstep_call(haloed, center, taps, program, plan,
                                 tuple(global_shape), interpret, offs)
     return out
 
 
 @dataclasses.dataclass
 class DistributedStencil:
-    """A stencil problem decomposed over a device mesh."""
+    """A stencil problem decomposed over a device mesh.
 
-    spec: StencilSpec
-    coeffs: StencilCoeffs
+    ``spec`` may be a legacy ``StencilSpec`` or a ``StencilProgram``; the
+    exchange depth and boundary synthesis follow the program.
+    """
+
+    spec: object
+    coeffs: object
     plan: BlockPlan
     mesh: Mesh
     decomp: Decomposition
@@ -147,7 +183,9 @@ class DistributedStencil:
     def __post_init__(self):
         if self.interpret is None:
             self.interpret = common.default_interpret()
-        for d in range(self.spec.ndim):
+        self.program = as_program(self.spec)
+        self.pcoeffs = normalize_coeffs(self.program, self.coeffs)
+        for d in range(self.program.ndim):
             n = self.decomp.shards(self.mesh, d)
             if self.global_shape[d] % n != 0:
                 raise ValueError(
@@ -167,22 +205,24 @@ class DistributedStencil:
         return NamedSharding(self.mesh, self.decomp.pspec())
 
     def superstep_fn(self):
-        """Returns a jit-able global-array -> global-array superstep."""
-        spec, plan, decomp = self.spec, self.plan, self.decomp
+        """Returns a jit-able (grid, center, taps) -> grid superstep."""
+        program, plan, decomp = self.program, self.plan, self.decomp
         gshape, interpret = self.global_shape, self.interpret
         pspec = decomp.pspec()
 
-        body = partial(_local_superstep, spec=spec, plan=plan, decomp=decomp,
+        shards = tuple(decomp.shards(self.mesh, d)
+                       for d in range(program.ndim))
+        body = partial(_local_superstep, program=program, plan=plan,
+                       decomp=decomp, axis_shards=shards,
                        global_shape=gshape, interpret=interpret)
-        mapped = jax.shard_map(
+        mapped = compat.shard_map(
             body, mesh=self.mesh,
             in_specs=(pspec, P(), P()),
             out_specs=pspec,
-            check_vma=False,
         )
 
-        def step(grid, center, neighbors):
-            return mapped(grid, center, neighbors)
+        def step(grid, center, taps):
+            return mapped(grid, center, taps)
 
         return step
 
@@ -190,9 +230,9 @@ class DistributedStencil:
         """Returns fn advancing ``supersteps * par_time`` time steps."""
         step = self.superstep_fn()
 
-        def run(grid, center, neighbors):
+        def run(grid, center, taps):
             def body(_, g):
-                return step(g, center, neighbors)
+                return step(g, center, taps)
             return lax.fori_loop(0, supersteps, body, grid)
 
         return run
@@ -201,11 +241,11 @@ class DistributedStencil:
 
     def superstep(self, grid):
         fn = jax.jit(self.superstep_fn())
-        return fn(grid, self.coeffs.center, self.coeffs.neighbors)
+        return fn(grid, self.pcoeffs.center, self.pcoeffs.taps)
 
     def run(self, grid, steps: int):
         if steps % self.plan.par_time:
             raise ValueError("steps must be a multiple of par_time; use the "
                              "single-chip engine for remainders")
         fn = jax.jit(self.run_fn(steps // self.plan.par_time))
-        return fn(grid, self.coeffs.center, self.coeffs.neighbors)
+        return fn(grid, self.pcoeffs.center, self.pcoeffs.taps)

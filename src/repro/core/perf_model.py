@@ -24,11 +24,14 @@ import dataclasses
 from typing import Optional, Sequence, Tuple
 
 from repro.analysis.hw import ARRIA10_DSPS
+from repro.core.program import StencilProgram
 from repro.core.spec import StencilSpec
 
 
 def flops_per_cell(ndim: int, rad: int) -> int:
-    return 2 * (2 * ndim) * rad + 1
+    """Paper Table I FLOP/cell, derived by enumerating the star tap set
+    (2*(2*ndim*rad) + 1 == 8*rad+1 in 2D, 12*rad+1 in 3D)."""
+    return StencilProgram(ndim=ndim, radius=rad, shape="star").flops_per_cell
 
 
 def bytes_per_cell() -> int:

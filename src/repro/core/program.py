@@ -1,0 +1,310 @@
+"""StencilProgram — the frontend IR generalizing ``StencilSpec``.
+
+The paper's contribution #2 is a *single* kernel whose stencil radius is a
+compile-time parameter.  ``StencilProgram`` pushes that one step further, the
+direction SASA (arXiv 2208.10770) and Stencil-HMLS (arXiv 2310.01914) take:
+the stencil is described as an explicit *tap set* — a list of integer offset
+vectors plus a coefficient for each — from which every downstream quantity is
+derived (halo depth, FLOP/cell, boundary handling, codegen slice reads).  One
+frontend description, many backends (see ``repro.backends``).
+
+Supported families (all radius-parametric, paper §III.B style):
+
+* shape ``star``     — taps on the axes only: ``±d·e_a`` for d=1..radius.
+                       2*ndim*radius neighbor taps (paper's stencil).
+* shape ``box``      — every offset with Chebyshev norm <= radius
+                       ((2r+1)^ndim - 1 neighbor taps).
+* shape ``diamond``  — every offset with L1 norm <= radius.
+
+Boundary modes (paper §IV.B implements only ``clamp``):
+
+* ``clamp``    — out-of-grid reads return the nearest border cell.
+* ``periodic`` — out-of-grid reads wrap around the grid.
+* ``constant`` — out-of-grid reads return ``boundary_value``.
+
+Coefficient sharing (paper §IV.A/§V.A):
+
+* ``pertap``   — one coefficient per tap, the paper's worst case (eq. 1).
+* ``distance`` — taps in the same distance shell share one coefficient; the
+                 FLOP accounting collapses the shared FMULs exactly as the
+                 paper describes for the symmetric-operator comparisons.
+
+Tap ordering is canonical and documented because summation order is part of
+the semantics (we never reassociate): for ``star`` the order matches the
+legacy ``StencilSpec`` kernels bit-for-bit — direction-major in
+(W, E, S, N[, B, A]) order with distances ascending within a direction; for
+``box``/``diamond`` taps are ordered by (shell distance, lexicographic
+offset).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+Offset = Tuple[int, ...]
+
+SHAPES = ("star", "box", "diamond")
+BOUNDARIES = ("clamp", "periodic", "constant")
+SHARING = ("pertap", "distance")
+
+# Grid axis ordering: arrays are (Y, X) for 2D and (Z, Y, X) for 3D; the
+# minor (lane) dimension is always X, mirroring the paper's vectorized x.
+
+
+@functools.lru_cache(maxsize=None)
+def _star_taps(ndim: int, radius: int) -> Tuple[Offset, ...]:
+    """Legacy StencilSpec order: (W, E, S, N[, B, A]) × distance ascending.
+
+    W/E move along X (last axis), S/N along Y, B/A along Z — the exact
+    accumulation order of the original star kernels, so star programs stay
+    bit-identical to the ``StencilSpec`` oracle.
+    """
+    last = ndim - 1
+    axes_signs = [(last, -1), (last, +1), (last - 1, -1), (last - 1, +1)]
+    if ndim == 3:
+        axes_signs += [(0, -1), (0, +1)]
+    taps = []
+    for axis, sign in axes_signs:
+        for dist in range(1, radius + 1):
+            off = [0] * ndim
+            off[axis] = sign * dist
+            taps.append(tuple(off))
+    return tuple(taps)
+
+
+def _shell_sorted(offsets, norm) -> Tuple[Offset, ...]:
+    return tuple(sorted(offsets, key=lambda o: (norm(o), o)))
+
+
+@functools.lru_cache(maxsize=None)
+def _box_taps(ndim: int, radius: int) -> Tuple[Offset, ...]:
+    rng = range(-radius, radius + 1)
+    if ndim == 2:
+        offs = [(y, x) for y in rng for x in rng if (y, x) != (0, 0)]
+    else:
+        offs = [(z, y, x) for z in rng for y in rng for x in rng
+                if (z, y, x) != (0, 0, 0)]
+    return _shell_sorted(offs, lambda o: max(abs(c) for c in o))
+
+
+@functools.lru_cache(maxsize=None)
+def _diamond_taps(ndim: int, radius: int) -> Tuple[Offset, ...]:
+    rng = range(-radius, radius + 1)
+    if ndim == 2:
+        offs = [(y, x) for y in rng for x in rng
+                if 0 < abs(y) + abs(x) <= radius]
+    else:
+        offs = [(z, y, x) for z in rng for y in rng for x in rng
+                if 0 < abs(z) + abs(y) + abs(x) <= radius]
+    return _shell_sorted(offs, lambda o: sum(abs(c) for c in o))
+
+
+_TAP_BUILDERS = {"star": _star_taps, "box": _box_taps, "diamond": _diamond_taps}
+
+
+def tap_distance(shape: str, off: Offset) -> int:
+    """Distance shell a tap belongs to (for ``distance`` coefficient sharing).
+
+    star/box group by Chebyshev shells, diamond by L1 shells — the natural
+    ring structure of each family (for star both norms coincide).
+    """
+    if shape == "diamond":
+        return sum(abs(c) for c in off)
+    return max(abs(c) for c in off)
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilProgram:
+    """Shape/boundary-parametric stencil description (frontend IR).
+
+    Attributes:
+      ndim:           2 or 3.
+      radius:         stencil radius/order (paper studies 1..4).
+      shape:          "star" | "box" | "diamond".
+      boundary:       "clamp" | "periodic" | "constant".
+      boundary_value: out-of-grid read value for ``constant`` boundary.
+      coeff_sharing:  "pertap" (paper eq. 1 worst case) | "distance".
+      dtype:          element dtype (paper uses float32).
+    """
+
+    ndim: int
+    radius: int
+    shape: str = "star"
+    boundary: str = "clamp"
+    boundary_value: float = 0.0
+    coeff_sharing: str = "pertap"
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.ndim not in (2, 3):
+            raise ValueError(f"ndim must be 2 or 3, got {self.ndim}")
+        if self.radius < 1:
+            raise ValueError(f"radius must be >= 1, got {self.radius}")
+        if self.shape not in SHAPES:
+            raise ValueError(f"shape must be one of {SHAPES}, got {self.shape}")
+        if self.boundary not in BOUNDARIES:
+            raise ValueError(
+                f"boundary must be one of {BOUNDARIES}, got {self.boundary}")
+        if self.coeff_sharing not in SHARING:
+            raise ValueError(
+                f"coeff_sharing must be one of {SHARING}, got"
+                f" {self.coeff_sharing}")
+
+    @classmethod
+    def from_spec(cls, spec) -> "StencilProgram":
+        """Lift a legacy ``StencilSpec`` (star + clamp) into the IR."""
+        return cls(ndim=spec.ndim, radius=spec.radius, shape="star",
+                   boundary=getattr(spec, "boundary", "clamp"),
+                   dtype=spec.dtype)
+
+    # ---- tap set -----------------------------------------------------------
+
+    @property
+    def neighbor_taps(self) -> Tuple[Offset, ...]:
+        """Canonically ordered non-center taps (see module docstring)."""
+        return _TAP_BUILDERS[self.shape](self.ndim, self.radius)
+
+    @property
+    def num_neighbor_taps(self) -> int:
+        return len(self.neighbor_taps)
+
+    @property
+    def num_taps(self) -> int:
+        return self.num_neighbor_taps + 1
+
+    @property
+    def tap_groups(self) -> Tuple[int, ...]:
+        """Per-tap distance-shell index (0-based), for coefficient sharing."""
+        return tuple(tap_distance(self.shape, o) - 1
+                     for o in self.neighbor_taps)
+
+    @property
+    def num_shells(self) -> int:
+        return max(self.tap_groups) + 1 if self.neighbor_taps else 0
+
+    @property
+    def halo_radius(self) -> int:
+        """Per-axis halo depth one application needs — max |offset| component
+        over the tap set (== radius for all three families)."""
+        return max(max(abs(c) for c in o) for o in self.neighbor_taps)
+
+    # ---- paper Table I style characteristics, derived from the tap set -----
+
+    @property
+    def muls_per_cell(self) -> int:
+        return self.num_neighbor_taps + 1
+
+    @property
+    def adds_per_cell(self) -> int:
+        return self.num_neighbor_taps
+
+    @property
+    def flops_per_cell(self) -> int:
+        """MUL + ADD per cell update as the emitter *executes* it — one
+        multiply and one accumulate per tap, regardless of coefficient
+        sharing (codegen expands shared shells to the full tap vector, like
+        the paper's kernels, which share only the coefficient *storage*).
+        The perf model must use this count.
+
+        For star this reproduces paper Table I exactly:
+        2*(2*ndim*rad) + 1 = 8*rad+1 (2D) / 12*rad+1 (3D).
+        """
+        return self.muls_per_cell + self.adds_per_cell
+
+    @property
+    def flops_per_cell_shared(self) -> int:
+        """Accounting FLOPs if a backend *did* collapse shared-shell FMULs
+        (paper §IV.A: pre-sum each shell, then one multiply per shell):
+        num_taps adds + (num_shells + 1) muls.  Informational — the paper
+        notes this saves only DSP multipliers on the FPGA; no backend here
+        exploits it."""
+        return self.num_neighbor_taps + self.num_shells + 1
+
+    @property
+    def bytes_per_cell(self) -> int:
+        """One read + one write at full on-chip reuse (paper Table I)."""
+        return 2 * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def flop_per_byte(self) -> float:
+        return self.flops_per_cell / self.bytes_per_cell
+
+    # ---- coefficients ------------------------------------------------------
+
+    def default_coeffs(self, seed: int = 0) -> "ProgramCoeffs":
+        """Per-tap coefficients scaled so the operator is an average
+        (|coeffs| sum to 1) — constant grids are fixed points and long runs
+        stay bounded.
+
+        For ``star``/``pertap`` the draw reproduces the legacy
+        ``StencilSpec.default_coeffs(seed)`` values element-for-element
+        (same RNG stream, same (direction, distance)-major layout), keeping
+        star programs bit-identical to the old oracle.
+        """
+        rng = np.random.RandomState(seed)
+        n = self.num_neighbor_taps
+        if self.coeff_sharing == "distance":
+            shell = rng.uniform(0.2, 1.0,
+                                size=(self.num_shells,)).astype(self.dtype)
+            raw = shell[np.asarray(self.tap_groups)]
+        elif self.shape == "star":
+            # legacy draw shape: (2*ndim, radius), direction-major flatten
+            raw = rng.uniform(0.2, 1.0, size=(2 * self.ndim, self.radius))
+            raw = raw.astype(self.dtype).ravel()
+        else:
+            raw = rng.uniform(0.2, 1.0, size=(n,)).astype(self.dtype)
+        raw = raw / (2.0 * raw.sum())
+        center = np.asarray(0.5, dtype=self.dtype)
+        return ProgramCoeffs(center=jnp.asarray(center), taps=jnp.asarray(raw))
+
+    def coeffs_from_legacy(self, legacy) -> "ProgramCoeffs":
+        """Convert legacy ``StencilCoeffs`` (directions × radius) to tap
+        order.  Only meaningful for star programs, where the canonical tap
+        order is exactly the direction-major flatten of the legacy layout."""
+        if self.shape != "star":
+            raise ValueError("legacy StencilCoeffs only describe star taps")
+        return ProgramCoeffs(center=legacy.center,
+                             taps=legacy.neighbors.reshape(-1))
+
+    def coeffs_from_shells(self, center, shell_values) -> "ProgramCoeffs":
+        """Expand per-shell coefficients to the full tap vector."""
+        shell_values = jnp.asarray(shell_values)
+        idx = jnp.asarray(self.tap_groups, dtype=jnp.int32)
+        return ProgramCoeffs(center=jnp.asarray(center),
+                             taps=shell_values[idx])
+
+
+@dataclasses.dataclass
+class ProgramCoeffs:
+    """Runtime coefficients for a program: ``taps[k]`` pairs with
+    ``program.neighbor_taps[k]``; ``center`` is the (0,…,0) tap."""
+
+    center: Array
+    taps: Array
+
+    def astype(self, dtype) -> "ProgramCoeffs":
+        return ProgramCoeffs(self.center.astype(dtype),
+                             self.taps.astype(dtype))
+
+    def as_tuple(self) -> Tuple[Array, Array]:
+        return (self.center, self.taps)
+
+
+def as_program(spec_or_program) -> StencilProgram:
+    """Normalize a ``StencilSpec`` or ``StencilProgram`` to a program."""
+    if isinstance(spec_or_program, StencilProgram):
+        return spec_or_program
+    return StencilProgram.from_spec(spec_or_program)
+
+
+def normalize_coeffs(program: StencilProgram, coeffs) -> ProgramCoeffs:
+    """Normalize legacy ``StencilCoeffs`` or ``ProgramCoeffs`` to tap order."""
+    if isinstance(coeffs, ProgramCoeffs):
+        return coeffs
+    return program.coeffs_from_legacy(coeffs)

@@ -1,46 +1,139 @@
-"""Pure-jnp reference stencils — the oracle every kernel is validated against.
+"""Reference stencils — the oracles every backend is validated against.
 
-``stencil_step`` / ``stencil_nsteps`` are deliberately naive: edge-pad the whole
-grid, apply the shifted-slice update, repeat.  No blocking of any kind — this is
-the semantic ground truth for (a) the Pallas kernels (interpret-mode allclose),
-(b) the temporal-blocking driver, and (c) the distributed halo-exchange stepper.
+Two independent oracles:
+
+* ``program_step`` / ``program_nsteps`` — pure-jnp, deliberately naive:
+  boundary-pad the whole grid, apply the tap-set update, repeat.  No blocking
+  of any kind.  For star+clamp these are bit-identical to the historical
+  ``stencil_step``/``stencil_nsteps`` oracle (same taps, same order, same
+  pad+slice mechanism), which survive as thin wrappers.
+* ``numpy_program_nsteps`` — pure-numpy, float64, *gather-based*: neighbor
+  reads are materialized via index arithmetic (clip / modulo / validity
+  masks) per boundary mode rather than pad+slice, so it shares no code path
+  or mechanism with the jnp oracle.  This is the ground truth for the new
+  shapes (box/diamond) and boundaries (periodic/constant) the Pallas
+  backends now support.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
-from repro.core.codegen import clamped_update
-from repro.core.spec import StencilCoeffs, StencilSpec
+from repro.core.codegen import program_update
+from repro.core.program import (ProgramCoeffs, StencilProgram, as_program,
+                                normalize_coeffs)
+from repro.core.spec import StencilCoeffs, StencilSpec  # noqa: F401
 
 Array = jnp.ndarray
 
 
-def stencil_step(spec: StencilSpec, coeffs: StencilCoeffs, grid: Array) -> Array:
-    """One time step with clamp boundary; output shape == input shape."""
-    return clamped_update(spec, coeffs, grid)
+# ---- jnp oracle ------------------------------------------------------------
+
+def program_step(program: StencilProgram, coeffs: ProgramCoeffs,
+                 grid: Array) -> Array:
+    """One time step with the program's boundary; output shape == input."""
+    return program_update(program, coeffs, grid)
 
 
-def stencil_nsteps(spec: StencilSpec, coeffs: StencilCoeffs, grid: Array,
-                   steps: int) -> Array:
-    """``steps`` time steps, the straightforward iteration (paper eq. 3 loop)."""
+def program_nsteps(program: StencilProgram, coeffs: ProgramCoeffs,
+                   grid: Array, steps: int) -> Array:
+    """``steps`` time steps, the straightforward iteration (paper eq. 3)."""
 
     def body(_, g):
-        return stencil_step(spec, coeffs, g)
+        return program_step(program, coeffs, g)
 
     return lax.fori_loop(0, steps, body, grid)
 
 
-def stencil_nsteps_unrolled(spec: StencilSpec, coeffs: StencilCoeffs,
+def program_nsteps_unrolled(program: StencilProgram, coeffs: ProgramCoeffs,
                             grid: Array, steps: int) -> Array:
-    """Python-unrolled variant (identical math; useful for small oracle runs)."""
+    """Python-unrolled variant (identical math; useful for small oracles)."""
     for _ in range(steps):
-        grid = stencil_step(spec, coeffs, grid)
+        grid = program_step(program, coeffs, grid)
     return grid
 
 
-def random_grid(spec: StencilSpec, shape, seed: int = 0) -> Array:
+# ---- legacy star+clamp wrappers (bit-identical to the historical oracle) ---
+
+def stencil_step(spec, coeffs, grid: Array) -> Array:
+    """One time step with clamp boundary; output shape == input shape."""
+    prog = as_program(spec)
+    return program_step(prog, normalize_coeffs(prog, coeffs), grid)
+
+
+def stencil_nsteps(spec, coeffs, grid: Array, steps: int) -> Array:
+    """``steps`` time steps, the straightforward iteration (paper eq. 3)."""
+    prog = as_program(spec)
+    return program_nsteps(prog, normalize_coeffs(prog, coeffs), grid, steps)
+
+
+def stencil_nsteps_unrolled(spec, coeffs, grid: Array, steps: int) -> Array:
+    """Python-unrolled variant (identical math; useful for small oracles)."""
+    prog = as_program(spec)
+    return program_nsteps_unrolled(prog, normalize_coeffs(prog, coeffs),
+                                   grid, steps)
+
+
+def random_grid(spec, shape, seed: int = 0) -> Array:
     key = jax.random.PRNGKey(seed)
-    return jax.random.uniform(key, shape, dtype=spec.dtype, minval=-1.0, maxval=1.0)
+    return jax.random.uniform(key, shape, dtype=spec.dtype, minval=-1.0,
+                              maxval=1.0)
+
+
+# ---- numpy oracle (independent implementation) -----------------------------
+
+def _np_neighbor(g: np.ndarray, off, boundary: str, value: float):
+    """Gather the ``off``-shifted neighbor field of ``g`` under a boundary.
+
+    Index-arithmetic based: per displaced axis, build the source index
+    vector (clipped for clamp, wrapped for periodic, masked for constant)
+    and ``np.take`` along that axis.  Out-of-domain reads under ``constant``
+    are overwritten with ``value`` at the end.
+    """
+    out = g
+    valid = None
+    for ax, o in enumerate(off):
+        if o == 0:
+            continue
+        n = g.shape[ax]
+        idx = np.arange(n) + o
+        if boundary == "periodic":
+            idx = idx % n
+        elif boundary == "clamp":
+            idx = np.clip(idx, 0, n - 1)
+        else:  # constant
+            bad = (idx < 0) | (idx >= n)
+            idx = np.clip(idx, 0, n - 1)
+            bshape = [1] * g.ndim
+            bshape[ax] = n
+            bad = bad.reshape(bshape)
+            valid = ~bad if valid is None else (valid & ~bad)
+        out = np.take(out, idx, axis=ax)
+    if boundary == "constant" and valid is not None:
+        out = np.where(valid, out, np.asarray(value, dtype=out.dtype))
+    return out
+
+
+def numpy_program_step(program: StencilProgram, coeffs, grid) -> np.ndarray:
+    """One stencil step in float64 numpy, gather-based (see module doc)."""
+    prog = as_program(program)
+    c = normalize_coeffs(prog, coeffs)
+    g = np.asarray(grid, dtype=np.float64)
+    center = float(np.asarray(c.center))
+    taps = np.asarray(c.taps, dtype=np.float64)
+    acc = center * g
+    for k, off in enumerate(prog.neighbor_taps):
+        acc = acc + taps[k] * _np_neighbor(g, off, prog.boundary,
+                                           prog.boundary_value)
+    return acc
+
+
+def numpy_program_nsteps(program: StencilProgram, coeffs, grid,
+                         steps: int) -> np.ndarray:
+    g = np.asarray(grid, dtype=np.float64)
+    for _ in range(steps):
+        g = numpy_program_step(program, coeffs, g)
+    return g

@@ -1,5 +1,10 @@
 """Stencil specification — the paper's parameterized-radius star stencil.
 
+DEPRECATED in favor of :mod:`repro.core.program`: ``StencilSpec`` survives
+as a thin alias for the star-shaped subset of ``StencilProgram`` (see
+DESIGN.md §5 for the migration note); its Table I characteristics are now
+*derived* from the program's tap set.
+
 The paper's contribution #2 is a *single* kernel whose stencil radius is a
 compile-time parameter.  ``StencilSpec`` is the JAX analogue: radius (and
 dimensionality) are Python-level static fields, so one traced kernel body
@@ -30,6 +35,8 @@ from typing import Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.program import ProgramCoeffs, StencilProgram  # noqa: F401
+
 Array = jnp.ndarray
 
 # Axis ordering: arrays are (Y, X) for 2D and (Z, Y, X) for 3D.  The minor
@@ -40,12 +47,17 @@ Array = jnp.ndarray
 class StencilSpec:
     """Static description of a star-shaped stencil.
 
+    DEPRECATED alias: ``StencilSpec`` survives as the star-shaped subset of
+    :class:`repro.core.program.StencilProgram`; every characteristic below is
+    derived from the program's tap set via :meth:`to_program`.  New code
+    should construct a ``StencilProgram`` directly.
+
     Attributes:
       ndim:    2 or 3.
       radius:  stencil radius/order (paper studies 1..4; any value >= 1 works).
       dtype:   element dtype (paper uses float32).
-      boundary: only "clamp" is supported — out-of-bound neighbors fall back
-        on the border cell, the paper's boundary condition (§IV.B).
+      boundary: boundary mode ("clamp" | "periodic" | "constant"); the paper
+        implements clamp (§IV.B), the default.
     """
 
     ndim: int
@@ -58,19 +70,30 @@ class StencilSpec:
             raise ValueError(f"ndim must be 2 or 3, got {self.ndim}")
         if self.radius < 1:
             raise ValueError(f"radius must be >= 1, got {self.radius}")
-        if self.boundary != "clamp":
-            raise ValueError("only clamp (paper) boundary is implemented")
+        # Validate through the IR (accepts clamp/periodic/constant).
+        self.to_program()
 
-    # ---- paper Table I characteristics ------------------------------------
+    def to_program(self) -> StencilProgram:
+        """Lift into the unified IR (star taps, this spec's boundary)."""
+        return StencilProgram(ndim=self.ndim, radius=self.radius,
+                              shape="star", boundary=self.boundary,
+                              dtype=self.dtype)
+
+    # ---- paper Table I characteristics (derived from the tap set) ----------
 
     @property
     def num_directions(self) -> int:
         return 2 * self.ndim
 
     @property
+    def halo_radius(self) -> int:
+        return self.to_program().halo_radius
+
+    @property
     def flops_per_cell(self) -> int:
-        """8*rad+1 (2D) or 12*rad+1 (3D) — paper Table I."""
-        return 2 * self.num_directions * self.radius + 1
+        """8*rad+1 (2D) or 12*rad+1 (3D) — paper Table I, counted by
+        enumerating the star tap set."""
+        return self.to_program().flops_per_cell
 
     @property
     def flops_per_cell_shared(self) -> int:
@@ -80,21 +103,20 @@ class StencilSpec:
         rad accumulation adds and the center mul:
         FLOP = (2*ndim+1)*rad + 1.  The paper notes this saves only FMULs on
         the FPGA (one DSP per cell update, since FADDs still occupy DSPs)."""
-        return (self.num_directions + 1) * self.radius + 1
+        return self.to_program().flops_per_cell_shared
 
     @property
     def muls_per_cell(self) -> int:
-        return self.num_directions * self.radius + 1
+        return self.to_program().muls_per_cell
 
     @property
     def adds_per_cell(self) -> int:
-        return self.num_directions * self.radius
+        return self.to_program().adds_per_cell
 
     @property
     def bytes_per_cell(self) -> int:
         """One read + one write at full on-chip reuse (paper Table I)."""
-        itemsize = jnp.dtype(self.dtype).itemsize
-        return 2 * itemsize
+        return self.to_program().bytes_per_cell
 
     @property
     def flop_per_byte(self) -> float:

@@ -1,7 +1,8 @@
 """Temporal-blocking engine: planning + execution for a single chip.
 
-``StencilEngine`` bundles a spec, coefficients, and a blocking plan chosen by
-the performance model (paper §V.A's tuning loop) and exposes:
+``StencilEngine`` bundles a program (or legacy spec), coefficients, and a
+blocking plan chosen by the performance model (paper §V.A's tuning loop),
+lowers through the backend registry (``repro.backends``), and exposes:
 
 * ``superstep(grid)``  — advance ``par_time`` steps, one HBM round trip
 * ``run(grid, steps)`` — arbitrary step counts (chained supersteps)
@@ -17,37 +18,58 @@ import jax.numpy as jnp
 
 from repro.analysis.hw import TpuChip, V5E
 from repro.core.blocking import BlockPlan, PlanEstimate, estimate, plan_blocking
-from repro.core.spec import StencilCoeffs, StencilSpec
+from repro.core.program import as_program
 from repro.kernels import ops
 
 
 @dataclasses.dataclass
 class StencilEngine:
-    spec: StencilSpec
-    coeffs: StencilCoeffs
+    """Planning + execution bundle.
+
+    ``spec`` may be a legacy ``StencilSpec`` or a ``StencilProgram``;
+    ``coeffs`` the matching ``StencilCoeffs``/``ProgramCoeffs`` (the kernels
+    normalize either into canonical tap order).  ``backend`` optionally pins
+    a registry backend name; None keeps the direct Pallas dispatch with
+    ``interpret`` auto-detection.
+    """
+
+    spec: object
+    coeffs: object
     plan: BlockPlan
     hw: TpuChip = V5E
     interpret: Optional[bool] = None
+    backend: Optional[str] = None
 
     @classmethod
-    def create(cls, spec: StencilSpec, grid_shape: Tuple[int, ...],
-               coeffs: Optional[StencilCoeffs] = None,
-               hw: TpuChip = V5E, plan: Optional[BlockPlan] = None,
+    def create(cls, spec, grid_shape: Tuple[int, ...],
+               coeffs=None, hw: TpuChip = V5E,
+               plan: Optional[BlockPlan] = None,
                max_par_time: int = 64,
-               interpret: Optional[bool] = None) -> "StencilEngine":
+               interpret: Optional[bool] = None,
+               backend: Optional[str] = None) -> "StencilEngine":
         if coeffs is None:
             coeffs = spec.default_coeffs()
         if plan is None:
             plan = plan_blocking(spec, hw, grid_shape,
                                  max_par_time=max_par_time).plan
         return cls(spec=spec, coeffs=coeffs, plan=plan, hw=hw,
-                   interpret=interpret)
+                   interpret=interpret, backend=backend)
+
+    def lowered(self):
+        """Lower through the backend registry (pins ``backend`` if set)."""
+        from repro.backends import lower
+        return lower(as_program(self.spec), self.plan, coeffs=self.coeffs,
+                     backend=self.backend)
 
     def superstep(self, grid: jnp.ndarray) -> jnp.ndarray:
+        if self.backend is not None:
+            return self.lowered().superstep(grid)
         return ops.stencil_superstep(grid, self.spec, self.coeffs, self.plan,
                                      interpret=self.interpret)
 
     def run(self, grid: jnp.ndarray, steps: int) -> jnp.ndarray:
+        if self.backend is not None:
+            return self.lowered().run(grid, steps)
         return ops.stencil_run(grid, self.spec, self.coeffs, self.plan, steps,
                                interpret=self.interpret)
 

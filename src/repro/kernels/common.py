@@ -2,24 +2,35 @@
 
 TPU-native design (see DESIGN.md §2 for the FPGA -> TPU map):
 
-* The input grid lives in HBM (``MemorySpace.ANY``); each pallas grid step
+* The input grid lives in HBM (``ANY`` memory space); each pallas grid step
   DMAs one *halo-extended* block into a VMEM scratch buffer — the analogue of
   the paper's shift-register fill.  Halo'd input windows overlap, which Blocked
   BlockSpecs cannot express, hence the manual ``make_async_copy``.
 * ``par_time`` stencil applications run back-to-back on the VMEM-resident
   block (the paper's chained PEs), each shrinking the valid region by
-  ``radius`` — overlapped temporal blocking, eq. 2.
-* After each fused step, out-of-grid positions are re-clamped to the border
-  cell value (paper §III.B's generated boundary conditions).  Without this
-  fixup, pre-padded halos go stale after one step and orders >= 1 diverge at
-  the boundary for par_time >= 2.
+  ``halo_radius`` — overlapped temporal blocking, eq. 2.
+* After each fused step, out-of-grid positions are re-fixed according to the
+  program's boundary mode (paper §III.B's generated boundary conditions):
+  clamp re-reads the border cell, constant re-fills the boundary value, and
+  periodic needs no fixup at all — a wrap-filled halo holds exact values of
+  the periodic extension, which evolves under the same stencil as the grid.
+  Without the clamp/constant fixup, pre-padded halos go stale after one step
+  and orders >= 1 diverge at the boundary for par_time >= 2.
 * The output block is written through a regular Blocked BlockSpec — output
   tiles never overlap.
+
+The kernel bodies are generated from a :class:`StencilProgram` tap set —
+star/box/diamond all lower through the same emitter (codegen.py).
+
+Pallas API drift shim: ``pltpu.MemorySpace`` (new) vs ``pltpu.TPUMemorySpace``
+(old) are resolved at import time; both expose the same ANY/VMEM/SMEM members
+and scratch constructors, so the kernels run on either JAX generation.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 from typing import Tuple
 
 import jax
@@ -29,25 +40,48 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.blocking import BlockPlan
-from repro.core.codegen import interior_update
-from repro.core.spec import StencilCoeffs, StencilSpec
+from repro.core.codegen import tap_interior_update
+from repro.core.program import ProgramCoeffs, StencilProgram
+
+# ---- Pallas API drift shim -------------------------------------------------
+# jax >= 0.5 renamed ``TPUMemorySpace`` to ``MemorySpace`` (and kept the
+# enum members).  Resolve once; everything below uses the resolved name.
+
+MemorySpace = getattr(pltpu, "MemorySpace", None) \
+    or getattr(pltpu, "TPUMemorySpace")
+
+#: VMEM scratch constructor — ``vmem_scratch(shape, dtype)``.
+vmem_scratch = pltpu.VMEM
+
+#: DMA semaphore scratch type.
+dma_semaphore = pltpu.SemaphoreType.DMA
 
 
-def clamp_fixup(cur: jnp.ndarray, starts, true_shape: Tuple[int, ...]):
-    """Restore clamp-to-edge semantics on out-of-grid positions.
+def boundary_fixup(program: StencilProgram, cur: jnp.ndarray, starts,
+                   true_shape: Tuple[int, ...]):
+    """Restore boundary semantics on out-of-grid positions between fused steps.
 
     ``starts[d]`` is the (traced) global coordinate of ``cur``'s origin along
-    axis d; positions outside [0, true_shape[d]) are overwritten with the
-    value at the clamped border coordinate, so the next fused time step reads
-    correct boundary values.  For fully-interior blocks every select is a
-    no-op.
+    axis d; positions outside [0, true_shape[d]) are overwritten according to
+    the program's boundary mode so the next fused time step reads correct
+    halo values.  For fully-interior blocks every select is a no-op.
+
+    periodic: no-op by construction — the halo was wrap-filled with the
+    periodic extension, and the extension evolves under the same update as
+    the grid, so it never goes stale.
     """
+    if program.boundary == "periodic":
+        return cur
     for d in range(cur.ndim):
         size = cur.shape[d]
         n = true_shape[d]
         pos = starts[d] + lax.broadcasted_iota(jnp.int32, cur.shape, d)
-        # Border-cell slabs (1-wide along axis d), indices clipped into range
-        # so dynamic_slice never reads out of the buffer.
+        if program.boundary == "constant":
+            fill = jnp.asarray(program.boundary_value, cur.dtype)
+            cur = jnp.where((pos < 0) | (pos > n - 1), fill, cur)
+            continue
+        # clamp: border-cell slabs (1-wide along axis d), indices clipped
+        # into range so dynamic_slice never reads out of the buffer.
         left_idx = jnp.clip(-starts[d], 0, size - 1)
         right_idx = jnp.clip((n - 1) - starts[d], 0, size - 1)
         left = lax.dynamic_slice_in_dim(cur, left_idx, 1, axis=d)
@@ -57,23 +91,39 @@ def clamp_fixup(cur: jnp.ndarray, starts, true_shape: Tuple[int, ...]):
     return cur
 
 
-def build_superstep_kernel(spec: StencilSpec, plan: BlockPlan,
+def _fused_steps(program: StencilProgram, plan: BlockPlan, coeffs, buf,
+                 pids, offs_ref, true_shape):
+    """Run ``par_time`` tap-set applications on a VMEM-resident block."""
+    ndim = program.ndim
+    block = plan.block_shape
+    halo = plan.halo
+    r = program.halo_radius
+    T = plan.par_time
+    cur = buf
+    for t in range(1, T + 1):
+        cur = tap_interior_update(program, coeffs, cur)
+        if t < T:
+            starts = tuple(
+                offs_ref[d] + pids[d] * block[d] - halo + t * r
+                for d in range(ndim))
+            cur = boundary_fixup(program, cur, starts, true_shape)
+    return cur
+
+
+def build_superstep_kernel(program: StencilProgram, plan: BlockPlan,
                            true_shape: Tuple[int, ...]):
     """Returns the pallas kernel body for one superstep (par_time fused steps).
 
     ``true_shape`` is the *global* grid shape; the ``offs`` input carries this
-    shard's global origin (all zeros on a single device), so clamp fixup
+    shard's global origin (all zeros on a single device), so boundary fixup
     happens exactly at the physical grid boundary even under domain
     decomposition.
     """
-    ndim = spec.ndim
+    ndim = program.ndim
     block = plan.block_shape
     padded_block = plan.padded_shape
-    halo = plan.halo
-    r = spec.radius
-    T = plan.par_time
 
-    def kernel(offs_ref, c_ref, n_ref, in_ref, o_ref, buf_ref, sem):
+    def kernel(offs_ref, c_ref, t_ref, in_ref, o_ref, buf_ref, sem):
         pids = [pl.program_id(d) for d in range(ndim)]
         window = tuple(
             pl.ds(pids[d] * block[d], padded_block[d]) for d in range(ndim))
@@ -81,35 +131,25 @@ def build_superstep_kernel(spec: StencilSpec, plan: BlockPlan,
         cp.start()
         cp.wait()
 
-        coeffs = StencilCoeffs(center=c_ref[0, 0], neighbors=n_ref[...])
-        cur = buf_ref[...]
-        for t in range(1, T + 1):
-            cur = interior_update(spec, coeffs, cur)
-            if t < T:
-                starts = tuple(
-                    offs_ref[d] + pids[d] * block[d] - halo + t * r
-                    for d in range(ndim))
-                cur = clamp_fixup(cur, starts, true_shape)
-        o_ref[...] = cur
+        coeffs = ProgramCoeffs(center=c_ref[0, 0], taps=t_ref[...][0])
+        o_ref[...] = _fused_steps(program, plan, coeffs, buf_ref[...], pids,
+                                  offs_ref, true_shape)
 
     return kernel
 
 
-def build_pipelined_kernel(spec: StencilSpec, plan: BlockPlan,
-                           true_shape: Tuple[int, ...], grid: Tuple[int, ...]):
+def build_pipelined_kernel(program: StencilProgram, plan: BlockPlan,
+                           true_shape: Tuple[int, ...],
+                           grid: Tuple[int, ...]):
     """Double-buffered variant: the DMA for block g+1 is issued before block
     g's compute — the TPU-native analogue of the paper's deep pipeline
     (their PEs consume a stream while the next block fills the shift
     register).  Two VMEM buffers + two DMA semaphores alternate by grid
     parity; scratch persists across sequential grid steps on a TPU core.
     """
-    ndim = spec.ndim
+    ndim = program.ndim
     block = plan.block_shape
     padded_block = plan.padded_shape
-    halo = plan.halo
-    r = spec.radius
-    T = plan.par_time
-    import math
     total = math.prod(grid)
 
     def _coords(lin):
@@ -120,7 +160,7 @@ def build_pipelined_kernel(spec: StencilSpec, plan: BlockPlan,
             rem = rem // grid[d]
         return tuple(reversed(idx))
 
-    def kernel(offs_ref, c_ref, n_ref, in_ref, o_ref, buf0, buf1, sem0,
+    def kernel(offs_ref, c_ref, t_ref, in_ref, o_ref, buf0, buf1, sem0,
                sem1):
         pids = [pl.program_id(d) for d in range(ndim)]
         lin = pids[0]
@@ -148,19 +188,12 @@ def build_pipelined_kernel(spec: StencilSpec, plan: BlockPlan,
         def _prefetch_even():
             _copy(nxt, buf0, sem0).start()
 
-        coeffs = StencilCoeffs(center=c_ref[0, 0], neighbors=n_ref[...])
+        coeffs = ProgramCoeffs(center=c_ref[0, 0], taps=t_ref[...][0])
 
         def _compute(buf, sem):
             _copy(lin, buf, sem).wait()
-            cur = buf[...]
-            for t in range(1, T + 1):
-                cur = interior_update(spec, coeffs, cur)
-                if t < T:
-                    starts = tuple(
-                        offs_ref[d] + pids[d] * block[d] - halo + t * r
-                        for d in range(ndim))
-                    cur = clamp_fixup(cur, starts, true_shape)
-            o_ref[...] = cur
+            o_ref[...] = _fused_steps(program, plan, coeffs, buf[...], pids,
+                                      offs_ref, true_shape)
 
         @pl.when(parity == 0)
         def _run_even():
@@ -184,22 +217,26 @@ def round_up(x: int, m: int) -> int:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("spec", "plan", "true_shape", "interpret", "pipelined"),
+    static_argnames=("program", "plan", "true_shape", "interpret",
+                     "pipelined"),
 )
 def superstep_call(padded: jnp.ndarray, center: jnp.ndarray,
-                   neighbors: jnp.ndarray, spec: StencilSpec, plan: BlockPlan,
-                   true_shape: Tuple[int, ...], interpret: bool,
+                   taps: jnp.ndarray, program: StencilProgram,
+                   plan: BlockPlan, true_shape: Tuple[int, ...],
+                   interpret: bool,
                    offsets: jnp.ndarray | None = None,
                    pipelined: bool = False) -> jnp.ndarray:
     """Invoke the pallas kernel over a pre-padded grid.
 
     ``padded`` has shape ``rounded_up(local) + 2*halo`` per axis, already
-    halo-filled (edge-padded on a single device; neighbor-exchanged +
-    edge-clamped under domain decomposition).  ``true_shape`` is the GLOBAL
-    grid shape and ``offsets`` this shard's global origin.  Returns the
-    rounded-up local grid after ``par_time`` steps; caller slices back.
+    halo-filled according to the program's boundary mode (pad on a single
+    device; neighbor-exchanged + boundary-synthesized under domain
+    decomposition).  ``taps`` is the canonical tap-order coefficient vector
+    (any leading unit dims are flattened).  ``true_shape`` is the GLOBAL grid
+    shape and ``offsets`` this shard's global origin.  Returns the rounded-up
+    local grid after ``par_time`` steps; caller slices back.
     """
-    ndim = spec.ndim
+    ndim = program.ndim
     block = plan.block_shape
     halo = plan.halo
     rounded = tuple(padded.shape[d] - 2 * halo for d in range(ndim))
@@ -208,35 +245,35 @@ def superstep_call(padded: jnp.ndarray, center: jnp.ndarray,
     if offsets is None:
         offsets = jnp.zeros((ndim,), jnp.int32)
     c2 = center.reshape((1, 1)).astype(padded.dtype)
-    nb = neighbors.astype(padded.dtype)
+    t2 = taps.reshape((1, -1)).astype(padded.dtype)
 
     if pipelined:
-        kernel = build_pipelined_kernel(spec, plan, true_shape, grid)
+        kernel = build_pipelined_kernel(program, plan, true_shape, grid)
         scratch = [
-            pltpu.VMEM(plan.padded_shape, padded.dtype),
-            pltpu.VMEM(plan.padded_shape, padded.dtype),
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
+            vmem_scratch(plan.padded_shape, padded.dtype),
+            vmem_scratch(plan.padded_shape, padded.dtype),
+            dma_semaphore,
+            dma_semaphore,
         ]
     else:
-        kernel = build_superstep_kernel(spec, plan, true_shape)
+        kernel = build_superstep_kernel(program, plan, true_shape)
         scratch = [
-            pltpu.VMEM(plan.padded_shape, padded.dtype),
-            pltpu.SemaphoreType.DMA,
+            vmem_scratch(plan.padded_shape, padded.dtype),
+            dma_semaphore,
         ]
 
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),
+            pl.BlockSpec(memory_space=MemorySpace.SMEM),
             pl.BlockSpec(c2.shape, lambda *g: (0,) * 2),
-            pl.BlockSpec(nb.shape, lambda *g: (0,) * 2),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(t2.shape, lambda *g: (0,) * 2),
+            pl.BlockSpec(memory_space=MemorySpace.ANY),
         ],
         out_specs=pl.BlockSpec(block, lambda *g: g),
         out_shape=jax.ShapeDtypeStruct(rounded, padded.dtype),
         scratch_shapes=scratch,
         interpret=interpret,
-    )(offsets.astype(jnp.int32), c2, nb, padded)
+    )(offsets.astype(jnp.int32), c2, t2, padded)
     return out

@@ -1,9 +1,12 @@
 """Public jit'd entry points for the stencil kernels.
 
-``stencil_superstep`` dispatches on spec.ndim; ``stencil_run`` advances an
+``stencil_superstep`` dispatches on program ndim; ``stencil_run`` advances an
 arbitrary number of time steps by chaining supersteps (+ one remainder
-superstep with a reduced par_time), preserving exact clamp-boundary
-semantics throughout.
+superstep with a reduced par_time), preserving exact boundary semantics
+throughout.
+
+Both accept the legacy (``StencilSpec``, ``StencilCoeffs``) pair or the
+unified-IR (``StencilProgram``, ``ProgramCoeffs``) pair.
 """
 
 from __future__ import annotations
@@ -11,26 +14,23 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import jax.numpy as jnp
-
 from repro.core.blocking import BlockPlan
-from repro.core.spec import StencilCoeffs, StencilSpec
+from repro.core.program import as_program
 from repro.kernels.stencil2d import stencil2d_superstep
 from repro.kernels.stencil3d import stencil3d_superstep
 
 
-def stencil_superstep(grid, spec: StencilSpec, coeffs: StencilCoeffs,
-                      plan: BlockPlan, *, interpret: Optional[bool] = None,
+def stencil_superstep(grid, spec, coeffs, plan: BlockPlan, *,
+                      interpret: Optional[bool] = None,
                       pipelined: bool = False):
-    if spec.ndim == 2:
+    if as_program(spec).ndim == 2:
         return stencil2d_superstep(grid, spec, coeffs, plan,
                                    interpret=interpret, pipelined=pipelined)
     return stencil3d_superstep(grid, spec, coeffs, plan, interpret=interpret,
                                pipelined=pipelined)
 
 
-def stencil_run(grid, spec: StencilSpec, coeffs: StencilCoeffs,
-                plan: BlockPlan, steps: int, *,
+def stencil_run(grid, spec, coeffs, plan: BlockPlan, steps: int, *,
                 interpret: Optional[bool] = None):
     """Advance ``steps`` time steps using temporal blocking.
 

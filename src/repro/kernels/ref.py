@@ -2,11 +2,18 @@
 
 Every pallas kernel result must match these bit-for-bit up to float
 associativity (we keep the same summation order, so tolerances are tight).
+Program-aware variants (``program_*``, ``numpy_program_*``) cover the
+box/diamond shapes and periodic/constant boundaries of the unified IR.
 """
 
 from __future__ import annotations
 
 from repro.core.reference import (  # noqa: F401
+    numpy_program_nsteps,
+    numpy_program_step,
+    program_nsteps,
+    program_nsteps_unrolled,
+    program_step,
     random_grid,
     stencil_nsteps,
     stencil_nsteps_unrolled,
@@ -17,5 +24,10 @@ __all__ = [
     "stencil_step",
     "stencil_nsteps",
     "stencil_nsteps_unrolled",
+    "program_step",
+    "program_nsteps",
+    "program_nsteps_unrolled",
+    "numpy_program_step",
+    "numpy_program_nsteps",
     "random_grid",
 ]

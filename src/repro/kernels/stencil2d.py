@@ -1,11 +1,14 @@
-"""2D star-stencil Pallas kernel with combined spatial + temporal blocking.
+"""2D stencil Pallas kernel with combined spatial + temporal blocking.
 
 Paper mapping: 1.5D spatial blocking + ``par_time`` temporal blocking
-(§III.A), radius-parameterized (§III.B).  On TPU both grid dims are blocked
+(§III.A), radius-parameterized (§III.B) — and, through the unified IR,
+shape/boundary-parameterized as well.  On TPU both grid dims are blocked
 (BlockSpec tiles) and the grid iteration streams the blocks — see
 ``kernels/common.py`` for the full design note.
 
-Public entry point: :func:`stencil2d_superstep`.
+Public entry point: :func:`stencil2d_superstep`.  Accepts either the legacy
+(``StencilSpec``, ``StencilCoeffs``) pair or (``StencilProgram``,
+``ProgramCoeffs``).
 """
 
 from __future__ import annotations
@@ -15,22 +18,25 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 
 from repro.core.blocking import BlockPlan
-from repro.core.spec import StencilCoeffs, StencilSpec
+from repro.core.codegen import boundary_pad
+from repro.core.program import as_program, normalize_coeffs
 from repro.kernels import common
 
 
 def stencil2d_superstep(
     grid: jnp.ndarray,
-    spec: StencilSpec,
-    coeffs: StencilCoeffs,
+    spec,
+    coeffs,
     plan: BlockPlan,
     *,
     interpret: Optional[bool] = None,
     pipelined: bool = False,
 ) -> jnp.ndarray:
     """Advance a 2D grid by ``plan.par_time`` time steps in one HBM round trip."""
-    if spec.ndim != 2 or grid.ndim != 2:
-        raise ValueError("stencil2d_superstep requires a 2D spec and grid")
+    program = as_program(spec)
+    if program.ndim != 2 or grid.ndim != 2:
+        raise ValueError("stencil2d_superstep requires a 2D program and grid")
+    pc = normalize_coeffs(program, coeffs)
     if interpret is None:
         interpret = common.default_interpret()
 
@@ -39,9 +45,8 @@ def stencil2d_superstep(
     rounded = tuple(common.round_up(s, b)
                     for s, b in zip(true_shape, plan.block_shape))
     pad = [(h, rounded[d] - true_shape[d] + h) for d in range(2)]
-    padded = jnp.pad(grid, pad, mode="edge")  # clamp boundary (paper §IV.B)
+    padded = boundary_pad(program, grid, pad)
 
-    out = common.superstep_call(padded, coeffs.center, coeffs.neighbors,
-                                spec, plan, true_shape, interpret,
-                                pipelined=pipelined)
+    out = common.superstep_call(padded, pc.center, pc.taps, program, plan,
+                                true_shape, interpret, pipelined=pipelined)
     return out[: true_shape[0], : true_shape[1]]

@@ -1,9 +1,12 @@
-"""3D star-stencil Pallas kernel with combined spatial + temporal blocking.
+"""3D stencil Pallas kernel with combined spatial + temporal blocking.
 
 Paper mapping: 2.5D spatial blocking + temporal blocking (§III.A).  All three
 dims are BlockSpec-tiled; the pallas grid streams blocks in (z, y, x) order so
 consecutive steps touch adjacent memory — the TPU analogue of streaming the
 outermost dimension through the shift register.
+
+Accepts either the legacy (``StencilSpec``, ``StencilCoeffs``) pair or
+(``StencilProgram``, ``ProgramCoeffs``).
 """
 
 from __future__ import annotations
@@ -13,22 +16,25 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 
 from repro.core.blocking import BlockPlan
-from repro.core.spec import StencilCoeffs, StencilSpec
+from repro.core.codegen import boundary_pad
+from repro.core.program import as_program, normalize_coeffs
 from repro.kernels import common
 
 
 def stencil3d_superstep(
     grid: jnp.ndarray,
-    spec: StencilSpec,
-    coeffs: StencilCoeffs,
+    spec,
+    coeffs,
     plan: BlockPlan,
     *,
     interpret: Optional[bool] = None,
     pipelined: bool = False,
 ) -> jnp.ndarray:
     """Advance a 3D grid by ``plan.par_time`` time steps in one HBM round trip."""
-    if spec.ndim != 3 or grid.ndim != 3:
-        raise ValueError("stencil3d_superstep requires a 3D spec and grid")
+    program = as_program(spec)
+    if program.ndim != 3 or grid.ndim != 3:
+        raise ValueError("stencil3d_superstep requires a 3D program and grid")
+    pc = normalize_coeffs(program, coeffs)
     if interpret is None:
         interpret = common.default_interpret()
 
@@ -37,9 +43,8 @@ def stencil3d_superstep(
     rounded = tuple(common.round_up(s, b)
                     for s, b in zip(true_shape, plan.block_shape))
     pad = [(h, rounded[d] - true_shape[d] + h) for d in range(3)]
-    padded = jnp.pad(grid, pad, mode="edge")
+    padded = boundary_pad(program, grid, pad)
 
-    out = common.superstep_call(padded, coeffs.center, coeffs.neighbors,
-                                spec, plan, true_shape, interpret,
-                                pipelined=pipelined)
+    out = common.superstep_call(padded, pc.center, pc.taps, program, plan,
+                                true_shape, interpret, pipelined=pipelined)
     return out[: true_shape[0], : true_shape[1], : true_shape[2]]

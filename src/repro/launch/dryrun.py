@@ -307,8 +307,8 @@ def run_stencil_cell(wl, multi_pod: bool, out_dir: Optional[str],
     ds = DistributedStencil(spec, coeffs, plan, mesh, Decomposition(parts),
                             wl.grid_shape, interpret=True)
     grid_sds = jax.ShapeDtypeStruct(wl.grid_shape, jnp.dtype(spec.dtype))
-    c_sds = common.as_sds(coeffs.center)
-    n_sds = common.as_sds(coeffs.neighbors)
+    c_sds = common.as_sds(ds.pcoeffs.center)
+    n_sds = common.as_sds(ds.pcoeffs.taps)
 
     t0 = time.time()
     with mesh:

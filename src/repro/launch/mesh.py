@@ -5,22 +5,21 @@ Multi-pod  : (pod=2, data=16, model=16)    = 512 chips
 
 A FUNCTION, not a module constant: importing this module must never touch
 jax device state (the dry-run sets XLA_FLAGS before first jax init).
+Mesh construction goes through ``repro.core.compat`` so the ``axis_types``
+kwarg drift across JAX versions is absorbed in one place.
 """
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.core import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_local_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over host devices for tests/examples."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import compat
+
 
 def bubble_fraction(n_micro: int, n_stages: int) -> float:
     return (n_stages - 1) / (n_micro + n_stages - 1)
@@ -94,9 +96,8 @@ def pipeline_apply(
             axis)
         return outs
 
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         local, mesh=mesh,
         in_specs=(params_specs, micro_spec),
-        out_specs=micro_spec,
-        check_vma=False)
+        out_specs=micro_spec)
     return mapped(stage_params, x_micro)

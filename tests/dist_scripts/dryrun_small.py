@@ -10,14 +10,14 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint.reshard import shardings_from_specs
+from repro.core import compat
 from repro.configs import ARCHS
 from repro.models import common, transformer
 from repro.optim import AdamW
 from repro.runtime import mesh_rules
 from repro.runtime.trainer import make_train_step
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 rules = mesh_rules.default_rules(multi_pod=True)
 
 archs = sys.argv[1:] if len(sys.argv) > 1 else sorted(ARCHS)

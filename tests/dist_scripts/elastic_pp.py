@@ -8,6 +8,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager, shardings_from_specs
+from repro.core import compat
 from repro.models.common import LogicalAxes
 from repro.runtime.mesh_rules import AxisRules
 from repro.runtime.pipeline_parallel import bubble_fraction, pipeline_apply
@@ -15,10 +16,8 @@ from repro.runtime.pipeline_parallel import bubble_fraction, pipeline_apply
 # ---- elastic: mesh A (2x4) -> mesh B (4x2), via disk and live ---------------
 rules = AxisRules(table={"batch": ("data",), "d_model": "data",
                          "d_ff": "model"})
-mesh_a = jax.make_mesh((2, 4), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
-mesh_b = jax.make_mesh((4, 2), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_a = compat.make_mesh((2, 4), ("data", "model"))
+mesh_b = compat.make_mesh((4, 2), ("data", "model"))
 
 tree = {"w1": jax.random.normal(jax.random.PRNGKey(0), (16, 32)),
         "w2": jax.random.normal(jax.random.PRNGKey(1), (32, 16))}
@@ -46,8 +45,7 @@ np.testing.assert_allclose(np.asarray(live["w1"]), np.asarray(tree["w1"]))
 print("OK live_reshard")
 
 # ---- pipeline parallelism over 4 stages --------------------------------------
-mesh_p = jax.make_mesh((4, 2), ("pod", "data"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_p = compat.make_mesh((4, 2), ("pod", "data"))
 n_stages, n_micro = 4, 8
 d = 16
 

@@ -6,13 +6,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compat
 from repro.core import reference as ref
 from repro.core.blocking import BlockPlan
 from repro.core.distributed import Decomposition, DistributedStencil
+from repro.core.program import StencilProgram
 from repro.core.spec import StencilSpec
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 # ---- 2D: rows over pod+data (4 shards), cols over model (2 shards) --------
 spec = StencilSpec(ndim=2, radius=3)
@@ -62,11 +63,37 @@ np.testing.assert_allclose(np.asarray(got4), np.asarray(want4), atol=1e-5,
                            rtol=1e-5)
 print("OK r4_superstep")
 
+# ---- non-star program: box taps + periodic wrap over the mesh --------------
+progp = StencilProgram(ndim=2, radius=2, shape="box", boundary="periodic")
+cp = progp.default_coeffs(seed=3)
+planp = BlockPlan(spec=progp, block_shape=(16, 128), par_time=2)
+Gp = (128, 512)
+gp = ref.random_grid(progp, Gp, seed=13)
+dsp = DistributedStencil(progp, cp, planp, mesh,
+                         Decomposition((("pod", "data"), ("model",))), Gp)
+gotp = dsp.run(jax.device_put(gp, dsp.sharding()), 4)
+wantp = ref.numpy_program_nsteps(progp, cp, gp, 4)
+np.testing.assert_allclose(np.asarray(gotp), wantp, atol=1e-4, rtol=1e-4)
+print("OK box_periodic_superstep")
+
+# ---- diamond taps + constant boundary over the mesh ------------------------
+progc = StencilProgram(ndim=2, radius=3, shape="diamond", boundary="constant",
+                       boundary_value=0.25)
+cc = progc.default_coeffs(seed=8)
+planc = BlockPlan(spec=progc, block_shape=(16, 128), par_time=2)
+gc = ref.random_grid(progc, Gp, seed=17)
+dsc = DistributedStencil(progc, cc, planc, mesh,
+                         Decomposition((("pod", "data"), ("model",))), Gp)
+gotc = dsc.superstep(jax.device_put(gc, dsc.sharding()))
+wantc = ref.numpy_program_nsteps(progc, cc, gc, 2)
+np.testing.assert_allclose(np.asarray(gotc), wantc, atol=1e-4, rtol=1e-4)
+print("OK diamond_constant_superstep")
+
 # ---- collective schedule sanity: halo exchange uses collective-permute ----
 lowered = jax.jit(ds.superstep_fn()).lower(
     jax.ShapeDtypeStruct(G, jnp.float32),
     jax.ShapeDtypeStruct((), jnp.float32),
-    jax.ShapeDtypeStruct((4, 3), jnp.float32))
+    jax.ShapeDtypeStruct((12,), jnp.float32))
 txt = lowered.compile().as_text()
 assert "collective-permute" in txt, "halo exchange must lower to ppermute"
 print("OK hlo_has_permute")

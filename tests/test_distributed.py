@@ -7,7 +7,8 @@ import pytest
 def test_distributed_stencil(dist_runner):
     out = dist_runner("stencil_dist.py")
     for marker in ("OK 2d_superstep", "OK 2d_multistep", "OK 3d_superstep",
-                   "OK r4_superstep", "OK hlo_has_permute"):
+                   "OK r4_superstep", "OK box_periodic_superstep",
+                   "OK diamond_constant_superstep", "OK hlo_has_permute"):
         assert marker in out
 
 

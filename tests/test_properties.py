@@ -1,11 +1,18 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
 
-import hypothesis
-import hypothesis.strategies as st
-import jax
-import jax.numpy as jnp
-import numpy as np
-from hypothesis import given, settings
+Skips cleanly when ``hypothesis`` is not installed (it is a test-only extra;
+see requirements-test.txt).
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings  # noqa: E402,F401
 
 from repro.core import reference as ref
 from repro.core.blocking import BlockPlan

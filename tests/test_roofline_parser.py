@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.analysis.roofline import parse_hlo_costs
+from repro.analysis.roofline import parse_hlo_costs, xla_cost_analysis
 
 
 def test_flops_exact_on_scanned_matmul():
@@ -22,7 +22,7 @@ def test_flops_exact_on_scanned_matmul():
     expect = 2 * 128 * 256 * 256 * 10 + 128 * 256 * 10
     assert abs(costs["flops"] - expect) / expect < 1e-6
     # XLA's own analysis counts the while body once — document the 10x gap
-    xla = c.cost_analysis()["flops"]
+    xla = xla_cost_analysis(c)["flops"]
     assert costs["flops"] / xla == pytest.approx(10.0, rel=0.01)
 
 

@@ -70,7 +70,10 @@ def test_spec_validation():
     with pytest.raises(ValueError):
         StencilSpec(ndim=2, radius=0)
     with pytest.raises(ValueError):
-        StencilSpec(ndim=2, radius=1, boundary="periodic")
+        StencilSpec(ndim=2, radius=1, boundary="bogus")
+    # periodic/constant lift into the unified IR now
+    assert StencilSpec(ndim=2, radius=1,
+                       boundary="periodic").to_program().boundary == "periodic"
 
 
 def test_shared_coefficients():
