@@ -7,8 +7,14 @@ temporal blocking vs par_time=1 at equal steps.
 
 Stencils are described as ``StencilProgram``s and lowered through the
 backend registry; a box/periodic row exercises the non-star path end to end.
+
+With ``REPRO_BENCH_TUNED=1`` (or ``run(use_tuned=True)``) the blocked plan
+comes from the autotuner's persistent cache (``repro.tuning``, model-guided
+mode) instead of the hand-written block shapes — the serving-path wiring the
+tuning subsystem exists for.
 """
 
+import os
 import time
 
 import jax
@@ -29,7 +35,19 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps
 
 
-def run():
+def _tuned_plan(prog, grid_shape) -> BlockPlan:
+    """Cached model-guided plan for this bench grid (zero search cost after
+    the first call thanks to the plan cache)."""
+    from repro.tuning import autotune
+
+    tuned = autotune(prog, grid_shape=grid_shape, measure=False,
+                     max_par_time=4)
+    return tuned.plan
+
+
+def run(use_tuned=None):
+    if use_tuned is None:
+        use_tuned = os.environ.get("REPRO_BENCH_TUNED") == "1"
     rows = []
     cases = [(2, (256, 512), (64, 128), "star", "clamp"),
              (3, (32, 64, 256), (8, 16, 128), "star", "clamp")]
@@ -49,17 +67,24 @@ def run():
         for s in shape:
             cells *= s
 
-        plan1 = BlockPlan(spec=prog, block_shape=block, par_time=1)
-        plan2 = BlockPlan(spec=prog, block_shape=block, par_time=2)
+        if use_tuned:
+            tuned = _tuned_plan(prog, shape)
+            plan1 = BlockPlan(spec=prog, block_shape=tuned.block_shape,
+                              par_time=1)
+            plan2 = tuned
+        else:
+            plan1 = BlockPlan(spec=prog, block_shape=block, par_time=1)
+            plan2 = BlockPlan(spec=prog, block_shape=block, par_time=2)
         low1 = lower(prog, plan1)
         low2 = lower(prog, plan2)
         g = ref.random_grid(prog, shape, seed=0)
 
-        f1 = jax.jit(lambda g: low1.run(g, 2))
+        steps = plan2.par_time
+        f1 = jax.jit(lambda g: low1.run(g, steps))
         f2 = jax.jit(lambda g: low2.superstep(g))
         t1 = _time(f1, g)
         t2 = _time(f2, g)
-        mcells = cells * 2 / t2 / 1e6
+        mcells = cells * steps / t2 / 1e6
         tag = f"kernel_{prog.ndim}d_r{prog.radius}"
         if prog.shape != "star":
             tag += f"_{prog.shape}_{prog.boundary}"

@@ -1,17 +1,56 @@
 """Benchmark driver: one function per paper table + harness benches.
 
-Prints ``name,us_per_call,derived`` CSV.  Paper-table modules assert their
-reproduction tolerances, so ``python -m benchmarks.run`` doubles as the
-validation gate for the paper's own numbers.
+Prints ``name,us_per_call,derived`` CSV and writes a machine-readable
+``BENCH_results.json`` (same rows plus parsed derived metrics, git rev, and
+chip) so the perf trajectory is tracked PR-over-PR.  Paper-table modules
+assert their reproduction tolerances, so ``python -m benchmarks.run``
+doubles as the validation gate for the paper's own numbers.
+
+Env knobs:
+  REPRO_BENCH_TUNED=1   — kernel benches run from autotuned plans
+                          (``repro.tuning``) instead of hand-written ones.
+  REPRO_BENCH_JSON=PATH — where to write the JSON (default
+                          ./BENCH_results.json; empty string disables).
 """
 
+import json
+import os
+import subprocess
 import sys
+import time
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _parse_derived(derived: str) -> dict:
+    """'k=v;k=v' derived strings -> {k: float|str} (floats where they parse;
+    trailing x/%% units stripped)."""
+    out = {}
+    for part in str(derived).split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k.strip()] = float(v.rstrip("x%"))
+        except ValueError:
+            out[k.strip()] = v
+    return out
 
 
 def main() -> None:
     from benchmarks import (bench_kernels, bench_step, fig34_trends,
                             roofline_table, table1_characteristics,
                             table3_perf_model, table45_roofline)
+    from repro.analysis.hw import V5E
 
     modules = [
         ("table1", table1_characteristics),
@@ -23,15 +62,39 @@ def main() -> None:
         ("roofline", roofline_table),
     ]
     print("name,us_per_call,derived")
-    failures = 0
+    results, errors = [], []
     for name, mod in modules:
         try:
             for row_name, us, derived in mod.run():
                 print(f"{row_name},{us:.2f},{derived}")
+                results.append({
+                    "name": row_name,
+                    "suite": name,
+                    "us_per_call": round(float(us), 3),
+                    "derived": derived,
+                    "metrics": _parse_derived(derived),
+                })
         except Exception as e:  # pragma: no cover
-            failures += 1
+            errors.append({"suite": name,
+                           "error": f"{type(e).__name__}: {e}"})
             print(f"{name},ERROR,{type(e).__name__}:{e}", file=sys.stderr)
-    if failures:
+
+    json_path = os.environ.get("REPRO_BENCH_JSON", "BENCH_results.json")
+    if json_path:
+        payload = {
+            "schema": 1,
+            "git_rev": _git_rev(),
+            "chip": V5E.name,
+            "tuned_plans": os.environ.get("REPRO_BENCH_TUNED") == "1",
+            "unix_time": int(time.time()),
+            "results": results,
+            "errors": errors,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"wrote {json_path} ({len(results)} rows, "
+              f"{len(errors)} errors)", file=sys.stderr)
+    if errors:
         raise SystemExit(1)
 
 

@@ -17,6 +17,7 @@ from repro.backends import lower
 from repro.core import StencilProgram
 from repro.core.blocking import estimate
 from repro.core.reference import program_nsteps_unrolled, random_grid
+from repro.tuning import autotune
 
 
 def main():
@@ -48,6 +49,17 @@ def main():
     assert np.allclose(out, want, atol=1e-4), err
     print(f"{steps} steps via temporal blocking == naive reference "
           f"(max err {err:.2e})  OK")
+
+    # autotune: search the legal (bsize, par_time) space, rank by the model,
+    # measure the frontier, cache the winner (repro.tuning; DESIGN.md §6)
+    tuned = autotune(program, V5E, grid_shape=grid_shape, top_k=3,
+                     max_par_time=4)
+    src = "cache" if tuned.from_cache else \
+        f"search over {tuned.space_size} candidates"
+    print(f"autotuned plan [{src}]: block={tuned.plan.block_shape} "
+          f"par_time={tuned.plan.par_time} "
+          f"measured={tuned.measured_gbps:.3f} GB/s "
+          f"on {tuned.backend}")
 
 
 if __name__ == "__main__":

@@ -5,12 +5,17 @@ cluster-scale grid for the production mesh (per-chip share comparable to the
 paper's per-FPGA load).  Workloads carry a ``StencilProgram`` (unified IR);
 the star entries reproduce the paper, the box/periodic entry exercises the
 shape/boundary generality through the identical pipeline.
+
+``workloads(autotune=True)`` swaps the hand-written (block_shape, par_time)
+below for the ``repro.tuning`` autotuner's pick (model-guided by default,
+empirically measured with ``measure=True`` on real hardware); the
+hand-written values remain the deterministic fallback.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.core.program import StencilProgram
 
@@ -24,7 +29,38 @@ class StencilWorkload:
     par_time: int
 
 
-def workloads(radius: int = 4) -> Dict[str, StencilWorkload]:
+def autotune_workloads(
+    workloads: Dict[str, StencilWorkload],
+    *,
+    chip=None,
+    backend: Optional[str] = None,
+    cache_path: Optional[str] = None,
+    measure: bool = False,
+) -> Dict[str, StencilWorkload]:
+    """Replace each workload's hand-written (block_shape, par_time) with the
+    autotuner's pick (``repro.tuning``).
+
+    ``measure=False`` (default) is the model-guided mode — deterministic and
+    cheap enough for import-time use; ``measure=True`` times the top-K
+    frontier on this host, which only makes sense on the target hardware.
+    Tuned plans land in the persistent cache, so repeated calls are free.
+    """
+    from repro.analysis.hw import V5E
+    from repro.tuning import autotune
+
+    out = {}
+    for name, w in workloads.items():
+        tuned = autotune(w.spec, chip or V5E, grid_shape=w.grid_shape,
+                         backend=backend, measure=measure,
+                         cache_path=cache_path)
+        out[name] = dataclasses.replace(
+            w, block_shape=tuned.plan.block_shape,
+            par_time=tuned.plan.par_time)
+    return out
+
+
+def workloads(radius: int = 4, *, autotune: bool = False,
+              **autotune_kwargs) -> Dict[str, StencilWorkload]:
     out = {}
     for rad in range(1, radius + 1):
         spec = StencilProgram(ndim=2, radius=rad)
@@ -43,4 +79,6 @@ def workloads(radius: int = 4) -> Dict[str, StencilWorkload]:
         spec=StencilProgram(ndim=2, radius=1, shape="box",
                             boundary="periodic"),
         grid_shape=(65536, 65536), block_shape=(1024, 1024), par_time=4)
+    if autotune:
+        out = autotune_workloads(out, **autotune_kwargs)
     return out

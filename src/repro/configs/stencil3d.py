@@ -1,10 +1,14 @@
-"""The paper's own workload: 3D star stencils, radius 1..4 (paper ~696^3)."""
+"""The paper's own workload: 3D star stencils, radius 1..4 (paper ~696^3).
+
+``workloads(autotune=True)`` routes through ``repro.tuning`` exactly like
+the 2D configs — see ``configs/stencil2d.py``.
+"""
 
 from __future__ import annotations
 
 from typing import Dict
 
-from repro.configs.stencil2d import StencilWorkload
+from repro.configs.stencil2d import StencilWorkload, autotune_workloads
 from repro.core.program import StencilProgram
 
 
@@ -14,7 +18,8 @@ from repro.core.program import StencilProgram
 _POD_PAR_TIME = {1: 8, 2: 4, 3: 3, 4: 3}
 
 
-def workloads(radius: int = 4) -> Dict[str, StencilWorkload]:
+def workloads(radius: int = 4, *, autotune: bool = False,
+              **autotune_kwargs) -> Dict[str, StencilWorkload]:
     out = {}
     for rad in range(1, radius + 1):
         spec = StencilProgram(ndim=3, radius=rad)
@@ -27,4 +32,6 @@ def workloads(radius: int = 4) -> Dict[str, StencilWorkload]:
             name=f"3d_r{rad}_pod", spec=spec, grid_shape=(1024, 4096, 2048),
             block_shape=(32, 128, 1024),
             par_time=_POD_PAR_TIME.get(rad, 1))
+    if autotune:
+        out = autotune_workloads(out, **autotune_kwargs)
     return out

@@ -28,6 +28,11 @@ from repro.core.spec import StencilSpec
 SUBLANE = 8
 LANE = 128
 
+# Overlapped-blocking tax floor shared by this planner and the autotuner's
+# space enumeration (repro.tuning.space): plans keeping fewer than this
+# fraction of their streamed window as useful output never win.
+MIN_USEFUL_FRACTION = 0.25
+
 
 @dataclasses.dataclass(frozen=True)
 class BlockPlan:
@@ -127,8 +132,21 @@ def estimate(plan: BlockPlan, hw: TpuChip = V5E) -> PlanEstimate:
     )
 
 
-def _round_up(x: int, m: int) -> int:
+def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def grid_useful_fraction(grid_shape: Optional[Tuple[int, ...]],
+                         block_shape: Tuple[int, ...]) -> float:
+    """Fraction of block compute landing inside the grid (1.0 = no padding
+    waste): output tiles that don't divide the grid evenly pad it up, and
+    padded cells are wasted work.  1.0 when the grid is unknown."""
+    if grid_shape is None:
+        return 1.0
+    frac = 1.0
+    for g, b in zip(grid_shape, block_shape):
+        frac *= g / round_up(g, b)
+    return frac
 
 
 def candidate_plans(
@@ -160,7 +178,7 @@ def candidate_plans(
             plan = BlockPlan(spec=spec, block_shape=tuple(bs), par_time=pt)
             if plan.vmem_bytes > hw.vmem_budget_bytes:
                 continue
-            if plan.useful_fraction <= 0.25:
+            if plan.useful_fraction <= MIN_USEFUL_FRACTION:
                 continue  # overlapped-blocking tax beyond any win
             plans.append(plan)
     return plans
@@ -176,18 +194,23 @@ def plan_blocking(
 
     Preference order: highest predicted useful GCell/s; ties broken toward
     aligned (par_time*radius) % SUBLANE == 0 and smaller VMEM.
+
+    This is the *model-only, zero-dependency* planner behind
+    ``backends.lower(plan=None)``; ``repro.tuning`` is its superset
+    (bsize-space enumeration + empirical measurement + plan cache) and
+    cannot be imported from here without a cycle through the backend
+    registry.  Shared pieces (``MIN_USEFUL_FRACTION``, ``round_up``,
+    ``grid_useful_fraction``, the VMEM predicate on ``vmem_budget_bytes``)
+    live in this module so the two cannot drift.
     """
     best = None
     for plan in candidate_plans(spec, hw, max_par_time=max_par_time):
         est = estimate(plan, hw)
-        waste = 1.0
-        if grid_shape is not None:
-            # blocks larger than the grid still work (the kernel pads), but
-            # padded cells are wasted compute — penalize them.
-            for g, b in zip(grid_shape, plan.block_shape):
-                waste *= g / (_round_up(g, b))
+        # blocks larger than the grid still work (the kernel pads), but
+        # padded cells are wasted compute — penalize them.
+        useful = grid_useful_fraction(grid_shape, plan.block_shape)
         aligned = (plan.halo % SUBLANE) == 0
-        key = (est.gcells_per_s * waste, aligned, -plan.vmem_bytes)
+        key = (est.gcells_per_s * useful, aligned, -plan.vmem_bytes)
         if best is None or key > best[0]:
             best = (key, est)
     if best is None:

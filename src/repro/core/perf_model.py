@@ -23,7 +23,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence, Tuple
 
-from repro.analysis.hw import ARRIA10_DSPS
+from repro.analysis.hw import ARRIA10_DSPS, TpuChip, V5E
 from repro.core.program import StencilProgram
 from repro.core.spec import StencilSpec
 
@@ -58,6 +58,17 @@ def constraint_eq6(par_time: int, rad: int) -> bool:
     return (par_time * rad) % 4 == 0
 
 
+def gbps_from_cells_per_s(cells_per_s: float,
+                          cell_bytes: int = None) -> float:
+    """Effective GB/s from useful cell-updates/s — the *one* formula behind
+    both the paper Table III reproduction and the TPU tuner: effective
+    bandwidth counts one read + one write per useful cell update (Table I),
+    regardless of how the device achieved it."""
+    if cell_bytes is None:
+        cell_bytes = bytes_per_cell()
+    return cells_per_s * cell_bytes / 1e9
+
+
 def paper_predicted_gbps(
     f_mhz: float,
     par_vec: int,
@@ -69,7 +80,28 @@ def paper_predicted_gbps(
     cs = csize(bsize_x, par_time, rad)
     if cs <= 0:
         return 0.0
-    return f_mhz * 1e6 * par_vec * bytes_per_cell() * par_time * (cs / bsize_x) / 1e9
+    cells_per_s = f_mhz * 1e6 * par_vec * par_time * (cs / bsize_x)
+    return gbps_from_cells_per_s(cells_per_s)
+
+
+def predicted_gbps(program, plan, chip: TpuChip = V5E) -> float:
+    """Programmatic model entry point: effective GB/s the TPU roofline model
+    predicts for a (``StencilProgram``, ``BlockPlan``) pair.
+
+    This is the tuner's ranking function (and the "Estimated Performance"
+    column of our own Table III analogue in ``tuning.measure``): useful
+    cell-updates/s from ``blocking.estimate`` — max(compute, HBM) per block
+    round trip with the overlapped-blocking redundancy charged — converted
+    through the same effective-bandwidth formula as the paper rows.
+    Accepts a legacy ``StencilSpec`` for ``program``.
+    """
+    from repro.core.blocking import estimate  # local: blocking imports spec
+    from repro.core.program import as_program
+
+    prog = as_program(program)
+    est = estimate(plan, chip)
+    return gbps_from_cells_per_s(est.gcells_per_s,
+                                 cell_bytes=prog.bytes_per_cell)
 
 
 def gbps_to_gcells(gbps: float) -> float:

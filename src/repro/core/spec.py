@@ -30,6 +30,7 @@ rad 1..4 -> 9, 17, 25, 33; 3D -> 13, 25, 37, 49).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Tuple
 
 import jax.numpy as jnp
@@ -66,6 +67,10 @@ class StencilSpec:
     boundary: str = "clamp"
 
     def __post_init__(self):
+        warnings.warn(
+            "StencilSpec is a deprecated alias; construct a "
+            "repro.core.program.StencilProgram (shape='star') instead",
+            DeprecationWarning, stacklevel=3)
         if self.ndim not in (2, 3):
             raise ValueError(f"ndim must be 2 or 3, got {self.ndim}")
         if self.radius < 1:

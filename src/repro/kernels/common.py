@@ -39,7 +39,7 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.blocking import BlockPlan
+from repro.core.blocking import BlockPlan, round_up  # noqa: F401 (re-export)
 from repro.core.codegen import tap_interior_update
 from repro.core.program import ProgramCoeffs, StencilProgram
 
@@ -209,10 +209,6 @@ def build_pipelined_kernel(program: StencilProgram, plan: BlockPlan,
 def default_interpret() -> bool:
     """Pallas TPU kernels run in interpret mode on CPU hosts."""
     return jax.default_backend() != "tpu"
-
-
-def round_up(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
 
 
 @functools.partial(

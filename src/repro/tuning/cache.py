@@ -1,0 +1,152 @@
+"""Persistent plan cache: tuned once, served forever.
+
+The paper pays hours of place-and-route per configuration and therefore
+tunes offline, shipping the chosen bitstream; our analogue is a JSON cache
+of tuned plans so serving paths (`configs/*`, `benchmarks/*`, `launch/*`)
+get the winning (block_shape, par_time, backend) with zero search cost.
+
+Keying — a cache entry is addressed by the sha1 of:
+
+  * the program fingerprint: every ``StencilProgram`` field, canonically
+    ordered (two equal programs share tuned plans; any semantic change
+    misses);
+  * the measurement grid shape (blocking quality is grid-dependent);
+  * the chip name (plans do not transfer across hardware);
+  * the backend name **and registry version** — a version bump (a new
+    lowering registered for the same name) invalidates every plan tuned
+    through the old lowering, the whole point of the versioned registry;
+  * ``SCHEMA_VERSION`` of the tuner itself (a model/space change
+    invalidates the world).
+
+Writes are atomic (tmp file + ``os.replace``) so concurrent tuners can at
+worst lose a plan, never corrupt the file.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from typing import Dict, Optional, Tuple
+
+from repro.core.program import as_program
+
+SCHEMA_VERSION = 1
+
+ENV_CACHE_PATH = "REPRO_TUNING_CACHE"
+_DEFAULT_PATH = os.path.join("~", ".cache", "repro-stencil", "plans.json")
+
+
+def default_cache_path() -> str:
+    return os.path.expanduser(os.environ.get(ENV_CACHE_PATH, _DEFAULT_PATH))
+
+
+def program_fingerprint(program) -> str:
+    """Canonical digest of every program field (order-independent)."""
+    prog = as_program(program)
+    payload = json.dumps(dataclasses.asdict(prog), sort_keys=True)
+    return hashlib.sha1(payload.encode()).hexdigest()
+
+
+def cache_key(program, grid_shape: Tuple[int, ...], chip_name: str,
+              backend: str, backend_version: int) -> str:
+    payload = json.dumps({
+        "program": program_fingerprint(program),
+        "grid_shape": list(grid_shape),
+        "chip": chip_name,
+        "backend": backend,
+        "backend_version": backend_version,
+        "schema": SCHEMA_VERSION,
+    }, sort_keys=True)
+    return hashlib.sha1(payload.encode()).hexdigest()
+
+
+class PlanCache:
+    """Dict-of-JSON-records plan store. Values are plain dicts produced by
+    ``tuning.autotune`` (see ``TunedPlan.to_record``); the cache itself is
+    schema-agnostic beyond the top-level ``{key: record}`` layout."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = os.path.expanduser(path) if path else default_cache_path()
+
+    # -- storage ------------------------------------------------------------
+
+    def _load(self) -> Dict[str, dict]:
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+            return data if isinstance(data, dict) else {}
+        except (FileNotFoundError, json.JSONDecodeError):
+            return {}
+
+    def _store(self, data: Dict[str, dict]) -> None:
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(prefix=".plans-", suffix=".json", dir=d)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    # -- API ----------------------------------------------------------------
+
+    def get(self, key: str) -> Optional[dict]:
+        """Single-record view: the most recently added record under key."""
+        records = self.get_all(key)
+        return records[-1] if records else None
+
+    def get_all(self, key: str) -> list:
+        """Every record under key (a key holds one record *per search
+        bounds* — see :meth:`add`)."""
+        v = self._load().get(key)
+        if v is None:
+            return []
+        return list(v) if isinstance(v, list) else [v]
+
+    def put(self, key: str, record: dict) -> None:
+        """Replace everything under key with one record."""
+        data = self._load()
+        data[key] = record
+        self._store(data)
+
+    def add(self, key: str, record: dict) -> None:
+        """Append a record under key, replacing any record with the same
+        ``search`` bounds.  Keeping one record per bounds (rather than one
+        per key) stops consumers that tune the same program/grid under
+        different bounds from evicting each other on every call."""
+        data = self._load()
+        existing = data.get(key)
+        records = existing if isinstance(existing, list) \
+            else ([existing] if existing else [])
+        sig = record.get("search")
+        records = [r for r in records if r.get("search") != sig]
+        records.append(record)
+        data[key] = records
+        self._store(data)
+
+    def entries(self) -> Dict[str, dict]:
+        return self._load()
+
+    @staticmethod
+    def _count(data: Dict[str, object]) -> int:
+        return sum(len(v) if isinstance(v, list) else 1
+                   for v in data.values())
+
+    def clear(self) -> int:
+        """Delete the cache file; returns how many records it held."""
+        n = self._count(self._load())
+        try:
+            os.unlink(self.path)
+        except FileNotFoundError:
+            pass
+        return n
+
+    def __len__(self) -> int:
+        """Total records (not keys — a key holds one record per bounds)."""
+        return self._count(self._load())

@@ -1,0 +1,145 @@
+"""Autotuner CLI.
+
+    python -m repro.tuning.cli tune --ndim 2 --radius 4 --grid 16384,16384
+    python -m repro.tuning.cli tune --ndim 2 --radius 1 --grid 64,256 \\
+        --backend xla-reference --top-k 2 --cache /tmp/plans.json
+    python -m repro.tuning.cli inspect [--cache PATH]
+    python -m repro.tuning.cli clear-cache [--cache PATH]
+
+``tune`` prints the space/frontier sizes, the measured frontier (when
+measuring), and the winning plan; ``inspect`` dumps the cache records.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.hw import V5E
+from repro.core.program import StencilProgram
+
+
+def _parse_shape(text: str):
+    try:
+        return tuple(int(p) for p in text.replace("x", ",").split(",") if p)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"bad shape {text!r}")
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(prog="repro.tuning",
+                                description=__doc__.splitlines()[0])
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    t = sub.add_parser("tune", help="search + rank + measure + cache a plan")
+    t.add_argument("--ndim", type=int, default=2, choices=(2, 3))
+    t.add_argument("--radius", type=int, default=4)
+    t.add_argument("--shape", default="star",
+                   choices=("star", "box", "diamond"))
+    t.add_argument("--boundary", default="clamp",
+                   choices=("clamp", "periodic", "constant"))
+    t.add_argument("--dtype", default="float32")
+    t.add_argument("--grid", type=_parse_shape, required=True,
+                   help="grid shape, e.g. 16384,16384")
+    t.add_argument("--backend", default=None,
+                   help="backend name (default: platform default)")
+    t.add_argument("--top-k", type=int, default=5,
+                   help="measured frontier size")
+    t.add_argument("--max-par-time", type=int, default=32)
+    t.add_argument("--bsize", type=_parse_shape, action="append",
+                   default=None, metavar="BSIZE",
+                   help="explicit window candidate (repeatable), e.g. "
+                        "--bsize 64,512 --bsize 128,1024")
+    t.add_argument("--no-measure", action="store_true",
+                   help="model-only ranking (no empirical timing)")
+    t.add_argument("--force", action="store_true",
+                   help="ignore any cached plan and re-tune")
+    t.add_argument("--cache", default=None, help="plan-cache path")
+
+    i = sub.add_parser("inspect", help="print cached plans")
+    i.add_argument("--cache", default=None, help="plan-cache path")
+
+    c = sub.add_parser("clear-cache", help="delete the plan cache")
+    c.add_argument("--cache", default=None, help="plan-cache path")
+    return p
+
+
+def _cmd_tune(args) -> int:
+    from repro import tuning
+
+    program = StencilProgram(ndim=args.ndim, radius=args.radius,
+                             shape=args.shape, boundary=args.boundary,
+                             dtype=args.dtype)
+    tuned = tuning.autotune(
+        program, V5E, grid_shape=args.grid, backend=args.backend,
+        top_k=args.top_k, measure=not args.no_measure,
+        cache_path=args.cache, force=args.force, bsizes=args.bsize,
+        max_par_time=args.max_par_time)
+
+    src = "cache" if tuned.from_cache else \
+        f"search (space={tuned.space_size}, frontier={tuned.frontier_size})"
+    print(f"program: {args.ndim}D {args.shape} r={args.radius} "
+          f"{args.boundary} on grid {'x'.join(map(str, args.grid))}")
+    print(f"plan [{src}]: block={tuned.plan.block_shape} "
+          f"par_time={tuned.plan.par_time} "
+          f"vmem={tuned.plan.vmem_bytes / 2**20:.1f} MiB "
+          f"backend={tuned.backend}@v{tuned.backend_version}")
+    print(f"model: {tuned.predicted_gbps:.2f} effective GB/s predicted")
+    m = tuned.measurement
+    if m is not None:
+        print(f"measured: {m.achieved_gbps:.3f} GB/s "
+              f"({m.achieved_gflops:.3f} GFLOP/s, "
+              f"{m.us_per_superstep:.0f} us/superstep, "
+              f"model accuracy {m.model_accuracy:.2f})")
+    print(f"cache key: {tuned.key}")
+    return 0
+
+
+def _cmd_inspect(args) -> int:
+    from repro.tuning.cache import PlanCache
+
+    store = PlanCache(args.cache)
+    entries = store.entries()
+    flat = [(key, rec)
+            for key, recs in sorted(entries.items())
+            for rec in (recs if isinstance(recs, list) else [recs])]
+    print(f"# {store.path}: {len(flat)} plan(s)")
+    for key, rec in flat:
+        prog = rec.get("program", {})
+        m = rec.get("measurement")
+        line = {
+            "key": key[:12],
+            "program": f"{prog.get('ndim')}d_{prog.get('shape')}"
+                       f"_r{prog.get('radius')}_{prog.get('boundary')}",
+            "block": rec.get("block_shape"),
+            "par_time": rec.get("par_time"),
+            "backend": f"{rec.get('backend')}@v{rec.get('backend_version')}",
+            "predicted_gbps": round(rec.get("predicted_gbps", 0.0), 3),
+            "measured_gbps": None if m is None
+            else round(m.get("achieved_gbps", 0.0), 3),
+        }
+        print(json.dumps(line))
+    return 0
+
+
+def _cmd_clear(args) -> int:
+    from repro.tuning.cache import PlanCache
+
+    store = PlanCache(args.cache)
+    n = store.clear()
+    print(f"cleared {n} plan(s) from {store.path}")
+    return 0
+
+
+def main(argv=None) -> int:
+    args = _build_parser().parse_args(argv)
+    if args.cmd == "tune":
+        return _cmd_tune(args)
+    if args.cmd == "inspect":
+        return _cmd_inspect(args)
+    return _cmd_clear(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

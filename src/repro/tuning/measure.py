@@ -1,0 +1,147 @@
+"""Empirical measurement harness — the paper's "Measured Performance" column.
+
+For each model-ranked candidate: lower through the backend registry, run a
+warmup superstep (compile/trace outside the timed region), then time
+repeated supersteps with ``block_until_ready``.  Reported metrics mirror
+paper Table III for *our* hardware:
+
+  achieved GB/s      — useful cells/s x Table I bytes/cell (effective BW)
+  achieved GFLOP/s   — useful cells/s x tap-set FLOP/cell
+  model accuracy     — measured / model-estimated effective GB/s (the
+                       paper's Table III "Model Accuracy" column)
+
+A candidate that fails to lower, compile, or execute (Pallas rejects some
+shape/padding combinations; a backend may be unavailable off-TPU) yields a
+``Measurement`` with ``ok=False`` carrying the error — the tuner skips it
+and moves down the frontier instead of crashing the search.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.analysis.hw import TpuChip, V5E
+from repro.core import reference as ref
+from repro.core.program import as_program
+from repro.backends import lower
+from repro.tuning.model_rank import RankedCandidate, predict
+from repro.tuning.space import Candidate
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """Empirical result for one candidate (``ok=False`` => failed to run)."""
+
+    ranked: RankedCandidate
+    ok: bool
+    error: Optional[str] = None
+    us_per_superstep: float = 0.0
+    achieved_gcells: float = 0.0   # useful GCell/s
+    achieved_gbps: float = 0.0     # effective GB/s (Table I bytes/cell)
+    achieved_gflops: float = 0.0   # useful GFLOP/s
+    model_accuracy: float = 0.0    # measured/estimated (paper Table III col.)
+
+    @property
+    def candidate(self) -> Candidate:
+        return self.ranked.candidate
+
+    def describe(self) -> str:
+        if not self.ok:
+            return f"{self.candidate.describe()} -> FAILED: {self.error}"
+        return (f"{self.candidate.describe()} -> "
+                f"{self.achieved_gbps:.3f} GB/s measured vs "
+                f"{self.ranked.predicted_gbps:.3f} est "
+                f"(accuracy {self.model_accuracy:.2f}, "
+                f"{self.us_per_superstep:.0f} us/superstep)")
+
+
+def _failed(ranked: RankedCandidate, err: BaseException) -> Measurement:
+    return Measurement(ranked=ranked, ok=False,
+                       error=f"{type(err).__name__}: {err}")
+
+
+def measure_candidate(
+    program,
+    ranked: RankedCandidate,
+    grid_shape: Tuple[int, ...],
+    *,
+    warmup: int = 1,
+    reps: int = 2,
+    seed: int = 0,
+) -> Measurement:
+    """Time one candidate's superstep on a ``grid_shape`` grid.
+
+    Never raises for a broken candidate: lowering, compilation, and
+    execution errors are captured in the returned ``Measurement``.
+    """
+    prog = as_program(program)
+    cand = ranked.candidate
+    try:
+        lowered = lower(prog, cand.plan, backend=cand.backend,
+                        version=cand.backend_version)
+        grid = ref.random_grid(prog, grid_shape, seed=seed)
+        fn = jax.jit(lambda g: lowered.superstep(g))
+        for _ in range(max(warmup, 1)):
+            jax.block_until_ready(fn(grid))
+        t0 = time.perf_counter()
+        for _ in range(max(reps, 1)):
+            out = fn(grid)
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / max(reps, 1)
+    except Exception as e:  # lowering/compile/runtime failure: skip, not crash
+        return _failed(ranked, e)
+
+    useful_cells = math.prod(grid_shape) * cand.plan.par_time
+    gcells = useful_cells / dt / 1e9
+    gbps = gcells * prog.bytes_per_cell
+    accuracy = gbps / ranked.predicted_gbps if ranked.predicted_gbps else 0.0
+    return Measurement(
+        ranked=ranked,
+        ok=True,
+        us_per_superstep=dt * 1e6,
+        achieved_gcells=gcells,
+        achieved_gbps=gbps,
+        achieved_gflops=gcells * prog.flops_per_cell,
+        model_accuracy=accuracy,
+    )
+
+
+def measure_frontier(
+    program,
+    frontier: Sequence[RankedCandidate],
+    grid_shape: Tuple[int, ...],
+    *,
+    warmup: int = 1,
+    reps: int = 2,
+    seed: int = 0,
+) -> List[Measurement]:
+    """Measure every frontier candidate; failures are kept (``ok=False``)
+    so the caller can report *why* a model favourite did not survive."""
+    return [measure_candidate(program, r, grid_shape,
+                              warmup=warmup, reps=reps, seed=seed)
+            for r in frontier]
+
+
+def measure_candidates(
+    program,
+    candidates: Sequence[Candidate],
+    grid_shape: Tuple[int, ...],
+    chip: TpuChip = V5E,
+    **kwargs,
+) -> List[Measurement]:
+    """Convenience: predict + measure raw candidates (used by tests/CLI to
+    sweep a whole small space rather than a ranked frontier)."""
+    frontier = [predict(program, c, chip, grid_shape) for c in candidates]
+    return measure_frontier(program, frontier, grid_shape, **kwargs)
+
+
+def best_measurement(
+        measurements: Sequence[Measurement]) -> Optional[Measurement]:
+    """Highest achieved throughput among the candidates that ran."""
+    ok = [m for m in measurements if m.ok]
+    return max(ok, key=lambda m: m.achieved_gcells) if ok else None

@@ -1,0 +1,76 @@
+"""Model-guided ranking of design-space candidates (paper §V.A).
+
+The paper evaluates its performance model over every feasible configuration
+and hands the top of the list to place-and-route; we rank with the TPU
+roofline model (``perf_model.predicted_gbps``: bytes streamed + FLOPs
+against ``analysis.hw`` chip ceilings, overlap redundancy charged) and hand
+the top-K frontier to the empirical harness (``tuning.measure``) — the
+model prunes the thousands-point space down to the handful worth timing.
+
+Ordering: predicted effective GB/s descending; ties broken toward
+sublane-aligned halos (the paper's eq. 6 preference) and then smaller VMEM
+footprints (more headroom for the compiler).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.analysis.hw import TpuChip, V5E
+from repro.core import perf_model
+from repro.core.blocking import estimate, grid_useful_fraction
+from repro.core.program import as_program
+from repro.tuning.space import Candidate
+
+
+@dataclasses.dataclass(frozen=True)
+class RankedCandidate:
+    candidate: Candidate
+    predicted_gbps: float      # effective GB/s (model)
+    predicted_gcells: float    # useful GCell/s (model)
+    predicted_gflops: float    # useful GFLOP/s (model)
+    bound: str                 # "compute" | "memory"
+
+    def describe(self) -> str:
+        return (f"{self.candidate.describe()} -> "
+                f"{self.predicted_gbps:.1f} GB/s "
+                f"({self.predicted_gcells:.2f} GCell/s, {self.bound}-bound)")
+
+
+def predict(program, candidate: Candidate, chip: TpuChip = V5E,
+            grid_shape: Optional[Tuple[int, ...]] = None) -> RankedCandidate:
+    """Model prediction for one candidate (grid-padding waste charged when
+    the target grid is known — same penalty ``blocking.plan_blocking``
+    applies)."""
+    prog = as_program(program)
+    est = estimate(candidate.plan, chip)
+    useful = grid_useful_fraction(grid_shape, candidate.plan.block_shape)
+    # == perf_model.predicted_gbps(prog, plan, chip) on the estimate above
+    # (one shared formula, one estimate() evaluation per candidate).
+    gbps = perf_model.gbps_from_cells_per_s(est.gcells_per_s,
+                                            cell_bytes=prog.bytes_per_cell)
+    return RankedCandidate(
+        candidate=candidate,
+        predicted_gbps=useful * gbps,
+        predicted_gcells=useful * est.gcells_per_s / 1e9,
+        predicted_gflops=useful * est.gflops_per_s / 1e9,
+        bound=est.bound,
+    )
+
+
+def rank(program, candidates: Sequence[Candidate], chip: TpuChip = V5E,
+         top_k: Optional[int] = None,
+         grid_shape: Optional[Tuple[int, ...]] = None
+         ) -> List[RankedCandidate]:
+    """Rank candidates by predicted throughput, best first.
+
+    The returned list is non-increasing in ``predicted_gbps``; ``top_k``
+    truncates to the measurement frontier.
+    """
+    ranked = [predict(program, c, chip, grid_shape) for c in candidates]
+    ranked.sort(key=lambda r: (r.predicted_gbps,
+                               r.candidate.halo_aligned,
+                               -r.candidate.plan.vmem_bytes),
+                reverse=True)
+    return ranked if top_k is None else ranked[:top_k]

@@ -1,0 +1,195 @@
+"""Design-space enumeration for the autotuner (paper §V.A, eqs. 2/4/5/6).
+
+The paper tunes (bsize, par_vec, par_time) for an FPGA; we tune
+(bsize, par_time, backend) for a TPU.  Enumeration works in **bsize space**
+— the padded input window one superstep streams from HBM — exactly like the
+paper, and derives the useful output tile by eq. 2:
+
+    csize_d = bsize_d - 2 * par_time * halo_radius        (per axis)
+
+The paper's feasibility constraints map onto TPU pruning predicates:
+
+  paper eq. 2  csize > 0            -> :func:`eq2_csize` returning None
+  paper eq. 4/5 DSP/BRAM budget     -> :func:`fits_vmem` (the on-chip SRAM
+                                       that bounds how deep a block can go)
+  paper eq. 6  DDR burst alignment  -> :func:`is_aligned` on bsize (minor %
+                                       LANE, second-minor % SUBLANE); the
+                                       (par_time*rad) % SUBLANE == 0 variant
+                                       is kept as a *soft* ranking signal
+                                       (``Candidate.halo_aligned``), the
+                                       paper's own 4 -> 8 alignment trick
+  (ours)       overlap-tax floor    -> ``min_useful_fraction``: overlapped
+                                       blocking past ~4x redundancy never
+                                       wins (paper Fig. 3's falling edge)
+
+``par_vec`` has no free TPU analogue (the VPU always runs (8, 128) tiles);
+it is absorbed by the lane-alignment predicate — see DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional, Sequence, Tuple
+
+from repro.analysis.hw import TpuChip, V5E
+from repro.backends.registry import default_backend_name, get_backend
+from repro.core.blocking import (LANE, MIN_USEFUL_FRACTION, SUBLANE,
+                                 BlockPlan, round_up)
+from repro.core.program import as_program
+
+Shape = Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One legal point of the design space: a blocking plan on a backend.
+
+    ``plan.block_shape`` is the eq. 2 csize (useful output tile);
+    ``plan.padded_shape`` reproduces the enumerated bsize.
+    """
+
+    plan: BlockPlan
+    backend: str
+    backend_version: int
+    halo_aligned: bool     # (par_time * halo_radius) % SUBLANE == 0 (soft eq. 6)
+
+    @property
+    def bsize(self) -> Shape:
+        return self.plan.padded_shape
+
+    @property
+    def csize(self) -> Shape:
+        return self.plan.block_shape
+
+    @property
+    def par_time(self) -> int:
+        return self.plan.par_time
+
+    def describe(self) -> str:
+        return (f"bsize={'x'.join(map(str, self.bsize))} "
+                f"csize={'x'.join(map(str, self.csize))} "
+                f"par_time={self.par_time} backend={self.backend}"
+                f"@v{self.backend_version}")
+
+
+# ---- pruning predicates (each maps one paper constraint) -------------------
+
+def eq2_csize(bsize: Shape, par_time: int,
+              halo_radius: int) -> Optional[Shape]:
+    """Paper eq. 2 per axis; None when any axis has csize <= 0."""
+    cs = tuple(b - 2 * par_time * halo_radius for b in bsize)
+    return cs if all(c > 0 for c in cs) else None
+
+
+def is_aligned(bsize: Shape) -> bool:
+    """TPU analogue of paper eq. 6: the streamed window must land on
+    register-tile boundaries — minor dim a multiple of LANE (128), second
+    minor a multiple of SUBLANE (8).  Leading (z) dims are unconstrained."""
+    return bsize[-1] % LANE == 0 and bsize[-2] % SUBLANE == 0
+
+
+def fits_vmem(plan: BlockPlan, chip: TpuChip) -> bool:
+    """Paper eq. 4/5 analogue: the double-buffered window must fit the
+    planner's VMEM budget (their DSP/BRAM caps, our on-chip SRAM cap)."""
+    return plan.vmem_bytes <= chip.vmem_budget_bytes
+
+
+def halo_aligned(par_time: int, halo_radius: int) -> bool:
+    """Paper's own eq. 6 trick (pad 4 -> 8): prefer supersteps whose halo
+    depth is sublane-aligned.  Soft — recorded on the candidate for ranking
+    tie-breaks, never used to prune."""
+    return (par_time * halo_radius) % SUBLANE == 0
+
+
+# ---- bsize candidates ------------------------------------------------------
+
+# Static per-axis sweeps sized for paper-scale grids (the paper sweeps
+# bsize_x in {1024..8192}); minor axis LANE-aligned, second minor
+# SUBLANE-aligned by construction.
+_AXIS_OPTIONS_2D = ((128, 256, 512, 1024, 2048),
+                    (512, 1024, 2048, 4096))
+_AXIS_OPTIONS_3D = ((8, 16, 32, 64),
+                    (32, 64, 128, 256),
+                    (256, 512, 1024))
+
+
+def default_bsizes(ndim: int,
+                   grid_shape: Optional[Shape] = None) -> Tuple[Shape, ...]:
+    """Padded-window candidates.
+
+    The static per-axis sweep, plus — when a grid is given — windows derived
+    from the grid extents (full / half / quarter per axis, rounded up to
+    alignment) so tiny CI grids still yield a non-degenerate space; static
+    options larger than the (rounded-up) grid axis are dropped as pure
+    padding waste.
+    """
+    static = _AXIS_OPTIONS_2D if ndim == 2 else _AXIS_OPTIONS_3D
+    if grid_shape is None:
+        return tuple(itertools.product(*static))
+    if len(grid_shape) != ndim:
+        raise ValueError(f"grid_shape {grid_shape} is not {ndim}-D")
+    per_axis: List[Tuple[int, ...]] = []
+    for d, g in enumerate(grid_shape):
+        if d == ndim - 1:
+            align = LANE
+        elif d == ndim - 2:
+            align = SUBLANE
+        else:
+            align = 4
+        cap = round_up(g, align)
+        opts = {round_up(max(g // f, 1), align) for f in (1, 2, 4)}
+        opts.update(o for o in static[d] if o <= cap)
+        per_axis.append(tuple(sorted(opts)))
+    return tuple(itertools.product(*per_axis))
+
+
+# ---- the legal space -------------------------------------------------------
+
+def enumerate_space(
+    program,
+    chip: TpuChip = V5E,
+    *,
+    backends: Optional[Sequence[str]] = None,
+    backend_version: Optional[int] = None,
+    bsizes: Optional[Sequence[Shape]] = None,
+    grid_shape: Optional[Shape] = None,
+    max_par_time: int = 32,
+    min_useful_fraction: float = MIN_USEFUL_FRACTION,
+) -> List[Candidate]:
+    """All legal (bsize, par_time, backend) points for ``program`` on ``chip``.
+
+    Every returned candidate satisfies eq. 2 (positive csize on every axis),
+    the bsize alignment predicate, and the VMEM budget; candidates whose
+    useful fraction (csize/bsize product) falls below
+    ``min_useful_fraction`` are pruned as unwinnable redundancy.
+    """
+    prog = as_program(program)
+    r = prog.halo_radius
+    if bsizes is None:
+        bsizes = default_bsizes(prog.ndim, grid_shape)
+    if backends is None:
+        backends = (default_backend_name(),)
+
+    resolved = [(name, get_backend(name, backend_version)[1])
+                for name in backends]
+
+    out: List[Candidate] = []
+    for bsize in bsizes:
+        if len(bsize) != prog.ndim or not is_aligned(bsize):
+            continue
+        for pt in range(1, max_par_time + 1):
+            cs = eq2_csize(bsize, pt, r)
+            if cs is None:
+                break                      # csize shrinks with pt: no recovery
+            plan = BlockPlan(spec=prog, block_shape=cs, par_time=pt)
+            if not fits_vmem(plan, chip):
+                break   # VMEM is pt-invariant (streamed window == bsize)
+            if plan.useful_fraction <= min_useful_fraction:
+                break   # strictly decreasing in pt; boundary matches
+                        # blocking.candidate_plans
+            for name, version in resolved:
+                out.append(Candidate(plan=plan, backend=name,
+                                     backend_version=version,
+                                     halo_aligned=halo_aligned(pt, r)))
+    return out

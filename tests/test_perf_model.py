@@ -107,3 +107,33 @@ def test_config_enumeration_ranks_paper_configs_high():
         paper_pred = pm.paper_predicted_gbps(
             row.f_mhz, row.par_vec, row.par_time, row.bsize[0], row.rad)
         assert best.predicted_gbps() >= paper_pred * 0.999
+
+
+def test_predicted_gbps_programmatic_entry_point():
+    """The TPU-side model entry shares the effective-bandwidth formula with
+    the paper Table III path (satellite of the tuning subsystem)."""
+    from repro.analysis.hw import V5E
+    from repro.core.blocking import BlockPlan, estimate
+    from repro.core.program import StencilProgram
+
+    prog = StencilProgram(ndim=2, radius=4)
+    plan = BlockPlan(spec=prog, block_shape=(512, 512), par_time=4)
+    gbps = pm.predicted_gbps(prog, plan, V5E)
+    est = estimate(plan, V5E)
+    # one formula: cells/s -> GB/s via Table I bytes/cell
+    assert gbps == pytest.approx(
+        pm.gbps_from_cells_per_s(est.gcells_per_s,
+                                 cell_bytes=prog.bytes_per_cell))
+    assert gbps > 0
+
+
+def test_paper_path_routes_through_shared_formula():
+    """paper_predicted_gbps == cells/s x bytes/cell through
+    gbps_from_cells_per_s — no duplicated arithmetic."""
+    row = pm.PAPER_TABLE3[0]
+    cs = pm.csize(row.bsize[0], row.par_time, row.rad)
+    cells_per_s = (row.f_mhz * 1e6 * row.par_vec * row.par_time
+                   * (cs / row.bsize[0]))
+    assert pm.paper_predicted_gbps(
+        row.f_mhz, row.par_vec, row.par_time, row.bsize[0], row.rad
+    ) == pytest.approx(pm.gbps_from_cells_per_s(cells_per_s))

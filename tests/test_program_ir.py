@@ -172,3 +172,23 @@ def test_periodic_boundary_translation_invariance():
     b = np.asarray(ref.program_nsteps_unrolled(prog, pc, rolled, 2))
     np.testing.assert_allclose(np.roll(a, (3, 7), axis=(0, 1)), b,
                                atol=1e-6, rtol=1e-6)
+
+
+def test_stencil_spec_alias_emits_deprecation_warning():
+    """StencilSpec survives only as a deprecation alias of the star-subset
+    StencilProgram; constructing one must say so."""
+    with pytest.warns(DeprecationWarning, match="StencilSpec is a deprecated"):
+        spec = StencilSpec(ndim=2, radius=2)
+    # the alias still lifts into the IR unchanged
+    prog = spec.to_program()
+    assert prog == StencilProgram(ndim=2, radius=2, shape="star")
+    assert spec.flops_per_cell == prog.flops_per_cell
+
+
+def test_program_construction_does_not_warn():
+    """The replacement API is warning-free (recwarn catches everything)."""
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        StencilProgram(ndim=3, radius=4, shape="box", boundary="periodic")

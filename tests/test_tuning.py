@@ -1,0 +1,401 @@
+"""Autotuning subsystem: space legality, model ranking, measurement
+robustness, plan-cache round trips, and the end-to-end autotune contract."""
+
+import math
+
+import pytest
+
+from repro.analysis.hw import V5E, TpuChip
+from repro.backends.registry import register_backend
+from repro.core.blocking import LANE, SUBLANE
+from repro.core.program import StencilProgram
+from repro import tuning
+from repro.tuning import cache as tcache
+from repro.tuning import space as tspace
+
+
+# ---- space enumeration (paper eq. 2 / VMEM / alignment) --------------------
+
+SMALL_BSIZES = {
+    2: [(16, 128), (32, 128), (32, 256), (64, 256), (100, 100), (64, 100)],
+    3: [(8, 16, 128), (16, 32, 256), (8, 16, 100), (7, 16, 128)],
+}
+
+
+@pytest.mark.parametrize("ndim", [2, 3])
+@pytest.mark.parametrize("rad", [1, 2, 3, 4])
+def test_space_respects_all_constraints(ndim, rad):
+    """Property over radii 1-4, 2D+3D: every enumerated candidate satisfies
+    eq. 2 (positive csize per axis), bsize alignment, the VMEM budget, and
+    the useful-fraction floor — including for deliberately unaligned bsize
+    inputs, which must be pruned."""
+    prog = StencilProgram(ndim=ndim, radius=rad)
+    cands = tspace.enumerate_space(
+        prog, V5E, backends=("xla-reference",),
+        bsizes=SMALL_BSIZES[ndim], max_par_time=8)
+    for c in cands:
+        bsize, cs = c.bsize, c.csize
+        # eq. 2: csize_d = bsize_d - 2*pt*r, all positive
+        assert cs == tuple(b - 2 * c.par_time * prog.halo_radius
+                           for b in bsize)
+        assert all(x > 0 for x in cs)
+        # alignment (eq. 6 analogue): streamed window on register tiles
+        assert bsize[-1] % LANE == 0 and bsize[-2] % SUBLANE == 0
+        # VMEM budget (eq. 4/5 analogue)
+        assert c.plan.vmem_bytes <= V5E.vmem_budget_bytes
+        # overlap-tax floor (same boundary as blocking.candidate_plans)
+        assert c.plan.useful_fraction > 0.25
+        # soft eq. 6 flag is consistent
+        assert c.halo_aligned == (
+            (c.par_time * prog.halo_radius) % SUBLANE == 0)
+    # the unaligned bsizes never survive
+    assert all(c.bsize[-1] % LANE == 0 for c in cands)
+    # eq. 2 really prunes: with bsize_y=16 and radius 4 only pt=1 is legal
+    if ndim == 2 and rad == 4:
+        pts = {c.par_time for c in cands if c.bsize == (16, 128)}
+        assert pts == {1}
+
+
+def test_space_vmem_budget_prunes():
+    """A chip with a tiny VMEM budget admits only small windows."""
+    tiny = TpuChip(name="tiny", vmem_budget_bytes=2 * 64 * 256 * 4)
+    prog = StencilProgram(ndim=2, radius=1)
+    cands = tspace.enumerate_space(
+        prog, tiny, backends=("xla-reference",),
+        bsizes=[(32, 256), (64, 256), (128, 512)], max_par_time=4)
+    assert cands
+    assert all(math.prod(c.bsize) <= 64 * 256 for c in cands)
+
+
+def test_default_bsizes_cover_tiny_and_paper_grids():
+    for grid in [(64, 256), (16384, 16384)]:
+        prog = StencilProgram(ndim=2, radius=4)
+        cands = tspace.enumerate_space(prog, V5E,
+                                       backends=("xla-reference",),
+                                       grid_shape=grid)
+        assert cands, grid
+
+
+# ---- model ranking ---------------------------------------------------------
+
+def test_rank_is_monotone_in_predicted_throughput():
+    prog = StencilProgram(ndim=2, radius=2)
+    cands = tspace.enumerate_space(prog, V5E, backends=("xla-reference",),
+                                   grid_shape=(64, 256), max_par_time=6)
+    ranked = tuning.rank(prog, cands, V5E)
+    assert len(ranked) == len(cands)
+    gbps = [r.predicted_gbps for r in ranked]
+    assert gbps == sorted(gbps, reverse=True)
+    assert all(g > 0 for g in gbps)
+    # top_k is a prefix of the full ranking
+    assert tuning.rank(prog, cands, V5E, top_k=3) == ranked[:3]
+
+
+def test_predicted_gbps_prefers_deeper_par_time_when_memory_bound():
+    """Temporal blocking cuts HBM traffic ~1/par_time (the paper's headline
+    mechanism) — the model must reward it while memory-bound."""
+    from repro.core.blocking import BlockPlan
+    from repro.core.perf_model import predicted_gbps
+
+    prog = StencilProgram(ndim=2, radius=1)
+    shallow = BlockPlan(spec=prog, block_shape=(512, 512), par_time=1)
+    deep = BlockPlan(spec=prog, block_shape=(512, 512), par_time=4)
+    assert predicted_gbps(prog, deep, V5E) > predicted_gbps(
+        prog, shallow, V5E)
+
+
+# ---- measurement harness ---------------------------------------------------
+
+def _register_failing_backend():
+    try:
+        @register_backend("tuning-test-fail", version=1)
+        def _fail(program, plan, coeffs):
+            raise RuntimeError("deliberate compile failure")
+    except ValueError:
+        pass  # already registered in this process
+
+
+def test_measure_survives_compile_failing_candidate():
+    _register_failing_backend()
+    prog = StencilProgram(ndim=2, radius=1)
+    cands = tspace.enumerate_space(
+        prog, V5E, backends=("tuning-test-fail", "xla-reference"),
+        bsizes=[(16, 128)], max_par_time=1)
+    assert {c.backend for c in cands} == {"tuning-test-fail",
+                                         "xla-reference"}
+    ms = tuning.measure_candidates(prog, cands, (16, 128), reps=1)
+    by_backend = {m.candidate.backend: m for m in ms}
+    bad = by_backend["tuning-test-fail"]
+    assert not bad.ok and "deliberate compile failure" in bad.error
+    good = by_backend["xla-reference"]
+    assert good.ok and good.achieved_gcells > 0
+    assert tuning.best_measurement(ms) is good
+
+
+def test_autotune_falls_back_to_model_when_nothing_runs(tmp_path):
+    """All-failing frontier: autotune still returns the model's top pick."""
+    _register_failing_backend()
+    prog = StencilProgram(ndim=2, radius=1)
+    tuned = tuning.autotune(
+        prog, V5E, grid_shape=(16, 128), backend="tuning-test-fail",
+        bsizes=[(16, 128)], max_par_time=2,
+        cache_path=str(tmp_path / "plans.json"))
+    assert tuned.measurement is None
+    assert tuned.plan.par_time >= 1 and tuned.predicted_gbps > 0
+
+
+def test_measurement_reports_table3_style_metrics():
+    prog = StencilProgram(ndim=2, radius=1)
+    cands = tspace.enumerate_space(prog, V5E, backends=("xla-reference",),
+                                   bsizes=[(32, 256)], max_par_time=1)
+    (m,) = tuning.measure_candidates(prog, cands, (32, 256), reps=1)
+    assert m.ok
+    assert m.achieved_gbps == pytest.approx(
+        m.achieved_gcells * prog.bytes_per_cell)
+    assert m.achieved_gflops == pytest.approx(
+        m.achieved_gcells * prog.flops_per_cell)
+    assert m.model_accuracy == pytest.approx(
+        m.achieved_gbps / m.ranked.predicted_gbps)
+
+
+# ---- plan cache ------------------------------------------------------------
+
+def test_cache_round_trip_and_backend_version_invalidation(tmp_path):
+    store = tcache.PlanCache(str(tmp_path / "plans.json"))
+    prog = StencilProgram(ndim=2, radius=3)
+    key_v1 = tcache.cache_key(prog, (64, 256), V5E.name, "pallas-tpu", 1)
+    store.put(key_v1, {"block_shape": [32, 128], "par_time": 2})
+    assert store.get(key_v1) == {"block_shape": [32, 128], "par_time": 2}
+    assert len(store) == 1
+
+    # backend version bump -> different key -> miss (stale plan unreachable)
+    key_v2 = tcache.cache_key(prog, (64, 256), V5E.name, "pallas-tpu", 2)
+    assert key_v2 != key_v1
+    assert store.get(key_v2) is None
+
+    # any program-semantics change also misses
+    other = StencilProgram(ndim=2, radius=3, boundary="periodic")
+    assert tcache.cache_key(other, (64, 256), V5E.name,
+                            "pallas-tpu", 1) != key_v1
+    # ...but an equal program (fresh object) hits
+    same = StencilProgram(ndim=2, radius=3)
+    assert tcache.cache_key(same, (64, 256), V5E.name,
+                            "pallas-tpu", 1) == key_v1
+
+    assert store.clear() == 1
+    assert store.get(key_v1) is None
+
+
+def test_cache_survives_corrupt_file(tmp_path):
+    path = tmp_path / "plans.json"
+    path.write_text("{not json")
+    store = tcache.PlanCache(str(path))
+    assert store.get("anything") is None
+    store.put("k", {"par_time": 1})
+    assert store.get("k") == {"par_time": 1}
+
+
+# ---- autotune end-to-end (the acceptance contract) -------------------------
+
+def test_autotune_2d_r4_beats_median_and_caches(tmp_path, monkeypatch):
+    """ISSUE acceptance: on a 2D radius-4 star program the tuned plan's
+    measured throughput is >= the median of the enumerated legal space, and
+    a second call hits the cache without re-measuring."""
+    prog = StencilProgram(ndim=2, radius=4)
+    grid = (32, 256)
+    bsizes = [(16, 256), (32, 128), (32, 256), (64, 256)]
+    backend = "pallas-interpret"
+    cache_path = str(tmp_path / "plans.json")
+
+    space = tuning.enumerate_space(prog, V5E, backends=(backend,),
+                                   bsizes=bsizes, max_par_time=3)
+    assert len(space) >= 4
+    sweep = tuning.measure_candidates(prog, space, grid, reps=2)
+    achieved = sorted(m.achieved_gcells for m in sweep if m.ok)
+    assert achieved, "no candidate ran"
+    median = achieved[len(achieved) // 2]
+
+    tuned = tuning.autotune(prog, V5E, grid_shape=grid, backend=backend,
+                            bsizes=bsizes, max_par_time=3,
+                            top_k=len(space), reps=2,
+                            cache_path=cache_path)
+    assert not tuned.from_cache
+    assert tuned.measurement is not None and tuned.measurement.ok
+    # measured winner over the same space: at least the median candidate
+    # (0.9 tolerance absorbs run-to-run CPU timing noise)
+    assert tuned.measurement.achieved_gcells >= 0.9 * median
+    assert tuned.space_size == len(space)
+
+    # second call: pure cache hit, measurement machinery never invoked
+    calls = []
+    monkeypatch.setattr(tuning, "measure_frontier",
+                        lambda *a, **k: calls.append(1) or [])
+    again = tuning.autotune(prog, V5E, grid_shape=grid, backend=backend,
+                            bsizes=bsizes, max_par_time=3,
+                            top_k=len(space), cache_path=cache_path)
+    assert again.from_cache and not calls
+    assert again.plan.block_shape == tuned.plan.block_shape
+    assert again.plan.par_time == tuned.plan.par_time
+    assert again.measured_gbps == pytest.approx(tuned.measured_gbps)
+    # force=True re-tunes (and would re-measure)
+    monkeypatch.undo()
+    forced = tuning.autotune(prog, V5E, grid_shape=grid, backend=backend,
+                             bsizes=bsizes, max_par_time=3, top_k=2,
+                             reps=1, cache_path=cache_path, force=True)
+    assert not forced.from_cache
+
+
+def test_cache_hit_honors_the_request(tmp_path):
+    """A model-only cached record must not satisfy a measure=True call,
+    and a plan outside an explicit bsizes/max_par_time restriction must
+    re-tune instead of returning the stale cached plan."""
+    prog = StencilProgram(ndim=2, radius=1)
+    grid = (32, 256)
+    cache_path = str(tmp_path / "plans.json")
+    kw = dict(grid_shape=grid, backend="xla-reference",
+              cache_path=cache_path)
+
+    model_only = tuning.autotune(prog, V5E, measure=False, max_par_time=4,
+                                 **kw)
+    assert model_only.measurement is None
+
+    measured = tuning.autotune(prog, V5E, measure=True, max_par_time=4,
+                               reps=1, **kw)
+    assert not measured.from_cache, \
+        "measure=True satisfied by a model-only record"
+    assert measured.measurement is not None and measured.measurement.ok
+
+    # the measured record satisfies a later model-only call
+    again = tuning.autotune(prog, V5E, measure=False, max_par_time=4, **kw)
+    assert again.from_cache
+
+    # a tighter max_par_time than the cached plan re-tunes
+    if measured.plan.par_time > 1:
+        tight = tuning.autotune(prog, V5E, measure=False,
+                                max_par_time=measured.plan.par_time - 1,
+                                **kw)
+        assert not tight.from_cache
+        assert tight.plan.par_time < measured.plan.par_time
+
+    # an explicit bsize restriction excluding the cached plan re-tunes
+    latest = tuning.autotune(prog, V5E, measure=False, max_par_time=4, **kw)
+    halo = latest.plan.par_time * prog.halo_radius
+    cached_bsize = tuple(b + 2 * halo for b in latest.plan.block_shape)
+    other_bsize = (16, 128) if cached_bsize != (16, 128) else (32, 128)
+    narrowed = tuning.autotune(prog, V5E, measure=False,
+                               bsizes=[other_bsize], max_par_time=4, **kw)
+    assert not narrowed.from_cache
+    assert tuple(b + 2 * narrowed.plan.par_time * prog.halo_radius
+                 for b in narrowed.plan.block_shape) == other_bsize
+
+    # coverage is symmetric: a record searched under a *narrow* bound must
+    # not satisfy a broader request (the deeper space was never explored)
+    kw2 = dict(grid_shape=grid, backend="xla-reference",
+               cache_path=str(tmp_path / "plans2.json"))
+    tuning.autotune(prog, V5E, measure=False, max_par_time=1, **kw2)
+    broad = tuning.autotune(prog, V5E, measure=False, max_par_time=4, **kw2)
+    assert not broad.from_cache
+    # ...while the broad record, once present, covers narrower requests
+    # whose space contains its winner — and the default-space one for sure
+    dflt = tuning.autotune(prog, V5E, measure=False, max_par_time=4, **kw2)
+    assert dflt.from_cache
+
+
+def test_cache_keeps_one_record_per_search_bounds(tmp_path):
+    """Two steady consumers with different bounds on the same
+    (program, grid, backend) must not evict each other: after each has
+    tuned once, both hit the cache on every later call."""
+    prog = StencilProgram(ndim=2, radius=1)
+    kw = dict(grid_shape=(32, 256), backend="xla-reference", measure=False,
+              cache_path=str(tmp_path / "plans.json"))
+
+    tuning.autotune(prog, V5E, max_par_time=4, **kw)   # consumer A
+    tuning.autotune(prog, V5E, max_par_time=1, **kw)   # consumer B
+    a = tuning.autotune(prog, V5E, max_par_time=4, **kw)
+    b = tuning.autotune(prog, V5E, max_par_time=1, **kw)
+    assert a.from_cache and b.from_cache
+    assert b.plan.par_time == 1
+
+
+def test_measured_cache_hit_requires_frontier_coverage(tmp_path):
+    """A record measured over a K-candidate frontier must not satisfy a
+    measure=True request with a wider frontier — unless the cached frontier
+    already covered the whole space."""
+    prog = StencilProgram(ndim=2, radius=1)
+    kw = dict(grid_shape=(32, 256), backend="xla-reference",
+              bsizes=[(16, 128), (32, 128), (32, 256)], max_par_time=2,
+              reps=1, cache_path=str(tmp_path / "plans.json"))
+
+    small = tuning.autotune(prog, V5E, top_k=2, **kw)
+    assert small.frontier_size == 2 < small.space_size
+
+    wide = tuning.autotune(prog, V5E, top_k=50, **kw)
+    assert not wide.from_cache, \
+        "K=2 measurement satisfied a K=50 request"
+    # the wide frontier covered the whole space, so ANY top_k now hits
+    assert wide.frontier_size == wide.space_size
+    assert tuning.autotune(prog, V5E, top_k=3, **kw).from_cache
+    assert tuning.autotune(prog, V5E, top_k=500, **kw).from_cache
+
+
+def test_autotune_model_only_is_deterministic(tmp_path):
+    prog = StencilProgram(ndim=3, radius=2)
+    kw = dict(grid_shape=(32, 64, 256), backend="xla-reference",
+              measure=False, cache=False)
+    a = tuning.autotune(prog, V5E, **kw)
+    b = tuning.autotune(prog, V5E, **kw)
+    assert a.plan == b.plan
+    assert a.measurement is None and a.predicted_gbps == b.predicted_gbps
+
+
+def test_configs_autotune_path(tmp_path):
+    """configs/stencil{2,3}d autotune=True replaces hard-coded plans with
+    tuned ones (model-guided), and the plan cache makes it repeatable."""
+    from repro.configs import stencil2d, stencil3d
+
+    cache_path = str(tmp_path / "plans.json")
+    tuned2 = stencil2d.workloads(radius=1, autotune=True,
+                                 backend="xla-reference",
+                                 cache_path=cache_path)
+    base2 = stencil2d.workloads(radius=1)
+    assert set(tuned2) == set(base2)
+    for name, w in tuned2.items():
+        assert len(w.block_shape) == 2
+        assert w.par_time >= 1
+        assert w.spec == base2[name].spec
+
+    tuned3 = stencil3d.workloads(radius=1, autotune=True,
+                                 backend="xla-reference",
+                                 cache_path=cache_path)
+    assert set(tuned3) == set(stencil3d.workloads(radius=1))
+
+    # every tuned plan landed in the cache
+    store = tcache.PlanCache(cache_path)
+    assert len(store) == len(tuned2) + len(tuned3)
+
+
+def test_cli_tune_inspect_clear(tmp_path, capsys):
+    from repro.tuning import cli
+
+    cache_path = str(tmp_path / "plans.json")
+    rc = cli.main(["tune", "--ndim", "2", "--radius", "1",
+                   "--grid", "64,256", "--backend", "xla-reference",
+                   "--top-k", "2", "--max-par-time", "4",
+                   "--cache", cache_path])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "plan [search" in out and "measured:" in out
+
+    assert cli.main(["inspect", "--cache", cache_path]) == 0
+    out = capsys.readouterr().out
+    assert "1 plan(s)" in out and "2d_star_r1_clamp" in out
+
+    # cached re-tune goes through the cache
+    assert cli.main(["tune", "--ndim", "2", "--radius", "1",
+                     "--grid", "64,256", "--backend", "xla-reference",
+                     "--top-k", "2", "--max-par-time", "4",
+                     "--cache", cache_path]) == 0
+    assert "plan [cache]" in capsys.readouterr().out
+
+    assert cli.main(["clear-cache", "--cache", cache_path]) == 0
+    assert "cleared 1 plan(s)" in capsys.readouterr().out
