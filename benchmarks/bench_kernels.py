@@ -7,22 +7,32 @@ temporal blocking vs par_time=1 at equal steps.
 
 Stencils are described as ``StencilProgram``s and lowered through the
 backend registry; a box/periodic row exercises the non-star path end to end.
+Executor-comparison rows time the fused run executor vs the eager
+per-superstep chain, the double-buffered (pipelined) kernel vs the plain
+one, and a batched ``(B, *grid)`` run vs a per-grid Python loop.
 
-With ``REPRO_BENCH_TUNED=1`` (or ``run(use_tuned=True)``) the blocked plan
-comes from the autotuner's persistent cache (``repro.tuning``, model-guided
-mode) instead of the hand-written block shapes — the serving-path wiring the
-tuning subsystem exists for.
+Env knobs:
+  REPRO_BENCH_TUNED=1      — blocked plans from the autotuner's persistent
+                             cache (``repro.tuning``, model-guided mode)
+                             instead of the hand-written block shapes.
+  REPRO_BENCH_SMOKE=1      — one small 2D case only (CI's per-PR artifact).
+  REPRO_BENCH_BACKEND=NAME — pin the registry backend (e.g. xla-reference
+                             for pallas-free CI runners); the pallas-only
+                             comparison rows are skipped for non-default
+                             backends.
 """
 
 import os
 import time
 
 import jax
+import jax.numpy as jnp
 
-from repro.backends import lower
+from repro.backends import lower, pipelined_variant
 from repro.core import reference as ref
 from repro.core.blocking import BlockPlan
 from repro.core.program import StencilProgram
+from repro.kernels import ops
 
 
 def _time(fn, *args, reps=3):
@@ -45,22 +55,68 @@ def _tuned_plan(prog, grid_shape) -> BlockPlan:
     return tuned.plan
 
 
-def run(use_tuned=None):
+def _executor_rows(prog, shape, plan, rows):
+    """Fused-vs-eager, pipelined-vs-plain, and batched-vs-loop comparisons
+    on one program (direct pallas dispatch path)."""
+    coeffs = prog.default_coeffs()
+    g = ref.random_grid(prog, shape, seed=0)
+    cells = 1
+    for s in shape:
+        cells *= s
+    steps = 2 * plan.par_time
+
+    t_eager = _time(lambda: ops.stencil_run(g, prog, coeffs, plan, steps,
+                                            fused=False), reps=2)
+    t_fused = _time(lambda: ops.stencil_run(g, prog, coeffs, plan, steps),
+                    reps=2)
+    mcells = cells * steps / t_fused / 1e6
+    rows.append((f"run_fused_{prog.ndim}d_r{prog.radius}", t_fused * 1e6,
+                 f"mcells_per_s={mcells:.1f};"
+                 f"fused_speedup_vs_eager={t_eager / t_fused:.2f}x"))
+
+    t_pipe = _time(lambda: ops.stencil_run(g, prog, coeffs, plan, steps,
+                                           pipelined=True), reps=2)
+    rows.append((f"run_pipelined_{prog.ndim}d_r{prog.radius}", t_pipe * 1e6,
+                 f"mcells_per_s={cells * steps / t_pipe / 1e6:.1f};"
+                 f"pipelined_speedup_vs_plain={t_fused / t_pipe:.2f}x"))
+
+    B = 2
+    gb = jnp.stack([ref.random_grid(prog, shape, seed=s) for s in range(B)])
+    t_loop = _time(lambda: [ops.stencil_run(gb[i], prog, coeffs, plan, steps)
+                            for i in range(B)], reps=2)
+    t_batch = _time(lambda: ops.stencil_run(gb, prog, coeffs, plan, steps),
+                    reps=2)
+    rows.append((f"run_batched_b{B}_{prog.ndim}d_r{prog.radius}",
+                 t_batch * 1e6,
+                 f"mcells_per_s={B * cells * steps / t_batch / 1e6:.1f};"
+                 f"batched_speedup_vs_loop={t_loop / t_batch:.2f}x"))
+
+
+def run(use_tuned=None, smoke=None):
     if use_tuned is None:
         use_tuned = os.environ.get("REPRO_BENCH_TUNED") == "1"
+    if smoke is None:
+        smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    backend = os.environ.get("REPRO_BENCH_BACKEND") or None
     rows = []
-    cases = [(2, (256, 512), (64, 128), "star", "clamp"),
-             (3, (32, 64, 256), (8, 16, 128), "star", "clamp")]
+    if smoke:
+        cases = [(2, (64, 256), (32, 128), "star", "clamp")]
+        radii = (1,)
+    else:
+        cases = [(2, (256, 512), (64, 128), "star", "clamp"),
+                 (3, (32, 64, 256), (8, 16, 128), "star", "clamp")]
+        radii = (1, 2, 4)
     programs = []
     for ndim, shape, block, pshape, boundary in cases:
-        for rad in (1, 2, 4):
+        for rad in radii:
             programs.append((StencilProgram(ndim=ndim, radius=rad,
                                             shape=pshape, boundary=boundary),
                              shape, block))
-    # non-star coverage through the identical lowering
-    programs.append((StencilProgram(ndim=2, radius=1, shape="box",
-                                    boundary="periodic"),
-                     (256, 512), (64, 128)))
+    if not smoke:
+        # non-star coverage through the identical lowering
+        programs.append((StencilProgram(ndim=2, radius=1, shape="box",
+                                        boundary="periodic"),
+                         (256, 512), (64, 128)))
 
     for prog, shape, block in programs:
         cells = 1
@@ -75,8 +131,8 @@ def run(use_tuned=None):
         else:
             plan1 = BlockPlan(spec=prog, block_shape=block, par_time=1)
             plan2 = BlockPlan(spec=prog, block_shape=block, par_time=2)
-        low1 = lower(prog, plan1)
-        low2 = lower(prog, plan2)
+        low1 = lower(prog, plan1, backend=backend)
+        low2 = lower(prog, plan2, backend=backend)
         g = ref.random_grid(prog, shape, seed=0)
 
         steps = plan2.par_time
@@ -92,4 +148,12 @@ def run(use_tuned=None):
             tag, t2 * 1e6,
             f"mcells_per_s={mcells:.1f};"
             f"tb_speedup_vs_pt1={t1 / t2:.2f}x"))
+
+    # executor comparisons ride the direct pallas path; a pinned non-pallas
+    # backend (CI's xla-reference artifact) has neither batching nor a
+    # pipelined lowering to compare.
+    if backend is None and pipelined_variant("pallas-interpret"):
+        prog, shape, block = programs[0]
+        plan = BlockPlan(spec=prog, block_shape=block, par_time=2)
+        _executor_rows(prog, shape, plan, rows)
     return rows

@@ -11,6 +11,10 @@ Env knobs:
                           (``repro.tuning``) instead of hand-written ones.
   REPRO_BENCH_JSON=PATH — where to write the JSON (default
                           ./BENCH_results.json; empty string disables).
+  REPRO_BENCH_SMOKE=1   — fast subset (analytic tables + one small kernel
+                          case); what CI runs per-PR to publish the
+                          BENCH_results.json artifact.
+  REPRO_BENCH_BACKEND   — pin the kernel-bench backend (see bench_kernels).
 """
 
 import json
@@ -61,6 +65,9 @@ def main() -> None:
         ("steps", bench_step),
         ("roofline", roofline_table),
     ]
+    if os.environ.get("REPRO_BENCH_SMOKE") == "1":
+        fast = {"table1", "table3", "kernels"}
+        modules = [(n, m) for n, m in modules if n in fast]
     print("name,us_per_call,derived")
     results, errors = [], []
     for name, mod in modules:
@@ -86,6 +93,8 @@ def main() -> None:
             "git_rev": _git_rev(),
             "chip": V5E.name,
             "tuned_plans": os.environ.get("REPRO_BENCH_TUNED") == "1",
+            "smoke": os.environ.get("REPRO_BENCH_SMOKE") == "1",
+            "backend": os.environ.get("REPRO_BENCH_BACKEND") or "default",
             "unix_time": int(time.time()),
             "results": results,
             "errors": errors,

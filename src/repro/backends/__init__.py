@@ -1,7 +1,8 @@
 """Stencil backend registry — ``lower(program, plan)`` to an executable.
 
 Importing this package registers the built-in backends:
-``pallas-tpu``, ``pallas-interpret``, ``xla-reference``.
+``pallas-tpu``, ``pallas-interpret``, their ``-pipelined`` siblings, and
+``xla-reference``.
 """
 
 from repro.backends.registry import (  # noqa: F401
@@ -10,6 +11,7 @@ from repro.backends.registry import (  # noqa: F401
     default_backend_name,
     get_backend,
     lower,
+    pipelined_variant,
     register_backend,
 )
 from repro.backends import pallas_backend as _pallas  # noqa: F401
@@ -21,5 +23,6 @@ __all__ = [
     "default_backend_name",
     "get_backend",
     "lower",
+    "pipelined_variant",
     "register_backend",
 ]

@@ -4,6 +4,18 @@ Version 1 targets the post-rename Pallas API through the compat shim in
 ``kernels/common.py`` (``MemorySpace`` vs ``TPUMemorySpace`` resolved at
 import); a future API break becomes a ``version=2`` registration rather than
 an edit-in-place, so old lowerings remain addressable.
+
+The ``-pipelined`` siblings select the double-buffered prefetch kernel
+(``kernels/common.build_pipelined_kernel``) — the TPU analogue of the
+paper's deep pipeline (§III.A), where the DMA for block g+1 is in flight
+while block g computes.  Making it a *backend name* (rather than a hidden
+flag) puts it on the autotuner's search axis and into the plan-cache key,
+so a plan tuned on one kernel variant never silently serves the other.
+
+``run`` on every pallas backend goes through the fused run executor
+(``ops.stencil_run(fused=True)``): one donated executable per run, the
+remainder superstep folded in.  All backends accept a leading batch axis
+(``(B, *grid)``) on both ``superstep`` and ``run``.
 """
 
 from __future__ import annotations
@@ -29,7 +41,7 @@ def _make(program: StencilProgram, plan: Optional[BlockPlan],
 
     def run_fn(grid, c, steps):
         return ops.stencil_run(grid, program, c, plan, steps,
-                               interpret=interpret)
+                               interpret=interpret, pipelined=pipelined)
 
     return LoweredStencil(program, plan, coeffs, superstep_fn, run_fn)
 
@@ -44,3 +56,15 @@ def pallas_tpu(program, plan, coeffs) -> LoweredStencil:
 def pallas_interpret(program, plan, coeffs) -> LoweredStencil:
     """Same kernels under the Pallas interpreter — CPU CI / debugging."""
     return _make(program, plan, coeffs, interpret=True, pipelined=False)
+
+
+@register_backend("pallas-tpu-pipelined", version=1)
+def pallas_tpu_pipelined(program, plan, coeffs) -> LoweredStencil:
+    """Double-buffered prefetch kernels, compiled mode."""
+    return _make(program, plan, coeffs, interpret=False, pipelined=True)
+
+
+@register_backend("pallas-interpret-pipelined", version=1)
+def pallas_interpret_pipelined(program, plan, coeffs) -> LoweredStencil:
+    """Double-buffered prefetch kernels under the interpreter (CPU CI)."""
+    return _make(program, plan, coeffs, interpret=True, pipelined=True)

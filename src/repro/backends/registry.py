@@ -12,6 +12,10 @@ Built-in backends (registered in ``repro.backends``):
 
 * ``pallas-tpu``       — temporal-blocked Pallas kernels, compiled mode.
 * ``pallas-interpret`` — same kernels under the Pallas interpreter (CPU CI).
+* ``pallas-tpu-pipelined`` / ``pallas-interpret-pipelined``
+                       — double-buffered prefetch variant (the paper's deep
+                         pipeline); a first-class backend name so the
+                         autotuner searches it and the plan cache keys on it.
 * ``xla-reference``    — naive jnp step loop through XLA; the semantic
                          oracle, also the fallback when Pallas is unavailable.
 
@@ -108,6 +112,17 @@ def default_backend_name() -> str:
     import jax
     return "pallas-tpu" if jax.default_backend() == "tpu" \
         else "pallas-interpret"
+
+
+def pipelined_variant(name: str) -> Optional[str]:
+    """The registered double-buffered sibling of ``name``, or None.
+
+    ``pallas-interpret`` -> ``pallas-interpret-pipelined``; a name that is
+    already pipelined maps to itself; backends without a pipelined lowering
+    (e.g. ``xla-reference``) map to None.
+    """
+    cand = name if name.endswith("-pipelined") else f"{name}-pipelined"
+    return cand if cand in _REGISTRY else None
 
 
 def lower(program, plan: Optional[BlockPlan] = None, *,

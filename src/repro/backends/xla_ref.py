@@ -4,13 +4,18 @@ No blocking of any kind — boundary-pad the full grid, apply the tap-set
 update, repeat.  Semantically authoritative (it *is* the oracle the Pallas
 kernels are tested against) and runs anywhere XLA does.  A ``plan`` is
 accepted so ``superstep`` advances the same ``par_time`` steps as the Pallas
-backends, making lowered results directly comparable.
+backends, making lowered results directly comparable.  A leading batch axis
+(``(B, *grid)``) is supported via ``vmap`` so batched pallas results can be
+checked against the oracle through the same interface.
 """
 
 from __future__ import annotations
 
+import jax
+
 from repro.core import reference as ref
 from repro.backends.registry import LoweredStencil, register_backend
+from repro.kernels.common import batch_dims
 
 
 @register_backend("xla-reference", version=1)
@@ -18,9 +23,15 @@ def xla_reference(program, plan, coeffs) -> LoweredStencil:
     par_time = plan.par_time if plan is not None else 1
 
     def superstep_fn(grid, c):
-        return ref.program_nsteps_unrolled(program, c, grid, par_time)
+        def step(g):
+            return ref.program_nsteps_unrolled(program, c, g, par_time)
+        return jax.vmap(step)(grid) if batch_dims(program, grid.ndim) \
+            else step(grid)
 
     def run_fn(grid, c, steps):
-        return ref.program_nsteps(program, c, grid, steps)
+        def run(g):
+            return ref.program_nsteps(program, c, g, steps)
+        return jax.vmap(run)(grid) if batch_dims(program, grid.ndim) \
+            else run(grid)
 
     return LoweredStencil(program, plan, coeffs, superstep_fn, run_fn)

@@ -5,8 +5,15 @@ blocking plan chosen by the performance model (paper §V.A's tuning loop),
 lowers through the backend registry (``repro.backends``), and exposes:
 
 * ``superstep(grid)``  — advance ``par_time`` steps, one HBM round trip
-* ``run(grid, steps)`` — arbitrary step counts (chained supersteps)
+* ``run(grid, steps)`` — arbitrary step counts through the fused run
+                         executor (one donated executable, remainder folded
+                         in — see ``kernels/common.run_call``)
 * ``estimate()``       — the model's predicted throughput for the plan
+
+``pipelined=True`` selects the double-buffered prefetch kernel (the paper's
+deep pipeline) on both the direct dispatch path and — via the ``-pipelined``
+backend siblings — the registry path.  Grids may carry a leading batch axis
+(``(B, *grid)`` of independent grids).
 """
 
 from __future__ import annotations
@@ -30,7 +37,9 @@ class StencilEngine:
     ``coeffs`` the matching ``StencilCoeffs``/``ProgramCoeffs`` (the kernels
     normalize either into canonical tap order).  ``backend`` optionally pins
     a registry backend name; None keeps the direct Pallas dispatch with
-    ``interpret`` auto-detection.
+    ``interpret`` auto-detection.  ``pipelined=True`` selects the
+    double-buffered kernel: directly on the dispatch path, or — when a
+    pallas ``backend`` is pinned — by resolving its ``-pipelined`` sibling.
     """
 
     spec: object
@@ -39,6 +48,7 @@ class StencilEngine:
     hw: TpuChip = V5E
     interpret: Optional[bool] = None
     backend: Optional[str] = None
+    pipelined: bool = False
 
     @classmethod
     def create(cls, spec, grid_shape: Tuple[int, ...],
@@ -46,32 +56,43 @@ class StencilEngine:
                plan: Optional[BlockPlan] = None,
                max_par_time: int = 64,
                interpret: Optional[bool] = None,
-               backend: Optional[str] = None) -> "StencilEngine":
+               backend: Optional[str] = None,
+               pipelined: bool = False) -> "StencilEngine":
         if coeffs is None:
             coeffs = spec.default_coeffs()
         if plan is None:
             plan = plan_blocking(spec, hw, grid_shape,
                                  max_par_time=max_par_time).plan
         return cls(spec=spec, coeffs=coeffs, plan=plan, hw=hw,
-                   interpret=interpret, backend=backend)
+                   interpret=interpret, backend=backend, pipelined=pipelined)
 
     def lowered(self):
         """Lower through the backend registry (pins ``backend`` if set)."""
-        from repro.backends import lower
+        from repro.backends import lower, pipelined_variant
+        name = self.backend
+        if self.pipelined and name is not None:
+            pipe = pipelined_variant(name)
+            if pipe is None:
+                raise ValueError(
+                    f"backend {name!r} has no pipelined lowering; "
+                    f"pipelined=True would silently run the plain kernel")
+            name = pipe
         return lower(as_program(self.spec), self.plan, coeffs=self.coeffs,
-                     backend=self.backend)
+                     backend=name)
 
     def superstep(self, grid: jnp.ndarray) -> jnp.ndarray:
         if self.backend is not None:
             return self.lowered().superstep(grid)
         return ops.stencil_superstep(grid, self.spec, self.coeffs, self.plan,
-                                     interpret=self.interpret)
+                                     interpret=self.interpret,
+                                     pipelined=self.pipelined)
 
     def run(self, grid: jnp.ndarray, steps: int) -> jnp.ndarray:
         if self.backend is not None:
             return self.lowered().run(grid, steps)
         return ops.stencil_run(grid, self.spec, self.coeffs, self.plan, steps,
-                               interpret=self.interpret)
+                               interpret=self.interpret,
+                               pipelined=self.pipelined)
 
     def estimate(self) -> PlanEstimate:
         return estimate(self.plan, self.hw)

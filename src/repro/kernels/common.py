@@ -29,9 +29,11 @@ and scratch constructors, so the kernels run on either JAX generation.
 
 from __future__ import annotations
 
+import collections
+import dataclasses
 import functools
 import math
-from typing import Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +42,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.blocking import BlockPlan, round_up  # noqa: F401 (re-export)
-from repro.core.codegen import tap_interior_update
+from repro.core.codegen import boundary_pad, tap_interior_update
 from repro.core.program import ProgramCoeffs, StencilProgram
 
 # ---- Pallas API drift shim -------------------------------------------------
@@ -55,6 +57,44 @@ vmem_scratch = pltpu.VMEM
 
 #: DMA semaphore scratch type.
 dma_semaphore = pltpu.SemaphoreType.DMA
+
+
+# ---- trace accounting ------------------------------------------------------
+# Python-side counters bumped at *trace* time inside the jit'd entry points.
+# A jit cache hit never re-traces, so the per-name count equals the number of
+# executables built for that entry point since the last reset — the
+# compile-count regression tests key off this (no jax.monitoring dependency).
+
+_TRACE_COUNTS: Dict[str, int] = collections.Counter()
+
+
+def _note_trace(name: str) -> None:
+    _TRACE_COUNTS[name] += 1
+
+
+def trace_count(name: str) -> int:
+    """How many times the named jit'd entry point traced since last reset."""
+    return _TRACE_COUNTS.get(name, 0)
+
+
+def reset_trace_counts() -> None:
+    _TRACE_COUNTS.clear()
+
+
+def batch_dims(program: StencilProgram, grid_ndim: int) -> int:
+    """Number of leading batch axes on a grid: 0 (unbatched) or 1.
+
+    The single rank rule for every batchable entry point (superstep, run,
+    the xla-reference oracle): a grid may carry exactly one leading axis of
+    independent grids on top of the program's spatial rank.
+    """
+    nb = grid_ndim - program.ndim
+    if nb not in (0, 1):
+        raise ValueError(
+            f"grid rank {grid_ndim} does not match a {program.ndim}-D "
+            f"program (expected {program.ndim} or {program.ndim + 1} with "
+            f"a batch axis)")
+    return nb
 
 
 def boundary_fixup(program: StencilProgram, cur: jnp.ndarray, starts,
@@ -111,67 +151,94 @@ def _fused_steps(program: StencilProgram, plan: BlockPlan, coeffs, buf,
 
 
 def build_superstep_kernel(program: StencilProgram, plan: BlockPlan,
-                           true_shape: Tuple[int, ...]):
+                           true_shape: Tuple[int, ...],
+                           batch: Optional[int] = None):
     """Returns the pallas kernel body for one superstep (par_time fused steps).
 
     ``true_shape`` is the *global* grid shape; the ``offs`` input carries this
     shard's global origin (all zeros on a single device), so boundary fixup
     happens exactly at the physical grid boundary even under domain
     decomposition.
+
+    ``batch`` adds a leading pallas grid dimension over independent grids:
+    the input is ``(B, *padded)``, the scratch window ``(1, *padded_block)``,
+    and ``program_id(0)`` selects the grid while the spatial ids shift right
+    by one.  Boundary fixup is per-grid (the batch axis has no taps, so it
+    never participates in halo arithmetic).
     """
     ndim = program.ndim
     block = plan.block_shape
     padded_block = plan.padded_shape
 
     def kernel(offs_ref, c_ref, t_ref, in_ref, o_ref, buf_ref, sem):
-        pids = [pl.program_id(d) for d in range(ndim)]
+        if batch is None:
+            pids = [pl.program_id(d) for d in range(ndim)]
+        else:
+            pids = [pl.program_id(d + 1) for d in range(ndim)]
         window = tuple(
             pl.ds(pids[d] * block[d], padded_block[d]) for d in range(ndim))
+        if batch is not None:
+            window = (pl.ds(pl.program_id(0), 1),) + window
         cp = pltpu.make_async_copy(in_ref.at[window], buf_ref, sem)
         cp.start()
         cp.wait()
 
         coeffs = ProgramCoeffs(center=c_ref[0, 0], taps=t_ref[...][0])
-        o_ref[...] = _fused_steps(program, plan, coeffs, buf_ref[...], pids,
-                                  offs_ref, true_shape)
+        blk = buf_ref[...] if batch is None else buf_ref[0]
+        res = _fused_steps(program, plan, coeffs, blk, pids, offs_ref,
+                           true_shape)
+        o_ref[...] = res if batch is None else res[jnp.newaxis]
 
     return kernel
 
 
 def build_pipelined_kernel(program: StencilProgram, plan: BlockPlan,
                            true_shape: Tuple[int, ...],
-                           grid: Tuple[int, ...]):
+                           grid: Tuple[int, ...],
+                           batch: Optional[int] = None):
     """Double-buffered variant: the DMA for block g+1 is issued before block
     g's compute — the TPU-native analogue of the paper's deep pipeline
     (their PEs consume a stream while the next block fills the shift
     register).  Two VMEM buffers + two DMA semaphores alternate by grid
     parity; scratch persists across sequential grid steps on a TPU core.
+
+    ``grid`` is the *spatial* block grid; with ``batch`` the iteration space
+    becomes ``(batch, *grid)`` and prefetch streams across grid boundaries of
+    consecutive batch entries too (the linearization folds the batch index in
+    front, so block g+1 of the next grid is prefetched while the last block
+    of the current grid computes).
     """
     ndim = program.ndim
     block = plan.block_shape
     padded_block = plan.padded_shape
-    total = math.prod(grid)
+    vgrid = grid if batch is None else (batch,) + tuple(grid)
+    nd_all = len(vgrid)
+    total = math.prod(vgrid)
 
     def _coords(lin):
         idx = []
         rem = lin
-        for d in range(ndim - 1, -1, -1):
-            idx.append(rem % grid[d])
-            rem = rem // grid[d]
+        for d in range(nd_all - 1, -1, -1):
+            idx.append(rem % vgrid[d])
+            rem = rem // vgrid[d]
         return tuple(reversed(idx))
 
     def kernel(offs_ref, c_ref, t_ref, in_ref, o_ref, buf0, buf1, sem0,
                sem1):
-        pids = [pl.program_id(d) for d in range(ndim)]
-        lin = pids[0]
-        for d in range(1, ndim):
-            lin = lin * grid[d] + pids[d]
+        ids = [pl.program_id(d) for d in range(nd_all)]
+        lin = ids[0]
+        for d in range(1, nd_all):
+            lin = lin * vgrid[d] + ids[d]
         parity = jax.lax.rem(lin, 2)
+        pids = ids if batch is None else ids[1:]
 
         def _copy(lin_idx, buf, sem):
             coords = _coords(lin_idx)
-            window = tuple(pl.ds(coords[d] * block[d], padded_block[d])
+            sp = coords if batch is None else coords[1:]
+            window = tuple(pl.ds(sp[d] * block[d], padded_block[d])
                            for d in range(ndim))
+            if batch is not None:
+                window = (pl.ds(coords[0], 1),) + window
             return pltpu.make_async_copy(in_ref.at[window], buf, sem)
 
         @pl.when(lin == 0)
@@ -192,8 +259,10 @@ def build_pipelined_kernel(program: StencilProgram, plan: BlockPlan,
 
         def _compute(buf, sem):
             _copy(lin, buf, sem).wait()
-            o_ref[...] = _fused_steps(program, plan, coeffs, buf[...], pids,
-                                      offs_ref, true_shape)
+            blk = buf[...] if batch is None else buf[0]
+            res = _fused_steps(program, plan, coeffs, blk, pids, offs_ref,
+                               true_shape)
+            o_ref[...] = res if batch is None else res[jnp.newaxis]
 
         @pl.when(parity == 0)
         def _run_even():
@@ -211,6 +280,74 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _superstep_pallas(padded: jnp.ndarray, center: jnp.ndarray,
+                      taps: jnp.ndarray, program: StencilProgram,
+                      plan: BlockPlan, true_shape: Tuple[int, ...],
+                      interpret: bool,
+                      offsets: jnp.ndarray | None = None,
+                      pipelined: bool = False) -> jnp.ndarray:
+    """Build + invoke the pallas superstep over a pre-padded grid (untraced
+    helper shared by :func:`superstep_call` and :func:`run_call` so the fused
+    run executor never pays a second jit dispatch).
+
+    ``padded`` is ``(rounded + 2*halo per axis)`` or batched
+    ``(B, rounded + 2*halo per axis)``; an extra leading axis becomes a
+    leading pallas grid dimension over independent grids.
+    """
+    ndim = program.ndim
+    batch: Optional[int] = padded.shape[0] \
+        if batch_dims(program, padded.ndim) else None
+    block = plan.block_shape
+    halo = plan.halo
+    spatial = padded.shape[-ndim:]
+    rounded = tuple(spatial[d] - 2 * halo for d in range(ndim))
+    grid = tuple(rounded[d] // block[d] for d in range(ndim))
+
+    if offsets is None:
+        offsets = jnp.zeros((ndim,), jnp.int32)
+    c2 = center.reshape((1, 1)).astype(padded.dtype)
+    t2 = taps.reshape((1, -1)).astype(padded.dtype)
+
+    buf_shape = plan.padded_shape if batch is None \
+        else (1,) + plan.padded_shape
+    if pipelined:
+        kernel = build_pipelined_kernel(program, plan, true_shape, grid,
+                                        batch=batch)
+        scratch = [
+            vmem_scratch(buf_shape, padded.dtype),
+            vmem_scratch(buf_shape, padded.dtype),
+            dma_semaphore,
+            dma_semaphore,
+        ]
+    else:
+        kernel = build_superstep_kernel(program, plan, true_shape,
+                                        batch=batch)
+        scratch = [
+            vmem_scratch(buf_shape, padded.dtype),
+            dma_semaphore,
+        ]
+
+    vgrid = grid if batch is None else (batch,) + grid
+    out_shape = rounded if batch is None else (batch,) + rounded
+    out_block = block if batch is None else (1,) + block
+
+    out = pl.pallas_call(
+        kernel,
+        grid=vgrid,
+        in_specs=[
+            pl.BlockSpec(memory_space=MemorySpace.SMEM),
+            pl.BlockSpec(c2.shape, lambda *g: (0,) * 2),
+            pl.BlockSpec(t2.shape, lambda *g: (0,) * 2),
+            pl.BlockSpec(memory_space=MemorySpace.ANY),
+        ],
+        out_specs=pl.BlockSpec(out_block, lambda *g: g),
+        out_shape=jax.ShapeDtypeStruct(out_shape, padded.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(offsets.astype(jnp.int32), c2, t2, padded)
+    return out
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("program", "plan", "true_shape", "interpret",
@@ -224,7 +361,8 @@ def superstep_call(padded: jnp.ndarray, center: jnp.ndarray,
                    pipelined: bool = False) -> jnp.ndarray:
     """Invoke the pallas kernel over a pre-padded grid.
 
-    ``padded`` has shape ``rounded_up(local) + 2*halo`` per axis, already
+    ``padded`` has shape ``rounded_up(local) + 2*halo`` per axis — or
+    ``(B, ...)`` with a leading batch of independent grids — already
     halo-filled according to the program's boundary mode (pad on a single
     device; neighbor-exchanged + boundary-synthesized under domain
     decomposition).  ``taps`` is the canonical tap-order coefficient vector
@@ -232,44 +370,56 @@ def superstep_call(padded: jnp.ndarray, center: jnp.ndarray,
     shape and ``offsets`` this shard's global origin.  Returns the rounded-up
     local grid after ``par_time`` steps; caller slices back.
     """
+    _note_trace("superstep_call")
+    return _superstep_pallas(padded, center, taps, program, plan, true_shape,
+                             interpret, offsets, pipelined)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("program", "plan", "true_shape", "interpret", "rem",
+                     "pipelined"),
+    donate_argnums=(0,),
+)
+def run_call(rounded_grid: jnp.ndarray, center: jnp.ndarray,
+             taps: jnp.ndarray, full: jnp.ndarray, *,
+             program: StencilProgram, plan: BlockPlan,
+             true_shape: Tuple[int, ...], interpret: bool, rem: int,
+             pipelined: bool = False) -> jnp.ndarray:
+    """Fused multi-superstep executor: one executable, O(1) dispatches.
+
+    ``rounded_grid`` is the grid padded up to a block multiple per axis
+    (``(B, *rounded)`` with a leading batch of independent grids); its buffer
+    is **donated** — the carry updates in place instead of allocating a fresh
+    HBM grid per superstep.  ``full`` is the number of full supersteps and is
+    a *dynamic* argument (a ``fori_loop`` trip count), so any
+    ``steps = k * par_time + rem`` with the same remainder reuses one
+    executable; only a distinct ``rem`` (a different remainder-kernel halo)
+    recompiles.  Each loop iteration re-synthesizes the boundary halo from
+    the current true region and runs the superstep kernel — the pad is fused
+    into the same executable, so nothing round-trips through Python between
+    supersteps (the per-step external-memory traffic the paper's temporal
+    blocking exists to eliminate, §III.A).
+
+    Returns the rounded-up grid after ``full * par_time + rem`` steps;
+    caller slices back to ``true_shape``.
+    """
+    _note_trace("run_call")
     ndim = program.ndim
-    block = plan.block_shape
-    halo = plan.halo
-    rounded = tuple(padded.shape[d] - 2 * halo for d in range(ndim))
-    grid = tuple(rounded[d] // block[d] for d in range(ndim))
+    nb = rounded_grid.ndim - ndim
+    rounded = rounded_grid.shape[nb:]
+    true_ix = (slice(None),) * nb + tuple(
+        slice(0, true_shape[d]) for d in range(ndim))
 
-    if offsets is None:
-        offsets = jnp.zeros((ndim,), jnp.int32)
-    c2 = center.reshape((1, 1)).astype(padded.dtype)
-    t2 = taps.reshape((1, -1)).astype(padded.dtype)
+    def superstep(g, step_plan):
+        h = step_plan.halo
+        pad = [(0, 0)] * nb + [
+            (h, rounded[d] - true_shape[d] + h) for d in range(ndim)]
+        padded = boundary_pad(program, g[true_ix], pad)
+        return _superstep_pallas(padded, center, taps, program, step_plan,
+                                 true_shape, interpret, None, pipelined)
 
-    if pipelined:
-        kernel = build_pipelined_kernel(program, plan, true_shape, grid)
-        scratch = [
-            vmem_scratch(plan.padded_shape, padded.dtype),
-            vmem_scratch(plan.padded_shape, padded.dtype),
-            dma_semaphore,
-            dma_semaphore,
-        ]
-    else:
-        kernel = build_superstep_kernel(program, plan, true_shape)
-        scratch = [
-            vmem_scratch(plan.padded_shape, padded.dtype),
-            dma_semaphore,
-        ]
-
-    out = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=MemorySpace.SMEM),
-            pl.BlockSpec(c2.shape, lambda *g: (0,) * 2),
-            pl.BlockSpec(t2.shape, lambda *g: (0,) * 2),
-            pl.BlockSpec(memory_space=MemorySpace.ANY),
-        ],
-        out_specs=pl.BlockSpec(block, lambda *g: g),
-        out_shape=jax.ShapeDtypeStruct(rounded, padded.dtype),
-        scratch_shapes=scratch,
-        interpret=interpret,
-    )(offsets.astype(jnp.int32), c2, t2, padded)
-    return out
+    g = lax.fori_loop(0, full, lambda _, g: superstep(g, plan), rounded_grid)
+    if rem:
+        g = superstep(g, dataclasses.replace(plan, par_time=rem))
+    return g

@@ -1,9 +1,18 @@
 """Public jit'd entry points for the stencil kernels.
 
 ``stencil_superstep`` dispatches on program ndim; ``stencil_run`` advances an
-arbitrary number of time steps by chaining supersteps (+ one remainder
-superstep with a reduced par_time), preserving exact boundary semantics
-throughout.
+arbitrary number of time steps through the *fused run executor*
+(``kernels/common.run_call``): one donated, compiled executable that loops
+``steps // par_time`` full supersteps with a dynamic trip count and folds the
+``steps % par_time`` remainder superstep into the same executable — O(1)
+dispatches per run and at most one compile per distinct remainder, instead of
+the historical one-dispatch-per-superstep Python chain (kept reachable as
+``fused=False`` for A/B testing).
+
+Both entry points accept a leading batch axis — ``(B, *grid)`` runs B
+independent grids through one kernel launch (an extra leading pallas grid
+dimension) — and a ``pipelined=True`` knob selecting the double-buffered
+prefetch kernel (the paper's deep pipeline, §III.A).
 
 Both accept the legacy (``StencilSpec``, ``StencilCoeffs``) pair or the
 unified-IR (``StencilProgram``, ``ProgramCoeffs``) pair.
@@ -14,8 +23,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import jax.numpy as jnp
+
 from repro.core.blocking import BlockPlan
-from repro.core.program import as_program
+from repro.core.program import as_program, normalize_coeffs
+from repro.kernels import common
 from repro.kernels.stencil2d import stencil2d_superstep
 from repro.kernels.stencil3d import stencil3d_superstep
 
@@ -31,19 +43,52 @@ def stencil_superstep(grid, spec, coeffs, plan: BlockPlan, *,
 
 
 def stencil_run(grid, spec, coeffs, plan: BlockPlan, steps: int, *,
-                interpret: Optional[bool] = None):
+                interpret: Optional[bool] = None,
+                pipelined: bool = False,
+                fused: bool = True):
     """Advance ``steps`` time steps using temporal blocking.
 
     steps = k * par_time + rem: k full supersteps, then one superstep with
-    par_time = rem (same spatial blocks, shallower halo).
+    par_time = rem (same spatial blocks, shallower halo).  ``fused=True``
+    (the default) executes the whole run as one donated executable with a
+    dynamic full-superstep count (see ``common.run_call``); ``fused=False``
+    keeps the eager Python chain of per-superstep dispatches.  ``grid`` may
+    carry a leading batch axis of independent grids.
     """
     if steps < 0:
         raise ValueError("steps must be >= 0")
+    program = as_program(spec)
+    nb = common.batch_dims(program, grid.ndim)
+    if steps == 0:
+        return grid
+
     full, rem = divmod(steps, plan.par_time)
-    for _ in range(full):
-        grid = stencil_superstep(grid, spec, coeffs, plan, interpret=interpret)
-    if rem:
-        rem_plan = dataclasses.replace(plan, par_time=rem)
-        grid = stencil_superstep(grid, spec, coeffs, rem_plan,
-                                 interpret=interpret)
-    return grid
+    if not fused:
+        for _ in range(full):
+            grid = stencil_superstep(grid, spec, coeffs, plan,
+                                     interpret=interpret,
+                                     pipelined=pipelined)
+        if rem:
+            rem_plan = dataclasses.replace(plan, par_time=rem)
+            grid = stencil_superstep(grid, spec, coeffs, rem_plan,
+                                     interpret=interpret,
+                                     pipelined=pipelined)
+        return grid
+
+    pc = normalize_coeffs(program, coeffs)
+    if interpret is None:
+        interpret = common.default_interpret()
+    true_shape = grid.shape[nb:]
+    rounded = tuple(common.round_up(s, b)
+                    for s, b in zip(true_shape, plan.block_shape))
+    # Round up to a block multiple once; the executor re-synthesizes the
+    # boundary halo (and the round-up region) from the true grid every
+    # superstep, so the fill value never reaches the result.
+    pad = [(0, 0)] * nb + [(0, rounded[d] - true_shape[d])
+                           for d in range(program.ndim)]
+    carry = jnp.pad(grid, pad)
+    out = common.run_call(carry, pc.center, pc.taps, full,
+                          program=program, plan=plan, true_shape=true_shape,
+                          interpret=interpret, rem=rem, pipelined=pipelined)
+    return out[(slice(None),) * nb
+               + tuple(slice(0, s) for s in true_shape)]

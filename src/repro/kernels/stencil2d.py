@@ -32,21 +32,28 @@ def stencil2d_superstep(
     interpret: Optional[bool] = None,
     pipelined: bool = False,
 ) -> jnp.ndarray:
-    """Advance a 2D grid by ``plan.par_time`` time steps in one HBM round trip."""
+    """Advance a 2D grid by ``plan.par_time`` time steps in one HBM round trip.
+
+    ``grid`` may be ``(H, W)`` or ``(B, H, W)`` — a leading batch axis runs B
+    independent grids through one kernel launch (extra pallas grid dim).
+    """
     program = as_program(spec)
-    if program.ndim != 2 or grid.ndim != 2:
-        raise ValueError("stencil2d_superstep requires a 2D program and grid")
+    nb = grid.ndim - 2
+    if program.ndim != 2 or nb not in (0, 1):
+        raise ValueError("stencil2d_superstep requires a 2D program and a "
+                         "2D (or batched 3D) grid")
     pc = normalize_coeffs(program, coeffs)
     if interpret is None:
         interpret = common.default_interpret()
 
     h = plan.halo
-    true_shape: Tuple[int, ...] = grid.shape
+    true_shape: Tuple[int, ...] = grid.shape[nb:]
     rounded = tuple(common.round_up(s, b)
                     for s, b in zip(true_shape, plan.block_shape))
-    pad = [(h, rounded[d] - true_shape[d] + h) for d in range(2)]
+    pad = [(0, 0)] * nb + [(h, rounded[d] - true_shape[d] + h)
+                           for d in range(2)]
     padded = boundary_pad(program, grid, pad)
 
     out = common.superstep_call(padded, pc.center, pc.taps, program, plan,
                                 true_shape, interpret, pipelined=pipelined)
-    return out[: true_shape[0], : true_shape[1]]
+    return out[..., : true_shape[0], : true_shape[1]]

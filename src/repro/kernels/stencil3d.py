@@ -30,21 +30,29 @@ def stencil3d_superstep(
     interpret: Optional[bool] = None,
     pipelined: bool = False,
 ) -> jnp.ndarray:
-    """Advance a 3D grid by ``plan.par_time`` time steps in one HBM round trip."""
+    """Advance a 3D grid by ``plan.par_time`` time steps in one HBM round trip.
+
+    ``grid`` may be ``(Z, Y, X)`` or ``(B, Z, Y, X)`` — a leading batch axis
+    runs B independent grids through one kernel launch (extra pallas grid
+    dim).
+    """
     program = as_program(spec)
-    if program.ndim != 3 or grid.ndim != 3:
-        raise ValueError("stencil3d_superstep requires a 3D program and grid")
+    nb = grid.ndim - 3
+    if program.ndim != 3 or nb not in (0, 1):
+        raise ValueError("stencil3d_superstep requires a 3D program and a "
+                         "3D (or batched 4D) grid")
     pc = normalize_coeffs(program, coeffs)
     if interpret is None:
         interpret = common.default_interpret()
 
     h = plan.halo
-    true_shape: Tuple[int, ...] = grid.shape
+    true_shape: Tuple[int, ...] = grid.shape[nb:]
     rounded = tuple(common.round_up(s, b)
                     for s, b in zip(true_shape, plan.block_shape))
-    pad = [(h, rounded[d] - true_shape[d] + h) for d in range(3)]
+    pad = [(0, 0)] * nb + [(h, rounded[d] - true_shape[d] + h)
+                           for d in range(3)]
     padded = boundary_pad(program, grid, pad)
 
     out = common.superstep_call(padded, pc.center, pc.taps, program, plan,
                                 true_shape, interpret, pipelined=pipelined)
-    return out[: true_shape[0], : true_shape[1], : true_shape[2]]
+    return out[..., : true_shape[0], : true_shape[1], : true_shape[2]]

@@ -220,6 +220,7 @@ def autotune(
     max_par_time: int = 32,
     warmup: int = 1,
     reps: int = 2,
+    supersteps: int = 2,
     seed: int = 0,
 ) -> TunedPlan:
     """Tune ``program`` for ``chip`` on a ``grid_shape`` workload.
@@ -264,7 +265,8 @@ def autotune(
     measurement: Optional[Measurement] = None
     if measure:
         results = measure_frontier(prog, frontier, grid_shape,
-                                   warmup=warmup, reps=reps, seed=seed)
+                                   warmup=warmup, reps=reps,
+                                   supersteps=supersteps, seed=seed)
         measurement = best_measurement(results)
         if measurement is not None:
             winner = measurement.ranked

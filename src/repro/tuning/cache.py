@@ -33,7 +33,11 @@ from typing import Dict, Optional, Tuple
 
 from repro.core.program import as_program
 
-SCHEMA_VERSION = 1
+# 2: measurements now time steady-state fused multi-superstep runs (the
+#    donated run executor) instead of lone superstep dispatches, and the
+#    pipelined kernel variant became a searchable backend axis — records
+#    tuned under schema 1 measured a different quantity and must miss.
+SCHEMA_VERSION = 2
 
 ENV_CACHE_PATH = "REPRO_TUNING_CACHE"
 _DEFAULT_PATH = os.path.join("~", ".cache", "repro-stencil", "plans.json")

@@ -33,7 +33,8 @@ import itertools
 from typing import List, Optional, Sequence, Tuple
 
 from repro.analysis.hw import TpuChip, V5E
-from repro.backends.registry import default_backend_name, get_backend
+from repro.backends.registry import (default_backend_name, get_backend,
+                                     pipelined_variant)
 from repro.core.blocking import (LANE, MIN_USEFUL_FRACTION, SUBLANE,
                                  BlockPlan, round_up)
 from repro.core.program import as_program
@@ -169,7 +170,18 @@ def enumerate_space(
     if bsizes is None:
         bsizes = default_bsizes(prog.ndim, grid_shape)
     if backends is None:
-        backends = (default_backend_name(),)
+        # The pipelined kernel variant is a searchable axis: by default every
+        # blocking point is enumerated on both the plain and double-buffered
+        # lowering of the platform backend (the paper equally treats its
+        # pipeline depth as part of the tuned configuration).  The roofline
+        # model cannot separate the two (same traffic, same FLOPs), so a
+        # model-ranked top-K over this default space holds K/2 distinct
+        # blocking points — callers who measure should scale top_k if they
+        # want the same blocking diversity, and autotune() itself always
+        # pins a single backend per call/cache-key instead.
+        base = default_backend_name()
+        pipe = pipelined_variant(base)
+        backends = (base,) if pipe is None else (base, pipe)
 
     resolved = [(name, get_backend(name, backend_version)[1])
                 for name in backends]

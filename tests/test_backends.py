@@ -19,7 +19,9 @@ from repro.kernels import ops
 
 def test_builtin_backends_registered():
     avail = available_backends()
-    for name in ("pallas-tpu", "pallas-interpret", "xla-reference"):
+    for name in ("pallas-tpu", "pallas-interpret",
+                 "pallas-tpu-pipelined", "pallas-interpret-pipelined",
+                 "xla-reference"):
         assert name in avail and avail[name], avail
 
 

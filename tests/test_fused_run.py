@@ -1,0 +1,364 @@
+"""Fused run executor, batch axis, and pipelined-kernel plumbing.
+
+Regressions for ISSUE 3: (a) the fused ``run_call`` executable matches the
+eager superstep chain and the independent numpy oracle across the
+radius/ndim/boundary matrix; (b) one run = one dispatch, and any
+``steps = k * par_time + rem`` with the same remainder reuses one
+executable; (c) the batched ``(B, *grid)`` path is bit-identical to a
+per-grid Python loop; (d) ``pipelined=True`` actually reaches
+``build_pipelined_kernel`` from every production entry point (it used to be
+dead code behind a hard-coded ``pipelined=False``).
+"""
+
+import numpy as np
+import pytest
+
+from repro.backends import available_backends, lower, pipelined_variant
+from repro.core import reference as ref
+from repro.core.blocking import BlockPlan
+from repro.core.program import StencilProgram
+from repro.core.temporal import StencilEngine
+from repro.kernels import common, ops
+
+import jax.numpy as jnp
+
+TOL = dict(atol=5e-4, rtol=5e-4)
+
+BLOCKS = {2: (16, 128), 3: (8, 16, 128)}
+GRIDS = {2: (37, 150), 3: (9, 18, 140)}     # non-divisible by the blocks
+
+
+# ---- (a) equivalence matrix ------------------------------------------------
+
+@pytest.mark.parametrize("ndim", [2, 3])
+@pytest.mark.parametrize("rad", [1, 2, 3, 4])
+@pytest.mark.parametrize("boundary", ["clamp", "periodic", "constant"])
+def test_fused_matches_eager_and_numpy_oracle(ndim, rad, boundary):
+    """steps = 1 full superstep + remainder: the fused executable is
+    bit-identical to the eager chain and within fp32 tolerance of the
+    gather-based float64 numpy oracle."""
+    prog = StencilProgram(ndim=ndim, radius=rad, boundary=boundary,
+                          boundary_value=0.25)
+    coeffs = prog.default_coeffs(seed=rad)
+    plan = BlockPlan(spec=prog, block_shape=BLOCKS[ndim], par_time=2)
+    g = ref.random_grid(prog, GRIDS[ndim], seed=rad)
+    steps = 3                       # full=1, rem=1
+    fused = ops.stencil_run(g, prog, coeffs, plan, steps)
+    eager = ops.stencil_run(g, prog, coeffs, plan, steps, fused=False)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(eager))
+    want = ref.numpy_program_nsteps(prog, coeffs, g, steps)
+    np.testing.assert_allclose(np.asarray(fused), want, **TOL)
+
+
+@pytest.mark.parametrize("ndim,boundary", [(2, "clamp"), (3, "periodic")])
+def test_pipelined_fused_run_matches_oracle(ndim, boundary):
+    prog = StencilProgram(ndim=ndim, radius=2, boundary=boundary)
+    coeffs = prog.default_coeffs(seed=5)
+    plan = BlockPlan(spec=prog, block_shape=BLOCKS[ndim], par_time=2)
+    g = ref.random_grid(prog, GRIDS[ndim], seed=5)
+    pipe = ops.stencil_run(g, prog, coeffs, plan, 5, pipelined=True)
+    plain = ops.stencil_run(g, prog, coeffs, plan, 5)
+    np.testing.assert_array_equal(np.asarray(pipe), np.asarray(plain))
+    want = ref.numpy_program_nsteps(prog, coeffs, g, 5)
+    np.testing.assert_allclose(np.asarray(pipe), want, **TOL)
+
+
+# ---- (b) compile- and dispatch-count regression ----------------------------
+
+def test_fused_run_compile_and_dispatch_counts(monkeypatch):
+    """steps = 3*par_time + rem compiles ONE executable and issues ONE
+    dispatch; other step counts with the same remainder reuse it (the full
+    count is a dynamic fori_loop bound); only a distinct remainder — a
+    different remainder-kernel halo — may add a second executable."""
+    prog = StencilProgram(ndim=2, radius=1)
+    coeffs = prog.default_coeffs(seed=3)
+    plan = BlockPlan(spec=prog, block_shape=(8, 128), par_time=3)
+    g = ref.random_grid(prog, (24, 130), seed=1)   # shape unique to this test
+
+    dispatches = []
+    orig = common.run_call
+    monkeypatch.setattr(common, "run_call",
+                        lambda *a, **k: dispatches.append(1) or orig(*a, **k))
+    common.reset_trace_counts()
+
+    out = ops.stencil_run(g, prog, coeffs, plan, 3 * 3 + 2)
+    assert common.trace_count("run_call") == 1
+    assert len(dispatches) == 1
+
+    # different full-superstep count, same remainder: zero new executables
+    ops.stencil_run(g, prog, coeffs, plan, 5 * 3 + 2)
+    assert common.trace_count("run_call") == 1
+    assert len(dispatches) == 2
+
+    # steps < par_time is the same executable too (full=0, same rem)
+    ops.stencil_run(g, prog, coeffs, plan, 2)
+    assert common.trace_count("run_call") == 1
+    assert len(dispatches) == 3
+
+    # steps=0 short-circuits: no compile, no dispatch, identity
+    assert ops.stencil_run(g, prog, coeffs, plan, 0) is g
+    assert len(dispatches) == 3
+
+    # an exact multiple (rem=0) is the one legitimate second executable
+    ops.stencil_run(g, prog, coeffs, plan, 2 * 3)
+    assert common.trace_count("run_call") == 2
+    assert len(dispatches) == 4
+
+    want = ref.numpy_program_nsteps(prog, coeffs, g, 11)
+    np.testing.assert_allclose(np.asarray(out), want, atol=2e-3, rtol=2e-3)
+
+
+def test_fused_run_donates_the_carry():
+    """run_call really donates arg 0 (the rounded-up carry grid): the input
+    buffer is consumed by the executable — in-place superstep updates
+    instead of a fresh HBM grid per run."""
+    prog = StencilProgram(ndim=2, radius=1)
+    plan = BlockPlan(spec=prog, block_shape=(8, 128), par_time=2)
+    pc = prog.default_coeffs()
+    carry = jnp.zeros((16, 128), jnp.float32)
+    out = common.run_call(carry, pc.center, pc.taps, 1, program=prog,
+                          plan=plan, true_shape=(16, 128), interpret=True,
+                          rem=0)
+    assert out.shape == (16, 128)
+    assert carry.is_deleted()
+
+
+# ---- (c) batch axis --------------------------------------------------------
+
+@pytest.mark.parametrize("ndim", [2, 3])
+def test_batched_run_bit_equal_to_per_grid_loop(ndim):
+    prog = StencilProgram(ndim=ndim, radius=2, boundary="periodic")
+    coeffs = prog.default_coeffs(seed=2)
+    plan = BlockPlan(spec=prog, block_shape=BLOCKS[ndim], par_time=2)
+    B = 3
+    gb = jnp.stack([ref.random_grid(prog, GRIDS[ndim], seed=s)
+                    for s in range(B)])
+    bat = ops.stencil_run(gb, prog, coeffs, plan, 5)
+    assert bat.shape == gb.shape
+    for i in range(B):
+        one = ops.stencil_run(gb[i], prog, coeffs, plan, 5)
+        np.testing.assert_array_equal(np.asarray(bat[i]), np.asarray(one))
+
+
+def test_batched_superstep_bit_equal_and_pipelined(monkeypatch):
+    prog = StencilProgram(ndim=2, radius=1, boundary="constant",
+                          boundary_value=-0.5)
+    coeffs = prog.default_coeffs(seed=4)
+    plan = BlockPlan(spec=prog, block_shape=(16, 128), par_time=2)
+    B = 2
+    gb = jnp.stack([ref.random_grid(prog, (30, 135), seed=s)
+                    for s in range(B)])
+    bat = ops.stencil_superstep(gb, prog, coeffs, plan)
+    pipe = ops.stencil_superstep(gb, prog, coeffs, plan, pipelined=True)
+    for i in range(B):
+        one = ops.stencil_superstep(gb[i], prog, coeffs, plan)
+        np.testing.assert_array_equal(np.asarray(bat[i]), np.asarray(one))
+        np.testing.assert_array_equal(np.asarray(pipe[i]), np.asarray(one))
+
+
+def test_batched_xla_reference_matches_per_grid_oracle():
+    """The oracle backend accepts the same (B, *grid) inputs as the pallas
+    backends (vmap'd), so batched kernel results can be cross-checked
+    through the registry interface."""
+    prog = StencilProgram(ndim=2, radius=2, boundary="clamp")
+    plan = BlockPlan(spec=prog, block_shape=(16, 128), par_time=2)
+    low = lower(prog, plan, backend="xla-reference")
+    B = 2
+    gb = jnp.stack([ref.random_grid(prog, (21, 34), seed=s)
+                    for s in range(B)])
+    bat = np.asarray(low.run(gb, 5))
+    assert bat.shape == gb.shape
+    for i in range(B):
+        want = ref.numpy_program_nsteps(prog, low.coeffs, gb[i], 5)
+        np.testing.assert_allclose(bat[i], want, **TOL)
+    sup = np.asarray(low.superstep(gb))
+    for i in range(B):
+        want = ref.numpy_program_nsteps(prog, low.coeffs, gb[i], 2)
+        np.testing.assert_allclose(sup[i], want, **TOL)
+
+
+def test_rank_mismatch_raises():
+    prog = StencilProgram(ndim=2, radius=1)
+    plan = BlockPlan(spec=prog, block_shape=(16, 128), par_time=2)
+    bad = jnp.zeros((2, 2, 16, 128))     # two leading axes
+    with pytest.raises(ValueError):
+        ops.stencil_run(bad, prog, prog.default_coeffs(), plan, 2)
+    with pytest.raises(ValueError):
+        ops.stencil_superstep(bad, prog, prog.default_coeffs(), plan)
+
+
+# ---- (d) pipelined is reachable from every production path -----------------
+
+def test_pipelined_backends_registered():
+    avail = available_backends()
+    assert "pallas-tpu-pipelined" in avail
+    assert "pallas-interpret-pipelined" in avail
+    assert pipelined_variant("pallas-interpret") == \
+        "pallas-interpret-pipelined"
+    assert pipelined_variant("pallas-interpret-pipelined") == \
+        "pallas-interpret-pipelined"
+    assert pipelined_variant("xla-reference") is None
+
+
+def test_pipelined_backend_actually_builds_pipelined_kernel(monkeypatch):
+    """Lowering probe: the -pipelined registry backend reaches
+    build_pipelined_kernel (it was unreachable when pallas_backend
+    hard-coded pipelined=False), and the plain backend never does."""
+    calls = []
+    orig = common.build_pipelined_kernel
+    monkeypatch.setattr(common, "build_pipelined_kernel",
+                        lambda *a, **k: calls.append(a) or orig(*a, **k))
+
+    prog = StencilProgram(ndim=2, radius=2)
+    plan = BlockPlan(spec=prog, block_shape=(16, 128), par_time=2)
+    g = ref.random_grid(prog, (26, 132), seed=0)  # shape unique to this test
+
+    low = lower(prog, plan, backend="pallas-interpret-pipelined")
+    assert low.backend_name == "pallas-interpret-pipelined"
+    out = low.run(g, 5)
+    assert calls, "pipelined backend never built the pipelined kernel"
+
+    calls.clear()
+    plain = lower(prog, plan, backend="pallas-interpret").run(g, 5)
+    assert not calls, "plain backend built the pipelined kernel"
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(plain))
+
+
+def test_engine_pipelined_both_paths(monkeypatch):
+    """StencilEngine(pipelined=True) reaches the pipelined kernel on the
+    direct-dispatch path and resolves the -pipelined backend sibling on the
+    registry path."""
+    calls = []
+    orig = common.build_pipelined_kernel
+    monkeypatch.setattr(common, "build_pipelined_kernel",
+                        lambda *a, **k: calls.append(a) or orig(*a, **k))
+
+    prog = StencilProgram(ndim=2, radius=1, boundary="periodic")
+    plan = BlockPlan(spec=prog, block_shape=(16, 128), par_time=2)
+    g = ref.random_grid(prog, (18, 136), seed=6)  # shape unique to this test
+
+    eng = StencilEngine(spec=prog, coeffs=prog.default_coeffs(), plan=plan,
+                        pipelined=True)
+    out = eng.run(g, 4)
+    assert calls, "direct dispatch with pipelined=True missed the kernel"
+    want = ref.numpy_program_nsteps(prog, eng.coeffs, g, 4)
+    np.testing.assert_allclose(np.asarray(out), want, **TOL)
+
+    pinned = StencilEngine(spec=prog, coeffs=prog.default_coeffs(),
+                           plan=plan, backend="pallas-interpret",
+                           pipelined=True)
+    assert pinned.lowered().backend_name == "pallas-interpret-pipelined"
+
+    # a pinned backend without a pipelined lowering must refuse, not
+    # silently run the plain kernel
+    no_pipe = StencilEngine(spec=prog, coeffs=prog.default_coeffs(),
+                            plan=plan, backend="xla-reference",
+                            pipelined=True)
+    with pytest.raises(ValueError, match="pipelined"):
+        no_pipe.lowered()
+
+
+# ---- micro-batching serving front ------------------------------------------
+
+def test_stencil_server_batches_and_matches_unbatched():
+    from repro.launch.stencil_serve import StencilServer
+    from repro.core.blocking import plan_blocking
+
+    prog = StencilProgram(ndim=2, radius=1)
+    server = StencilServer(max_batch=4, max_par_time=2)
+    rng = np.random.RandomState(0)
+    shape_a, shape_b = (20, 140), (24, 130)
+    grids = [rng.uniform(-1, 1, shape_a) for _ in range(5)] \
+        + [rng.uniform(-1, 1, shape_b)]
+    rids = [server.submit(prog, g, steps=3) for g in grids]
+    assert server.pending() == 6
+
+    results = server.flush()
+    assert server.pending() == 0
+    assert set(results) == set(rids)
+    # 5 same-shape requests -> batches of 4 + 1; the odd shape rides alone
+    assert server.stats.batches == 3
+    assert server.stats.batched_requests == 4
+    assert server.stats.requests == 6
+
+    coeffs = prog.default_coeffs()
+    for rid, g in zip(rids, grids):
+        shape = g.shape
+        plan = plan_blocking(prog, grid_shape=shape, max_par_time=2).plan
+        want = ops.stencil_run(jnp.asarray(g, dtype=prog.dtype), prog,
+                               coeffs, plan, 3)
+        assert results[rid].shape == shape
+        # ulp-level tolerance: XLA may pick different FMA fusions for the
+        # batched executable at the planner's large block shapes
+        np.testing.assert_allclose(results[rid], np.asarray(want),
+                                   atol=1e-6, rtol=1e-5)
+
+
+def test_stencil_server_isolates_group_failures(monkeypatch):
+    """One group failing to plan/compile loses only its own requests (rids
+    land in server.failed); every other group's results still come back."""
+    from repro.launch import stencil_serve
+    from repro.launch.stencil_serve import StencilServer
+
+    prog = StencilProgram(ndim=2, radius=1)
+    server = StencilServer(max_batch=4, max_par_time=2)
+    rng = np.random.RandomState(1)
+    good = [server.submit(prog, rng.uniform(-1, 1, (20, 140)), steps=2)
+            for _ in range(2)]
+    bad = [server.submit(prog, rng.uniform(-1, 1, (24, 130)), steps=2)]
+
+    orig = stencil_serve.ops.stencil_run
+
+    def exploding(grid, *a, **k):
+        if grid.shape[-2:] == (24, 130):
+            raise RuntimeError("deliberate group failure")
+        return orig(grid, *a, **k)
+
+    monkeypatch.setattr(stencil_serve.ops, "stencil_run", exploding)
+    results = server.flush()
+    assert set(results) == set(good)
+    assert set(server.failed) == set(bad)
+    assert "deliberate group failure" in server.failed[bad[0]]
+    assert server.pending() == 0
+
+
+def test_stencil_server_isolates_deferred_execution_failures(monkeypatch):
+    """On compiled backends execution errors surface asynchronously at
+    block_until_ready, after every group dispatched — a chunk failing there
+    must fail only its own rids, not drop the healthy groups' results."""
+    from repro.launch import stencil_serve
+    from repro.launch.stencil_serve import StencilServer
+
+    prog = StencilProgram(ndim=2, radius=1)
+    server = StencilServer(max_batch=4, max_par_time=2)
+    rng = np.random.RandomState(2)
+    good = [server.submit(prog, rng.uniform(-1, 1, (20, 140)), steps=2)
+            for _ in range(2)]
+    bad = [server.submit(prog, rng.uniform(-1, 1, (24, 130)), steps=2)]
+
+    orig = stencil_serve.jax.block_until_ready
+
+    def deferred_boom(out):
+        if out.shape[-2:] == (1, 24, 130)[-2:]:
+            raise RuntimeError("deferred execution failure")
+        return orig(out)
+
+    monkeypatch.setattr(stencil_serve.jax, "block_until_ready",
+                        deferred_boom)
+    results = server.flush()
+    assert set(results) == set(good)
+    assert set(server.failed) == set(bad)
+    assert "deferred execution failure" in server.failed[bad[0]]
+
+
+def test_stencil_server_validates_requests():
+    from repro.launch.stencil_serve import StencilServer
+
+    prog = StencilProgram(ndim=2, radius=1)
+    server = StencilServer(max_batch=2)
+    with pytest.raises(ValueError):
+        server.submit(prog, np.zeros((4, 4, 4)), steps=1)
+    with pytest.raises(ValueError):
+        server.submit(prog, np.zeros((16, 128)), steps=-1)
+    with pytest.raises(ValueError):
+        StencilServer(max_batch=0)

@@ -76,6 +76,34 @@ def test_default_bsizes_cover_tiny_and_paper_grids():
         assert cands, grid
 
 
+def test_space_default_backends_include_pipelined_axis():
+    """With no explicit backend list the space enumerates every blocking
+    point on both the plain and the double-buffered lowering — the
+    pipelined kernel variant is a searchable axis (ISSUE 3)."""
+    prog = StencilProgram(ndim=2, radius=1)
+    cands = tspace.enumerate_space(prog, V5E, bsizes=[(16, 128)],
+                                   max_par_time=1)
+    backends = {c.backend for c in cands}
+    assert backends == {"pallas-interpret", "pallas-interpret-pipelined"}
+    # both variants cover the identical blocking points
+    plain = {(c.bsize, c.par_time) for c in cands
+             if c.backend == "pallas-interpret"}
+    piped = {(c.bsize, c.par_time) for c in cands
+             if c.backend == "pallas-interpret-pipelined"}
+    assert plain == piped
+
+
+def test_cache_key_separates_pipelined_backend():
+    """A plan tuned on the plain kernel must never serve the pipelined one:
+    the backend name participates in the cache key."""
+    prog = StencilProgram(ndim=2, radius=2)
+    plain = tcache.cache_key(prog, (64, 256), V5E.name,
+                             "pallas-interpret", 1)
+    piped = tcache.cache_key(prog, (64, 256), V5E.name,
+                             "pallas-interpret-pipelined", 1)
+    assert plain != piped
+
+
 # ---- model ranking ---------------------------------------------------------
 
 def test_rank_is_monotone_in_predicted_throughput():
@@ -142,6 +170,47 @@ def test_autotune_falls_back_to_model_when_nothing_runs(tmp_path):
         cache_path=str(tmp_path / "plans.json"))
     assert tuned.measurement is None
     assert tuned.plan.par_time >= 1 and tuned.predicted_gbps > 0
+
+
+def test_measure_honors_explicit_warmup_and_reps():
+    """warmup=0 / reps are honored exactly (the old max(..., 1) clamp
+    silently turned reps=0 into an accidental single-rep measurement);
+    out-of-range values are caller errors, not ok=False candidates."""
+    from repro.tuning import measure as tmeasure
+
+    prog = StencilProgram(ndim=2, radius=1)
+    cands = tspace.enumerate_space(prog, V5E, backends=("xla-reference",),
+                                   bsizes=[(16, 128)], max_par_time=1)
+    (ranked,) = tuning.rank(prog, cands, V5E, top_k=1)
+    with pytest.raises(ValueError):
+        tmeasure.measure_candidate(prog, ranked, (16, 128), reps=0)
+    with pytest.raises(ValueError):
+        tmeasure.measure_candidate(prog, ranked, (16, 128), warmup=-1)
+    with pytest.raises(ValueError):
+        tmeasure.measure_candidate(prog, ranked, (16, 128), supersteps=0)
+    m = tmeasure.measure_candidate(prog, ranked, (16, 128), warmup=0,
+                                   reps=1)
+    assert m.ok and m.us_per_superstep > 0
+
+
+def test_measure_times_the_fused_executor():
+    """Steady-state timing goes through the fused run executor (one donated
+    executable per run) — not a lone superstep dispatch — so small grids
+    stop charging per-dispatch overhead to us_per_superstep."""
+    from repro.kernels import common
+    from repro.tuning import measure as tmeasure
+
+    prog = StencilProgram(ndim=2, radius=1)
+    cands = tspace.enumerate_space(prog, V5E, backends=("pallas-interpret",),
+                                   bsizes=[(16, 128)], max_par_time=2)
+    cand = [c for c in cands if c.par_time == 2][0]
+    ranked = tuning.predict(prog, cand, V5E, (20, 138))
+    common.reset_trace_counts()
+    m = tmeasure.measure_candidate(prog, ranked, (20, 138), reps=1,
+                                   supersteps=3)
+    assert m.ok
+    assert common.trace_count("run_call") == 1
+    assert common.trace_count("superstep_call") == 0
 
 
 def test_measurement_reports_table3_style_metrics():
