@@ -149,10 +149,12 @@ def run(use_tuned=None, smoke=None):
             f"mcells_per_s={mcells:.1f};"
             f"tb_speedup_vs_pt1={t1 / t2:.2f}x"))
 
-    # executor comparisons ride the direct pallas path; a pinned non-pallas
-    # backend (CI's xla-reference artifact) has neither batching nor a
-    # pipelined lowering to compare.
-    if backend is None and pipelined_variant("pallas-interpret"):
+    # executor comparisons ride the direct pallas path, so the
+    # REPRO_BENCH_BACKEND pin does not apply to them; in smoke mode they
+    # always run (tiny grid) — the regression gate needs the fused /
+    # pipelined / batched rows in every CI artifact — while full runs keep
+    # the historical default-backend-only guard.
+    if (smoke or backend is None) and pipelined_variant("pallas-interpret"):
         prog, shape, block = programs[0]
         plan = BlockPlan(spec=prog, block_shape=block, par_time=2)
         _executor_rows(prog, shape, plan, rows)

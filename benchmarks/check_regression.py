@@ -1,0 +1,138 @@
+"""Bench regression gate: current BENCH_results.json vs a committed baseline.
+
+Rows are matched by ``name``; the gated metric is ``mcells_per_s`` (useful
+cell-updates per second — the paper's throughput unit), taken from each
+row's parsed ``metrics``.  A matched row whose current throughput falls
+more than the threshold below the baseline fails the gate; faster rows and
+rows present on only one side never fail (new benches should not need a
+baseline edit to land, and an improved number is recorded by refreshing the
+baseline, not by blocking the PR).
+
+A markdown delta table goes to stdout and — when running under GitHub
+Actions — to the job summary (``$GITHUB_STEP_SUMMARY``).
+
+``--current`` may repeat: with several result files (CI runs the smoke
+bench twice) each row gates on its *best* run — timing noise on a shared
+runner is one-sided (interference makes a row slower, never faster), so
+best-of-N compares the honest capability against the baseline floor.
+
+Usage:
+    python -m benchmarks.check_regression \
+        [--current BENCH_results.json ...] \
+        [--baseline benchmarks/baseline.json] [--threshold-pct 25]
+
+Refreshing the baseline (same knobs CI uses for the smoke artifact):
+    REPRO_BENCH_SMOKE=1 REPRO_BENCH_BACKEND=xla-reference \
+        REPRO_BENCH_JSON=benchmarks/baseline.json python -m benchmarks.run
+
+The committed baseline carries a cross-runner headroom factor (see its
+``note``): the threshold absorbs run-to-run noise, the baseline's scaling
+absorbs machine class — together the gate fires on the multi-x
+regressions it exists for without flapping across runner generations.
+
+Env:
+    REPRO_BENCH_GATE_PCT — overrides --threshold-pct (CI knob to adjust
+    the gate without a workflow edit).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+METRIC = "mcells_per_s"
+
+
+def _rows(payload: dict) -> dict:
+    """name -> metric value, for rows carrying the gated metric."""
+    out = {}
+    for row in payload.get("results", []):
+        v = (row.get("metrics") or {}).get(METRIC)
+        if isinstance(v, (int, float)) and v > 0:
+            out[row["name"]] = float(v)
+    return out
+
+
+def merge_best(payloads) -> dict:
+    """Per-row max of the gated metric over several result payloads."""
+    best: dict = {}
+    for p in payloads:
+        for name, v in _rows(p).items():
+            best[name] = max(v, best.get(name, v))
+    return {"results": [{"name": n, "metrics": {METRIC: v}}
+                        for n, v in best.items()]}
+
+
+def compare(current: dict, baseline: dict, threshold_pct: float):
+    """Returns (table_lines, failures) comparing the two payloads."""
+    cur, base = _rows(current), _rows(baseline)
+    lines = [f"| row | baseline {METRIC} | current {METRIC} | delta | gate |",
+             "|---|---|---|---|---|"]
+    failures = []
+    for name in sorted(set(cur) | set(base)):
+        c, b = cur.get(name), base.get(name)
+        if c is None or b is None:
+            which = "baseline only" if c is None else "new row"
+            lines.append(f"| {name} | {b or '—'} | {c or '—'} | — "
+                         f"| skipped ({which}) |")
+            continue
+        delta = (c - b) / b * 100.0
+        bad = delta < -threshold_pct
+        if bad:
+            failures.append((name, b, c, delta))
+        verdict = f"FAIL (<-{threshold_pct:g}%)" if bad else "ok"
+        lines.append(f"| {name} | {b:.1f} | {c:.1f} | {delta:+.1f}% "
+                     f"| {verdict} |")
+    return lines, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", action="append", default=None,
+                    help="result file; repeatable — rows gate on their "
+                         "best run (default: BENCH_results.json)")
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--threshold-pct", type=float, default=25.0)
+    args = ap.parse_args(argv)
+
+    threshold = float(os.environ.get("REPRO_BENCH_GATE_PCT",
+                                     args.threshold_pct))
+    payloads = []
+    for path in args.current or ["BENCH_results.json"]:
+        with open(path) as f:
+            payloads.append(json.load(f))
+    current = merge_best(payloads)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    lines, failures = compare(current, baseline, threshold)
+    table = "\n".join(
+        ["### Bench regression gate "
+         f"(threshold {threshold:g}%, metric `{METRIC}`)", ""] + lines + [""])
+    print(table)
+
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(table + "\n")
+
+    if failures:
+        for name, b, c, delta in failures:
+            print(f"REGRESSION {name}: {b:.1f} -> {c:.1f} {METRIC} "
+                  f"({delta:+.1f}%)", file=sys.stderr)
+        return 1
+    matched = len([ln for ln in lines[2:] if "| skipped" not in ln])
+    if matched == 0:
+        print("REGRESSION GATE: no rows matched between current and "
+              "baseline — the gate is vacuous; refresh the baseline",
+              file=sys.stderr)
+        return 1
+    print(f"gate ok: {matched} row(s) within {threshold:g}%",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

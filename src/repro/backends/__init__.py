@@ -6,8 +6,10 @@ Importing this package registers the built-in backends:
 """
 
 from repro.backends.registry import (  # noqa: F401
+    BackendTraits,
     LoweredStencil,
     available_backends,
+    backend_traits,
     default_backend_name,
     get_backend,
     lower,
@@ -18,8 +20,10 @@ from repro.backends import pallas_backend as _pallas  # noqa: F401
 from repro.backends import xla_ref as _xla  # noqa: F401
 
 __all__ = [
+    "BackendTraits",
     "LoweredStencil",
     "available_backends",
+    "backend_traits",
     "default_backend_name",
     "get_backend",
     "lower",

@@ -24,7 +24,8 @@ from typing import Optional
 
 from repro.core.blocking import BlockPlan
 from repro.core.program import ProgramCoeffs, StencilProgram
-from repro.backends.registry import LoweredStencil, register_backend
+from repro.backends.registry import (BackendTraits, LoweredStencil,
+                                     register_backend)
 from repro.kernels import ops
 
 
@@ -46,25 +47,30 @@ def _make(program: StencilProgram, plan: Optional[BlockPlan],
     return LoweredStencil(program, plan, coeffs, superstep_fn, run_fn)
 
 
-@register_backend("pallas-tpu", version=1)
+@register_backend("pallas-tpu", version=1,
+                  traits=BackendTraits(local_kernel=True))
 def pallas_tpu(program, plan, coeffs) -> LoweredStencil:
     """Compiled Pallas kernels (requires a TPU backend)."""
     return _make(program, plan, coeffs, interpret=False, pipelined=False)
 
 
-@register_backend("pallas-interpret", version=1)
+@register_backend("pallas-interpret", version=1,
+                  traits=BackendTraits(interpret=True, local_kernel=True))
 def pallas_interpret(program, plan, coeffs) -> LoweredStencil:
     """Same kernels under the Pallas interpreter — CPU CI / debugging."""
     return _make(program, plan, coeffs, interpret=True, pipelined=False)
 
 
-@register_backend("pallas-tpu-pipelined", version=1)
+@register_backend("pallas-tpu-pipelined", version=1,
+                  traits=BackendTraits(pipelined=True, local_kernel=True))
 def pallas_tpu_pipelined(program, plan, coeffs) -> LoweredStencil:
     """Double-buffered prefetch kernels, compiled mode."""
     return _make(program, plan, coeffs, interpret=False, pipelined=True)
 
 
-@register_backend("pallas-interpret-pipelined", version=1)
+@register_backend("pallas-interpret-pipelined", version=1,
+                  traits=BackendTraits(interpret=True, pipelined=True,
+                                       local_kernel=True))
 def pallas_interpret_pipelined(program, plan, coeffs) -> LoweredStencil:
     """Double-buffered prefetch kernels under the interpreter (CPU CI)."""
     return _make(program, plan, coeffs, interpret=True, pipelined=True)

@@ -29,11 +29,30 @@ Usage::
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, Optional
 
 from repro.core.blocking import BlockPlan, plan_blocking
 from repro.core.program import (ProgramCoeffs, StencilProgram, as_program,
                                 normalize_coeffs)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendTraits:
+    """Capability flags a backend declares at registration time.
+
+    ``interpret``/``pipelined`` describe which Pallas kernel configuration
+    the backend's lowering selects; ``local_kernel=True`` means the
+    backend's superstep can serve as the *local* kernel of the distributed
+    stack (``core/distributed.py`` runs it on each shard's halo-exchanged
+    block inside ``shard_map``).  The oracle backend lowers a whole-grid
+    jnp loop with its own boundary padding, so it cannot — its halos would
+    be synthesized locally instead of exchanged.
+    """
+
+    interpret: bool = False
+    pipelined: bool = False
+    local_kernel: bool = False
 
 
 class LoweredStencil:
@@ -74,19 +93,39 @@ BackendFactory = Callable[[StencilProgram, Optional[BlockPlan],
                            ProgramCoeffs], LoweredStencil]
 
 _REGISTRY: Dict[str, Dict[int, BackendFactory]] = {}
+_TRAITS: Dict[tuple, BackendTraits] = {}     # (name, version) -> traits
 
 
-def register_backend(name: str, version: int = 1):
-    """Decorator registering a backend factory under (name, version)."""
+def register_backend(name: str, version: int = 1,
+                     traits: Optional[BackendTraits] = None):
+    """Decorator registering a backend factory under (name, version).
+
+    ``traits`` declares this version's capabilities (see
+    :class:`BackendTraits`); omitted traits default to the most conservative
+    flags, so a lowering that never declares ``local_kernel`` can never be
+    picked up by the distributed executor — a new version must re-declare
+    its capabilities, they do not inherit from older registrations.
+    """
 
     def deco(factory: BackendFactory) -> BackendFactory:
         _REGISTRY.setdefault(name, {})
         if version in _REGISTRY[name]:
             raise ValueError(f"backend {name!r} v{version} already registered")
         _REGISTRY[name][version] = factory
+        if traits is not None:
+            _TRAITS[(name, version)] = traits
         return factory
 
     return deco
+
+
+def backend_traits(name: str,
+                   version: Optional[int] = None) -> BackendTraits:
+    """The declared :class:`BackendTraits` of a registered backend version
+    (highest version when unspecified — :func:`get_backend`'s resolution
+    rule, which also supplies the unknown-name/version errors)."""
+    _, v = get_backend(name, version)
+    return _TRAITS.get((name, v), BackendTraits())
 
 
 def available_backends() -> Dict[str, tuple]:

@@ -14,11 +14,13 @@ from __future__ import annotations
 import jax
 
 from repro.core import reference as ref
-from repro.backends.registry import LoweredStencil, register_backend
+from repro.backends.registry import (BackendTraits, LoweredStencil,
+                                     register_backend)
 from repro.kernels.common import batch_dims
 
 
-@register_backend("xla-reference", version=1)
+@register_backend("xla-reference", version=1,
+                  traits=BackendTraits(local_kernel=False))
 def xla_reference(program, plan, coeffs) -> LoweredStencil:
     par_time = plan.par_time if plan is not None else 1
 

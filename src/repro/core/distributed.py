@@ -26,6 +26,18 @@ Mechanics (per superstep, inside shard_map):
   3. Run the single-chip temporal-blocked Pallas kernel on the haloed block,
      passing the shard's global origin so boundary fixup happens only at
      physical grid edges.
+
+Multi-superstep runs execute through the *sharded fused run executor*
+(:meth:`DistributedStencil.run_fn`): one donated jitted executable whose
+``fori_loop`` trip count — the number of full supersteps — is a dynamic
+scalar, with the ``steps % par_time`` remainder superstep (shallower
+exchange + kernel halo) folded into the tail.  Exactly the single-device
+``kernels/common.run_call`` contract lifted onto the mesh: O(1) dispatches
+per run, at most one compile per (remainder, decomposition), and the carry
+grid updated in place across supersteps.  Grids may carry a leading
+``(B, *grid)`` batch axis of independent grids (replicated over the mesh,
+sharded spatially), and the local kernel is resolved through the backend
+registry so the ``-pipelined`` double-buffered variants run sharded too.
 """
 
 from __future__ import annotations
@@ -132,17 +144,21 @@ class Decomposition:
 
 
 def _local_superstep(block, center, taps, *, program, plan, decomp,
-                     axis_shards, global_shape, interpret):
+                     axis_shards, global_shape, interpret, nb=0,
+                     pipelined=False):
     """shard_map body: halo exchange + local temporal-blocked kernel.
 
-    ``axis_shards[d]`` is the static shard count along grid axis d.
+    ``axis_shards[d]`` is the static shard count along grid axis d; ``nb``
+    the number of leading batch axes (0 or 1) riding ahead of the spatial
+    dims — batch entries share one exchange (the strips carry the whole
+    batch) and one kernel launch (a leading pallas grid dimension).
     """
     h = plan.halo
     offsets = []
     for d in range(program.ndim):
         axes = decomp.partition[d]
         if axes:
-            offsets.append(lax.axis_index(axes) * block.shape[d])
+            offsets.append(lax.axis_index(axes) * block.shape[nb + d])
         else:
             offsets.append(0)
     offs = jnp.stack([jnp.asarray(o, jnp.int32) for o in offsets])
@@ -151,16 +167,17 @@ def _local_superstep(block, center, taps, *, program, plan, decomp,
     for d in range(program.ndim):
         axes = decomp.partition[d]
         if axes and axis_shards[d] > 1:
-            haloed = exchange_halo(haloed, d, axes, h, program,
+            haloed = exchange_halo(haloed, nb + d, axes, h, program,
                                    axis_shards[d])
         else:
             # Unsharded axis: plain boundary padding provides the t=0 halo.
-            pads = [(0, 0)] * program.ndim
-            pads[d] = (h, h)
+            pads = [(0, 0)] * haloed.ndim
+            pads[nb + d] = (h, h)
             haloed = boundary_pad(program, haloed, pads)
 
     out = common.superstep_call(haloed, center, taps, program, plan,
-                                tuple(global_shape), interpret, offs)
+                                tuple(global_shape), interpret, offs,
+                                pipelined)
     return out
 
 
@@ -170,6 +187,14 @@ class DistributedStencil:
 
     ``spec`` may be a legacy ``StencilSpec`` or a ``StencilProgram``; the
     exchange depth and boundary synthesis follow the program.
+
+    The *local* kernel is resolved through the backend registry: ``backend``
+    pins a registered name (default: the platform's pallas backend), and
+    ``pipelined=True`` resolves its ``-pipelined`` double-buffered sibling —
+    the same resolution rule as ``StencilEngine``, so every kernel variant
+    that exists on one chip exists sharded.  Only backends declaring
+    ``local_kernel`` traits qualify (``xla-reference`` pads its own
+    boundaries and cannot consume an exchanged halo).
     """
 
     spec: object
@@ -179,12 +204,35 @@ class DistributedStencil:
     decomp: Decomposition
     global_shape: Tuple[int, ...]
     interpret: Optional[bool] = None
+    backend: Optional[str] = None
+    pipelined: bool = False
 
     def __post_init__(self):
-        if self.interpret is None:
-            self.interpret = common.default_interpret()
+        from repro.backends import (backend_traits, default_backend_name,
+                                    get_backend, pipelined_variant)
         self.program = as_program(self.spec)
         self.pcoeffs = normalize_coeffs(self.program, self.coeffs)
+
+        name = self.backend or default_backend_name()
+        if self.pipelined:
+            pipe = pipelined_variant(name)
+            if pipe is None:
+                raise ValueError(
+                    f"backend {name!r} has no pipelined lowering; "
+                    f"pipelined=True would silently run the plain kernel")
+            name = pipe
+        _, version = get_backend(name)
+        traits = backend_traits(name, version)
+        if not traits.local_kernel:
+            raise ValueError(
+                f"backend {name!r} cannot serve as the distributed local "
+                f"kernel (no local_kernel trait); use a pallas backend")
+        self.backend_name = name
+        self.backend_version = version
+        self.pipelined = traits.pipelined
+        if self.interpret is None:
+            self.interpret = traits.interpret or common.default_interpret()
+
         for d in range(self.program.ndim):
             n = self.decomp.shards(self.mesh, d)
             if self.global_shape[d] % n != 0:
@@ -200,52 +248,106 @@ class DistributedStencil:
                 raise ValueError(
                     f"halo {self.plan.halo} exceeds local extent {local}; "
                     f"reduce par_time or shards")
+        # jitted run executables, keyed by (remainder, batch rank) — the
+        # only things that change the traced program (the full-superstep
+        # count is a dynamic argument).
+        self._exes = {}
 
-    def sharding(self) -> NamedSharding:
-        return NamedSharding(self.mesh, self.decomp.pspec())
+    def sharding(self, nb: int = 0) -> NamedSharding:
+        """Mesh sharding of the (optionally batched) global grid."""
+        return NamedSharding(self.mesh, self._gspec(nb))
 
-    def superstep_fn(self):
-        """Returns a jit-able (grid, center, taps) -> grid superstep."""
-        program, plan, decomp = self.program, self.plan, self.decomp
-        gshape, interpret = self.global_shape, self.interpret
-        pspec = decomp.pspec()
+    def _gspec(self, nb: int) -> P:
+        """PartitionSpec of an nb-batched grid: batch replicated, spatial
+        axes per the decomposition."""
+        spec = self.decomp.pspec()
+        return P(*((None,) * nb), *spec) if nb else spec
 
+    def _mapped_superstep(self, plan: BlockPlan, nb: int):
+        """shard_map'd (grid, center, taps) -> grid for one superstep."""
+        program, decomp = self.program, self.decomp
+        gspec = self._gspec(nb)
         shards = tuple(decomp.shards(self.mesh, d)
                        for d in range(program.ndim))
         body = partial(_local_superstep, program=program, plan=plan,
                        decomp=decomp, axis_shards=shards,
-                       global_shape=gshape, interpret=interpret)
-        mapped = compat.shard_map(
+                       global_shape=self.global_shape,
+                       interpret=self.interpret, nb=nb,
+                       pipelined=self.pipelined)
+        return compat.shard_map(
             body, mesh=self.mesh,
-            in_specs=(pspec, P(), P()),
-            out_specs=pspec,
+            in_specs=(gspec, P(), P()),
+            out_specs=gspec,
         )
 
-        def step(grid, center, taps):
-            return mapped(grid, center, taps)
+    def superstep_fn(self):
+        """Returns a jit-able (grid, center, taps) -> grid superstep."""
+        step = self._mapped_superstep(self.plan, 0)
 
-        return step
+        def stepf(grid, center, taps):
+            return step(grid, center, taps)
 
-    def run_fn(self, supersteps: int):
-        """Returns fn advancing ``supersteps * par_time`` time steps."""
-        step = self.superstep_fn()
+        return stepf
 
-        def run(grid, center, taps):
-            def body(_, g):
-                return step(g, center, taps)
-            return lax.fori_loop(0, supersteps, body, grid)
+    def run_fn(self, rem: int = 0, nb: int = 0):
+        """The sharded fused run executor: ONE donated jitted executable
+        ``(grid, center, taps, full) -> grid``.
 
-        return run
+        ``full`` — the number of full supersteps — is a *dynamic* scalar
+        (a ``fori_loop`` trip count), so every ``steps = k * par_time + rem``
+        with the same remainder reuses one executable; only a distinct
+        ``rem`` (a shallower remainder exchange + kernel halo) or batch rank
+        compiles again.  The sharded carry is **donated**: supersteps update
+        the grid in place instead of allocating a fresh sharded buffer per
+        superstep.  Executables are cached on the instance, so repeated
+        ``run`` calls are O(1) dispatches with zero retracing — the fix for
+        the historical ``run_fn(supersteps)`` that rebuilt (and re-jitted) a
+        Python-int-bound loop per call.
+        """
+        key = (rem, nb)
+        fn = self._exes.get(key)
+        if fn is not None:
+            return fn
+        step = self._mapped_superstep(self.plan, nb)
+        step_rem = None
+        if rem:
+            step_rem = self._mapped_superstep(
+                dataclasses.replace(self.plan, par_time=rem), nb)
+
+        def run(grid, center, taps, full):
+            common._note_trace("dist_run_call")
+            g = lax.fori_loop(0, full,
+                              lambda _, g: step(g, center, taps), grid)
+            if step_rem is not None:
+                g = step_rem(g, center, taps)
+            return g
+
+        fn = jax.jit(run, donate_argnums=(0,))
+        self._exes[key] = fn
+        return fn
 
     # Convenience eager wrappers -------------------------------------------
 
     def superstep(self, grid):
-        fn = jax.jit(self.superstep_fn())
+        nb = common.batch_dims(self.program, grid.ndim)
+        key = ("superstep", nb)
+        fn = self._exes.get(key)
+        if fn is None:
+            fn = jax.jit(self._mapped_superstep(self.plan, nb))
+            self._exes[key] = fn
         return fn(grid, self.pcoeffs.center, self.pcoeffs.taps)
 
     def run(self, grid, steps: int):
-        if steps % self.plan.par_time:
-            raise ValueError("steps must be a multiple of par_time; use the "
-                             "single-chip engine for remainders")
-        fn = jax.jit(self.run_fn(steps // self.plan.par_time))
-        return fn(grid, self.pcoeffs.center, self.pcoeffs.taps)
+        """Advance ``steps`` time steps: ``steps // par_time`` full
+        supersteps plus the folded remainder, in one donated dispatch.
+        ``grid`` may carry a leading ``(B, *grid)`` batch axis and is
+        consumed (donated) — use the returned array."""
+        if steps < 0:
+            raise ValueError("steps must be >= 0")
+        nb = common.batch_dims(self.program, grid.ndim)
+        if steps == 0:
+            return grid
+        full, rem = divmod(steps, self.plan.par_time)
+        fn = self.run_fn(rem, nb)
+        return fn(grid, self.pcoeffs.center, self.pcoeffs.taps,
+                  jnp.asarray(full, jnp.int32))

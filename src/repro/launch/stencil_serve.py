@@ -17,6 +17,15 @@ Blocking plans come from the model planner by default, or from the
 autotuner's persistent cache with ``use_autotune=True`` (model-guided mode —
 deterministic, zero search cost after the first call per shape).
 
+``mesh_devices=N`` places batched groups onto an N-device mesh: the
+mesh-aware autotuner (model-only) picks the (plan, decomposition) pair per
+(program, shape), and the group executes as a *sharded* batched fused run —
+one donated multi-device executable through
+``core.distributed.DistributedStencil`` (batch replicated, grid decomposed,
+one deep-halo exchange per superstep).  Groups the mesh cannot take
+(non-divisible shapes, empty sharded space) fall back to the single-device
+executor, with the reason recorded in ``mesh_fallbacks``.
+
 CPU-scale usage:
     PYTHONPATH=src python -m repro.launch.stencil_serve \\
         --requests 9 --grid 48,256 --radius 2 --steps 5 --max-batch 4
@@ -34,7 +43,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.hw import TpuChip, V5E
+from repro.core import compat
 from repro.core.blocking import BlockPlan, plan_blocking
+from repro.core.distributed import Decomposition, DistributedStencil
 from repro.core.program import StencilProgram, as_program
 from repro.kernels import ops
 from repro.tuning.cache import program_fingerprint
@@ -53,6 +64,7 @@ class ServeStats:
     requests: int = 0
     batches: int = 0
     batched_requests: int = 0   # requests that shared their executable
+    sharded_batches: int = 0    # batches placed on the device mesh
     seconds: float = 0.0
     cell_steps: int = 0
 
@@ -76,9 +88,13 @@ class StencilServer:
                  use_autotune: bool = False,
                  cache_path: Optional[str] = None,
                  hw: TpuChip = V5E,
-                 max_par_time: int = 8):
+                 max_par_time: int = 8,
+                 mesh_devices: Optional[int] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1 (got {max_batch})")
+        if mesh_devices is not None and mesh_devices < 1:
+            raise ValueError(
+                f"mesh_devices must be >= 1 (got {mesh_devices})")
         self.max_batch = max_batch
         self.interpret = interpret
         self.pipelined = pipelined
@@ -86,12 +102,17 @@ class StencilServer:
         self.cache_path = cache_path
         self.hw = hw
         self.max_par_time = max_par_time
+        self.mesh_devices = mesh_devices
         self.stats = ServeStats()
         self.failed: Dict[int, str] = {}
+        #: (program fp, shape) -> why the mesh path declined the group
+        self.mesh_fallbacks: Dict[Tuple[str, Tuple[int, ...]], str] = {}
         self._pending: List[StencilRequest] = []
         self._next_rid = 0
         self._plans: Dict[Tuple[str, Tuple[int, ...]], BlockPlan] = {}
         self._programs: Dict[str, StencilProgram] = {}
+        self._dist: Dict[Tuple[str, Tuple[int, ...]],
+                         Optional[DistributedStencil]] = {}
 
     # -- request intake ------------------------------------------------------
 
@@ -130,6 +151,48 @@ class StencilServer:
             self._plans[key] = plan
         return plan
 
+    def _dist_for(self, program: StencilProgram,
+                  shape: Tuple[int, ...]) -> Optional[DistributedStencil]:
+        """The sharded executor for this (program, shape) group, or None
+        when the mesh cannot take it (reason in ``mesh_fallbacks``).
+
+        The mesh-aware autotuner (model-only) picks the
+        (plan, decomposition); the mesh itself is built one axis per grid
+        dimension with the tuned shard counts.  The persistent plan cache
+        is only touched when the caller opted into it (``use_autotune`` or
+        an explicit ``cache_path``) — with the defaults the tuner runs
+        pure model ranking, matching the single-device path's
+        no-persistent-state behavior.
+        """
+        key = (program_fingerprint(program), shape)
+        if key in self._dist:
+            return self._dist[key]
+        ds: Optional[DistributedStencil] = None
+        try:
+            from repro.tuning import autotune
+            tuned = autotune(program, self.hw, grid_shape=shape,
+                             measure=False,
+                             cache=self.use_autotune
+                             or self.cache_path is not None,
+                             cache_path=self.cache_path,
+                             max_par_time=self.max_par_time,
+                             n_devices=self.mesh_devices)
+            shards = tuned.decomp or (1,) * len(shape)
+            names = tuple(f"d{i}" for i in range(len(shape)))
+            mesh = compat.make_mesh(shards, names)
+            decomp = Decomposition(tuple(
+                (names[i],) if shards[i] > 1 else ()
+                for i in range(len(shape))))
+            ds = DistributedStencil(program, program.default_coeffs(),
+                                    tuned.plan, mesh, decomp, shape,
+                                    interpret=self.interpret,
+                                    pipelined=self.pipelined)
+        except Exception as e:
+            self.mesh_fallbacks[key] = f"{type(e).__name__}: {e}"
+            ds = None
+        self._dist[key] = ds
+        return ds
+
     # -- execution -----------------------------------------------------------
 
     def _group_key(self, req: StencilRequest):
@@ -159,11 +222,24 @@ class StencilServer:
             program = self._programs[fp]
             done = 0     # requests of this group whose chunk already ran
             try:
+                ds = self._dist_for(program, shape) \
+                    if self.mesh_devices else None
                 coeffs = program.default_coeffs()
-                plan = self._plan_for(program, shape)
+                plan = None if ds is not None \
+                    else self._plan_for(program, shape)
                 for lo in range(0, len(reqs), self.max_batch):
                     chunk = reqs[lo:lo + self.max_batch]
-                    if len(chunk) == 1:
+                    if ds is not None:
+                        # mesh path: batched sharded fused run — one
+                        # donated multi-device executable per chunk
+                        batch = jnp.stack([r.grid for r in chunk])
+                        out = ds.run(
+                            jax.device_put(batch, ds.sharding(nb=1)), steps)
+                        outs.append((chunk, out))
+                        self.stats.sharded_batches += 1
+                        if len(chunk) > 1:
+                            self.stats.batched_requests += len(chunk)
+                    elif len(chunk) == 1:
                         out = ops.stencil_run(
                             chunk[0].grid, program, coeffs, plan, steps,
                             interpret=self.interpret,
@@ -219,6 +295,10 @@ def main(argv=None):
     ap.add_argument("--pipelined", action="store_true")
     ap.add_argument("--autotune", action="store_true",
                     help="plans from the autotuner cache (model-guided)")
+    ap.add_argument("--mesh-devices", type=int, default=None,
+                    help="place batched groups onto an N-device mesh "
+                         "(needs N visible devices, e.g. "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     args = ap.parse_args(argv)
 
     shape = tuple(int(p) for p in args.grid.split(",") if p)
@@ -227,15 +307,19 @@ def main(argv=None):
                              shape=args.shape, boundary=args.boundary)
     server = StencilServer(max_batch=args.max_batch,
                            pipelined=args.pipelined,
-                           use_autotune=args.autotune)
+                           use_autotune=args.autotune,
+                           mesh_devices=args.mesh_devices)
     rng = np.random.RandomState(0)
     rids = [server.submit(program, rng.uniform(-1, 1, shape), args.steps)
             for _ in range(args.requests)]
     results = server.flush()
     s = server.stats
     print(f"[stencil-serve] {s.requests} requests -> {s.batches} batches "
-          f"({s.batched_requests} batched), {s.seconds * 1e3:.1f} ms, "
+          f"({s.batched_requests} batched, {s.sharded_batches} sharded), "
+          f"{s.seconds * 1e3:.1f} ms, "
           f"{s.mcell_steps_per_s:.1f} Mcell-steps/s")
+    for key, why in server.mesh_fallbacks.items():
+        print(f"[stencil-serve] mesh fallback {key[1]}: {why}")
     for rid in rids[:2]:
         g = results[rid]
         print(f"[stencil-serve] rid={rid} out_shape={g.shape} "

@@ -36,11 +36,13 @@ from repro.tuning.cache import PlanCache, cache_key, program_fingerprint
 from repro.tuning.measure import (Measurement, best_measurement,
                                   measure_candidates, measure_frontier)
 from repro.tuning.model_rank import RankedCandidate, predict, rank
-from repro.tuning.space import Candidate, default_bsizes, enumerate_space
+from repro.tuning.space import (Candidate, MeshDecomposition, default_bsizes,
+                                enumerate_decompositions, enumerate_space)
 
 __all__ = [
     "Candidate",
     "Measurement",
+    "MeshDecomposition",
     "PlanCache",
     "RankedCandidate",
     "TunedPlan",
@@ -48,6 +50,7 @@ __all__ = [
     "best_measurement",
     "cache_key",
     "default_bsizes",
+    "enumerate_decompositions",
     "enumerate_space",
     "measure_candidates",
     "measure_frontier",
@@ -77,6 +80,8 @@ class TunedPlan:
     key: str
     space_size: int = 0
     frontier_size: int = 0
+    # winning mesh decomposition (shards per grid axis); None = single device
+    decomp: Optional[Tuple[int, ...]] = None
     # bounds the winning plan was searched under (cache-coverage checks)
     searched_max_par_time: int = 0
     searched_bsizes: Optional[Tuple[Tuple[int, ...], ...]] = None
@@ -97,6 +102,7 @@ class TunedPlan:
             "predicted_gbps": self.predicted_gbps,
             "space_size": self.space_size,
             "frontier_size": self.frontier_size,
+            "decomp": None if self.decomp is None else list(self.decomp),
             "search": {
                 "max_par_time": self.searched_max_par_time,
                 "bsizes": None if self.searched_bsizes is None
@@ -136,6 +142,8 @@ def _from_record(program: StencilProgram, record: dict,
                      measurement=measurement, from_cache=True, key=key,
                      space_size=record.get("space_size", 0),
                      frontier_size=record.get("frontier_size", 0),
+                     decomp=None if record.get("decomp") is None
+                     else tuple(record["decomp"]),
                      searched_max_par_time=int(
                          search.get("max_par_time", 0)),
                      searched_bsizes=None if search.get("bsizes") is None
@@ -218,6 +226,8 @@ def autotune(
     force: bool = False,
     bsizes: Optional[Sequence[Tuple[int, ...]]] = None,
     max_par_time: int = 32,
+    n_devices: Optional[int] = None,
+    decomposition: Optional[Tuple[int, ...]] = None,
     warmup: int = 1,
     reps: int = 2,
     supersteps: int = 2,
@@ -236,11 +246,32 @@ def autotune(
     override the model (the paper's own Table III showed the model 13-45%
     off measured — measuring the frontier is how mispredictions get
     corrected).
+
+    ``n_devices`` puts the mesh decomposition on the search axis (every
+    feasible split of that many devices over the grid, per-shard halo
+    pruning applied); ``decomposition`` pins an explicit shards-per-axis
+    split instead.  Mesh-aware tuning is model-only — the measurement
+    harness runs on the local chip, and timing a sharded run takes a real
+    mesh (``core.distributed``) — so pass ``measure=False``; the winning
+    split lands in ``TunedPlan.decomp`` and its own cache key (a plan
+    tuned for one mesh never serves another).
     """
     prog = as_program(program)
     name = backend or default_backend_name()
     _, version = get_backend(name, backend_version)
-    key = cache_key(prog, grid_shape, chip.name, name, version)
+
+    decomp_req = None
+    if decomposition is not None:
+        decomp_req = tuple(int(s) for s in decomposition)
+    elif n_devices is not None:
+        decomp_req = f"ndev={n_devices}"
+    if decomp_req is not None and measure:
+        raise ValueError(
+            "mesh-aware tuning is model-only (the harness cannot time a "
+            "sharded run on the local chip); pass measure=False")
+
+    key = cache_key(prog, grid_shape, chip.name, name, version,
+                    decomp=decomp_req)
     store = PlanCache(cache_path) if cache else None
 
     if store is not None and not force:
@@ -250,13 +281,19 @@ def autotune(
                                  top_k=top_k):
                 return _from_record(prog, record, key)
 
+    decomps = None
+    if decomposition is not None:
+        decomps = (MeshDecomposition(tuple(int(s) for s in decomposition)),)
     candidates = enumerate_space(
         prog, chip, backends=(name,), backend_version=version,
-        bsizes=bsizes, grid_shape=grid_shape, max_par_time=max_par_time)
+        bsizes=bsizes, grid_shape=grid_shape, max_par_time=max_par_time,
+        n_devices=None if decomps is not None else n_devices,
+        decompositions=decomps)
     if not candidates:
         raise ValueError(
             f"empty design space for {prog} on {chip.name} "
-            f"(grid {grid_shape}) — relax bsizes/max_par_time")
+            f"(grid {grid_shape}) — relax bsizes/max_par_time"
+            + ("/decomposition" if decomp_req is not None else ""))
 
     ranked = rank(prog, candidates, chip, grid_shape=grid_shape)
     frontier = ranked[:max(top_k, 1)]
@@ -282,6 +319,8 @@ def autotune(
         key=key,
         space_size=len(candidates),
         frontier_size=len(frontier),
+        decomp=None if winner.candidate.decomp is None
+        else winner.candidate.decomp.axis_shards,
         searched_max_par_time=max_par_time,
         searched_bsizes=None if bsizes is None
         else tuple(tuple(b) for b in bsizes),

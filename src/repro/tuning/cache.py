@@ -37,7 +37,10 @@ from repro.core.program import as_program
 #    donated run executor) instead of lone superstep dispatches, and the
 #    pipelined kernel variant became a searchable backend axis — records
 #    tuned under schema 1 measured a different quantity and must miss.
-SCHEMA_VERSION = 2
+# 3: the space gained a mesh-decomposition axis and the key a ``decomp``
+#    component; schema-2 records were tuned over a space with no
+#    decomposition dimension (and no per-shard halo pruning) and must miss.
+SCHEMA_VERSION = 3
 
 ENV_CACHE_PATH = "REPRO_TUNING_CACHE"
 _DEFAULT_PATH = os.path.join("~", ".cache", "repro-stencil", "plans.json")
@@ -55,13 +58,21 @@ def program_fingerprint(program) -> str:
 
 
 def cache_key(program, grid_shape: Tuple[int, ...], chip_name: str,
-              backend: str, backend_version: int) -> str:
+              backend: str, backend_version: int,
+              decomp: Optional[object] = None) -> str:
+    """``decomp`` identifies the decomposition *request*: None (single
+    device), an explicit per-axis shard tuple, or the ``"ndev=N"`` marker
+    for a free search over N devices — three different search spaces, three
+    different keys (a plan tuned for one mesh layout must never serve
+    another)."""
     payload = json.dumps({
         "program": program_fingerprint(program),
         "grid_shape": list(grid_shape),
         "chip": chip_name,
         "backend": backend,
         "backend_version": backend_version,
+        "decomp": list(decomp) if isinstance(decomp, (tuple, list))
+        else decomp,
         "schema": SCHEMA_VERSION,
     }, sort_keys=True)
     return hashlib.sha1(payload.encode()).hexdigest()

@@ -51,6 +51,12 @@ def _build_parser() -> argparse.ArgumentParser:
                    default=None, metavar="BSIZE",
                    help="explicit window candidate (repeatable), e.g. "
                         "--bsize 64,512 --bsize 128,1024")
+    t.add_argument("--devices", type=int, default=None,
+                   help="mesh-aware tuning: search every decomposition of "
+                        "this many devices (forces model-only mode)")
+    t.add_argument("--decomp", type=_parse_shape, default=None,
+                   help="pin an explicit shards-per-grid-axis split, e.g. "
+                        "4,2 (forces model-only mode)")
     t.add_argument("--no-measure", action="store_true",
                    help="model-only ranking (no empirical timing)")
     t.add_argument("--force", action="store_true",
@@ -71,20 +77,27 @@ def _cmd_tune(args) -> int:
     program = StencilProgram(ndim=args.ndim, radius=args.radius,
                              shape=args.shape, boundary=args.boundary,
                              dtype=args.dtype)
+    mesh_aware = args.devices is not None or args.decomp is not None
+    measure = not args.no_measure and not mesh_aware
+    if mesh_aware and not args.no_measure:
+        print("note: mesh-aware tuning is model-only; skipping measurement")
     tuned = tuning.autotune(
         program, V5E, grid_shape=args.grid, backend=args.backend,
-        top_k=args.top_k, measure=not args.no_measure,
+        top_k=args.top_k, measure=measure,
         cache_path=args.cache, force=args.force, bsizes=args.bsize,
-        max_par_time=args.max_par_time)
+        max_par_time=args.max_par_time, n_devices=args.devices,
+        decomposition=args.decomp)
 
     src = "cache" if tuned.from_cache else \
         f"search (space={tuned.space_size}, frontier={tuned.frontier_size})"
     print(f"program: {args.ndim}D {args.shape} r={args.radius} "
           f"{args.boundary} on grid {'x'.join(map(str, args.grid))}")
+    mesh = "" if tuned.decomp is None \
+        else f" mesh={'x'.join(map(str, tuned.decomp))}"
     print(f"plan [{src}]: block={tuned.plan.block_shape} "
           f"par_time={tuned.plan.par_time} "
           f"vmem={tuned.plan.vmem_bytes / 2**20:.1f} MiB "
-          f"backend={tuned.backend}@v{tuned.backend_version}")
+          f"backend={tuned.backend}@v{tuned.backend_version}{mesh}")
     print(f"model: {tuned.predicted_gbps:.2f} effective GB/s predicted")
     m = tuned.measurement
     if m is not None:
@@ -114,6 +127,7 @@ def _cmd_inspect(args) -> int:
                        f"_r{prog.get('radius')}_{prog.get('boundary')}",
             "block": rec.get("block_shape"),
             "par_time": rec.get("par_time"),
+            "decomp": rec.get("decomp"),
             "backend": f"{rec.get('backend')}@v{rec.get('backend_version')}",
             "predicted_gbps": round(rec.get("predicted_gbps", 0.0), 3),
             "measured_gbps": None if m is None

@@ -10,11 +10,21 @@ model prunes the thousands-point space down to the handful worth timing.
 Ordering: predicted effective GB/s descending; ties broken toward
 sublane-aligned halos (the paper's eq. 6 preference) and then smaller VMEM
 footprints (more headroom for the compiler).
+
+Mesh-aware candidates (``candidate.decomp`` set) are ranked by the
+*aggregate* model: per-shard block throughput times the device count, with
+the per-superstep ICI halo exchange — ``par_time * halo_radius``-deep
+strips ppermute'd both ways along every sharded axis — charged against the
+chip's ICI link bandwidth.  Exchange and local compute overlap (XLA's
+latency-hiding scheduler; see core/distributed.py), so the superstep takes
+``max(compute, exchange)`` — a decomposition whose exchange dominates is
+reported ``ici``-bound and ranks accordingly.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Optional, Sequence, Tuple
 
 from repro.analysis.hw import TpuChip, V5E
@@ -30,7 +40,7 @@ class RankedCandidate:
     predicted_gbps: float      # effective GB/s (model)
     predicted_gcells: float    # useful GCell/s (model)
     predicted_gflops: float    # useful GFLOP/s (model)
-    bound: str                 # "compute" | "memory"
+    bound: str                 # "compute" | "memory" | "ici"
 
     def describe(self) -> str:
         return (f"{self.candidate.describe()} -> "
@@ -38,13 +48,58 @@ class RankedCandidate:
                 f"({self.predicted_gcells:.2f} GCell/s, {self.bound}-bound)")
 
 
+def exchange_bytes_per_superstep(program, plan, decomp,
+                                 grid_shape: Tuple[int, ...]) -> int:
+    """ICI bytes one shard moves per superstep: a ``plan.halo``-deep strip
+    sent each way along every sharded axis (the deep-halo exchange of
+    core/distributed.exchange_halo).  Unsharded axes exchange nothing."""
+    prog = as_program(program)
+    itemsize = prog.bytes_per_cell // 2     # one array element (Table I
+    local = decomp.local_shape(grid_shape)  # counts read + write)
+    total = 0
+    for d, shards in enumerate(decomp.axis_shards):
+        if shards <= 1:
+            continue
+        strip = plan.halo * math.prod(
+            local[e] for e in range(prog.ndim) if e != d)
+        total += 2 * strip * itemsize          # both directions
+    return total
+
+
 def predict(program, candidate: Candidate, chip: TpuChip = V5E,
             grid_shape: Optional[Tuple[int, ...]] = None) -> RankedCandidate:
     """Model prediction for one candidate (grid-padding waste charged when
     the target grid is known — same penalty ``blocking.plan_blocking``
-    applies)."""
+    applies).  Decomposed candidates get the aggregate mesh model with the
+    exchange traffic charged (see module docstring)."""
     prog = as_program(program)
     est = estimate(candidate.plan, chip)
+    decomp = candidate.decomp
+    if decomp is not None and decomp.n_devices > 1:
+        if grid_shape is None:
+            raise ValueError(
+                "ranking a decomposed candidate needs grid_shape (exchange "
+                "traffic scales with the local extents)")
+        local = decomp.local_shape(grid_shape)
+        blocks = math.prod(
+            -(-l // c) for l, c in zip(local, candidate.plan.block_shape))
+        t_local = blocks * max(est.compute_s_per_block, est.hbm_s_per_block)
+        t_ici = exchange_bytes_per_superstep(
+            prog, candidate.plan, decomp, grid_shape) \
+            / chip.ici_link_bytes_per_s
+        t_superstep = max(t_local, t_ici)
+        cells_per_s = (decomp.n_devices * math.prod(local)
+                       * candidate.plan.par_time) / t_superstep
+        useful = grid_useful_fraction(local, candidate.plan.block_shape)
+        return RankedCandidate(
+            candidate=candidate,
+            predicted_gbps=useful * perf_model.gbps_from_cells_per_s(
+                cells_per_s, cell_bytes=prog.bytes_per_cell),
+            predicted_gcells=useful * cells_per_s / 1e9,
+            predicted_gflops=useful * cells_per_s
+            * prog.flops_per_cell / 1e9,
+            bound="ici" if t_ici > t_local else est.bound,
+        )
     useful = grid_useful_fraction(grid_shape, candidate.plan.block_shape)
     # == perf_model.predicted_gbps(prog, plan, chip) on the estimate above
     # (one shared formula, one estimate() evaluation per candidate).

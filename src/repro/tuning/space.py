@@ -24,13 +24,24 @@ The paper's feasibility constraints map onto TPU pruning predicates:
 
 ``par_vec`` has no free TPU analogue (the VPU always runs (8, 128) tiles);
 it is absorbed by the lane-alignment predicate — see DESIGN.md §6.
+
+Mesh-aware enumeration (the SASA direction — hybrid spatial/temporal
+parallelism across parallel memory channels, here the device mesh): with
+``n_devices`` (or explicit ``decompositions``) the space gains a
+*decomposition axis* — every way of factoring the device count over the
+grid's dimensions — and each (plan, decomposition) pair is pruned by the
+per-shard analogue of eq. 2: the ``par_time * halo_radius``-deep exchange
+halo must fit the *local* shard extent (and the local extent must tile by
+csize), exactly the feasibility checks ``DistributedStencil`` enforces at
+construction.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import List, Optional, Sequence, Tuple
+import math
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 from repro.analysis.hw import TpuChip, V5E
 from repro.backends.registry import (default_backend_name, get_backend,
@@ -43,17 +54,95 @@ Shape = Tuple[int, ...]
 
 
 @dataclasses.dataclass(frozen=True)
+class MeshDecomposition:
+    """Shards per grid axis — how a device mesh is laid over the grid.
+
+    Mesh axis *names* are a runtime concern (``core.distributed``); for
+    tuning only the shard count per grid dimension matters, so two mesh
+    layouts yielding the same per-axis split are one point of the space.
+    """
+
+    axis_shards: Shape
+
+    def __post_init__(self):
+        if not self.axis_shards or any(s < 1 for s in self.axis_shards):
+            raise ValueError(f"bad axis_shards {self.axis_shards}")
+
+    @property
+    def n_devices(self) -> int:
+        return math.prod(self.axis_shards)
+
+    def local_shape(self, grid_shape: Shape) -> Shape:
+        return tuple(g // s for g, s in zip(grid_shape, self.axis_shards))
+
+    def describe(self) -> str:
+        return "x".join(map(str, self.axis_shards))
+
+
+def _factorizations(n: int, ndim: int) -> Iterator[Shape]:
+    """All ordered factorizations of ``n`` into ``ndim`` positive factors."""
+    if ndim == 1:
+        yield (n,)
+        return
+    for d in range(1, n + 1):
+        if n % d == 0:
+            for rest in _factorizations(n // d, ndim - 1):
+                yield (d,) + rest
+
+
+def enumerate_decompositions(ndim: int, n_devices: int,
+                             grid_shape: Optional[Shape] = None
+                             ) -> List[MeshDecomposition]:
+    """Every way of splitting ``n_devices`` over ``ndim`` grid axes.
+
+    With a grid, splits that do not divide an axis evenly are dropped (the
+    runtime refuses them — ``DistributedStencil``'s divisibility check).
+    """
+    out = []
+    for shards in _factorizations(n_devices, ndim):
+        if grid_shape is not None and any(
+                g % s != 0 for g, s in zip(grid_shape, shards)):
+            continue
+        out.append(MeshDecomposition(axis_shards=shards))
+    return out
+
+
+def fits_shard(plan: BlockPlan, decomp: MeshDecomposition,
+               grid_shape: Shape) -> bool:
+    """Per-shard feasibility — eq. 2 applied to the local extent.
+
+    Mirrors ``DistributedStencil.__post_init__``: every sharded axis must
+    split evenly, the local extent must tile by the output block (csize),
+    and the ``par_time * halo_radius``-deep exchange halo must not exceed
+    the local extent (the strips ppermute'd to neighbors are cut from the
+    local block, so a halo deeper than the shard is unsatisfiable).
+    """
+    for g, s, c in zip(grid_shape, decomp.axis_shards, plan.block_shape):
+        if g % s != 0:
+            return False
+        local = g // s
+        if local % c != 0:
+            return False
+        if local < plan.halo:
+            return False
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
 class Candidate:
-    """One legal point of the design space: a blocking plan on a backend.
+    """One legal point of the design space: a blocking plan on a backend,
+    optionally placed on a mesh decomposition.
 
     ``plan.block_shape`` is the eq. 2 csize (useful output tile);
-    ``plan.padded_shape`` reproduces the enumerated bsize.
+    ``plan.padded_shape`` reproduces the enumerated bsize.  ``decomp`` is
+    None for single-device candidates.
     """
 
     plan: BlockPlan
     backend: str
     backend_version: int
     halo_aligned: bool     # (par_time * halo_radius) % SUBLANE == 0 (soft eq. 6)
+    decomp: Optional[MeshDecomposition] = None
 
     @property
     def bsize(self) -> Shape:
@@ -68,10 +157,12 @@ class Candidate:
         return self.plan.par_time
 
     def describe(self) -> str:
+        mesh = "" if self.decomp is None \
+            else f" mesh={self.decomp.describe()}"
         return (f"bsize={'x'.join(map(str, self.bsize))} "
                 f"csize={'x'.join(map(str, self.csize))} "
                 f"par_time={self.par_time} backend={self.backend}"
-                f"@v{self.backend_version}")
+                f"@v{self.backend_version}{mesh}")
 
 
 # ---- pruning predicates (each maps one paper constraint) -------------------
@@ -101,6 +192,11 @@ def halo_aligned(par_time: int, halo_radius: int) -> bool:
     depth is sublane-aligned.  Soft — recorded on the candidate for ranking
     tie-breaks, never used to prune."""
     return (par_time * halo_radius) % SUBLANE == 0
+
+
+def _aligned_divisors(n: int, align: int) -> List[int]:
+    """Divisors of ``n`` that are multiples of ``align``, ascending."""
+    return [d for d in range(align, n + 1, align) if n % d == 0]
 
 
 # ---- bsize candidates ------------------------------------------------------
@@ -157,16 +253,39 @@ def enumerate_space(
     grid_shape: Optional[Shape] = None,
     max_par_time: int = 32,
     min_useful_fraction: float = MIN_USEFUL_FRACTION,
+    n_devices: Optional[int] = None,
+    decompositions: Optional[Sequence[MeshDecomposition]] = None,
 ) -> List[Candidate]:
-    """All legal (bsize, par_time, backend) points for ``program`` on ``chip``.
+    """All legal (bsize, par_time, backend[, decomposition]) points for
+    ``program`` on ``chip``.
 
     Every returned candidate satisfies eq. 2 (positive csize on every axis),
     the bsize alignment predicate, and the VMEM budget; candidates whose
     useful fraction (csize/bsize product) falls below
     ``min_useful_fraction`` are pruned as unwinnable redundancy.
+
+    ``n_devices`` (or explicit ``decompositions``) turns on the mesh
+    decomposition axis: the cross product of the blocking space with every
+    feasible device split, pruned per shard by :func:`fits_shard` — this
+    requires ``grid_shape`` (local extents are meaningless without it).
     """
     prog = as_program(program)
     r = prog.halo_radius
+
+    decomps: Optional[Sequence[MeshDecomposition]] = decompositions
+    if decomps is None and n_devices is not None:
+        decomps = enumerate_decompositions(prog.ndim, n_devices, grid_shape)
+    if decomps is not None:
+        if grid_shape is None:
+            raise ValueError(
+                "mesh-aware enumeration needs grid_shape (per-shard halo "
+                "pruning is relative to the local extent)")
+        for dc in decomps:
+            if len(dc.axis_shards) != prog.ndim:
+                raise ValueError(
+                    f"decomposition {dc.axis_shards} is not {prog.ndim}-D")
+
+    explicit_bsizes = bsizes
     if bsizes is None:
         bsizes = default_bsizes(prog.ndim, grid_shape)
     if backends is None:
@@ -187,6 +306,42 @@ def enumerate_space(
                 for name in backends]
 
     out: List[Candidate] = []
+
+    if decomps is not None and explicit_bsizes is None:
+        # Mesh path, free blocking: the runtime demands the local extent
+        # tile exactly by csize (no round-up under shard_map), so csize is
+        # enumerated from the *aligned divisors of the local extent* per
+        # decomposition — a global bsize sweep would mostly miss.  The
+        # eq. 6 alignment predicate moves onto the output tile (the
+        # streamed window is the halo-exchanged local block, whose
+        # alignment follows csize + 2*halo and cannot be chosen freely).
+        for dc in decomps:
+            local = dc.local_shape(grid_shape)
+            axis_opts = []
+            for d in range(prog.ndim):
+                if d == prog.ndim - 1:
+                    align = LANE
+                elif d == prog.ndim - 2:
+                    align = SUBLANE
+                else:
+                    align = 1
+                axis_opts.append(_aligned_divisors(local[d], align))
+            for cs in itertools.product(*axis_opts):
+                for pt in range(1, max_par_time + 1):
+                    plan = BlockPlan(spec=prog, block_shape=cs, par_time=pt)
+                    if not fits_shard(plan, dc, grid_shape):
+                        break   # halo grows with pt: no recovery
+                    if not fits_vmem(plan, chip):
+                        break   # window = csize + 2*halo grows with pt
+                    if plan.useful_fraction <= min_useful_fraction:
+                        break   # strictly decreasing in pt
+                    for name, version in resolved:
+                        out.append(Candidate(plan=plan, backend=name,
+                                             backend_version=version,
+                                             halo_aligned=halo_aligned(pt, r),
+                                             decomp=dc))
+        return out
+
     for bsize in bsizes:
         if len(bsize) != prog.ndim or not is_aligned(bsize):
             continue
@@ -200,6 +355,19 @@ def enumerate_space(
             if plan.useful_fraction <= min_useful_fraction:
                 break   # strictly decreasing in pt; boundary matches
                         # blocking.candidate_plans
+            if decomps is not None:
+                # Mesh path, explicit windows: keep the caller's bsize
+                # semantics and prune each (plan, decomposition) pair by
+                # the per-shard constraints.
+                for dc in decomps:
+                    if not fits_shard(plan, dc, grid_shape):
+                        continue
+                    for name, version in resolved:
+                        out.append(Candidate(plan=plan, backend=name,
+                                             backend_version=version,
+                                             halo_aligned=halo_aligned(pt, r),
+                                             decomp=dc))
+                continue
             for name, version in resolved:
                 out.append(Candidate(plan=plan, backend=name,
                                      backend_version=version,

@@ -1,0 +1,181 @@
+"""Sharded fused runs == single-device fused runs, on 8 fake devices.
+
+ISSUE 4 regressions:
+  * parity matrix — radii 1-4 x 2D/3D x three boundaries: the sharded fused
+    executor (one donated executable, dynamic full-superstep count,
+    remainder folded in) bit-matches the single-device fused run and tracks
+    the independent float64 numpy oracle;
+  * trace counts — O(1) compiles across varying ``supersteps`` (the count
+    is a dynamic scalar), one executable per (remainder, decomposition);
+  * the batched ``(B, *grid)`` axis under shard_map bit-matches per-grid
+    sharded runs;
+  * the pipelined kernel variant runs sharded (registry-resolved) and
+    bit-matches the plain one;
+  * non-local-kernel backends (xla-reference) are refused up front.
+"""
+
+import _env  # noqa: F401  (sets XLA_FLAGS first)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compat
+from repro.core import reference as ref
+from repro.core.blocking import BlockPlan
+from repro.core.distributed import Decomposition, DistributedStencil
+from repro.core.program import StencilProgram
+from repro.kernels import common, ops
+
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+BLOCKS = {2: (16, 128), 3: (8, 16, 128)}
+GRIDS = {2: (64, 256), 3: (32, 32, 128)}          # divisible by shards*block
+DECOMPS = {2: Decomposition((("pod", "data"), ("model",))),
+           3: Decomposition((("pod", "data"), ("model",), ()))}
+STEPS = 5                                          # full=2, rem=1 at pt=2
+
+
+def put(ds, g):
+    return jax.device_put(g, ds.sharding(nb=g.ndim - len(ds.global_shape)))
+
+
+# ---- parity matrix: sharded fused == single-device fused == numpy oracle ---
+
+for ndim in (2, 3):
+    for rad in (1, 2, 3, 4):
+        for boundary in ("clamp", "periodic", "constant"):
+            prog = StencilProgram(ndim=ndim, radius=rad, boundary=boundary,
+                                  boundary_value=0.25)
+            coeffs = prog.default_coeffs(seed=rad)
+            plan = BlockPlan(spec=prog, block_shape=BLOCKS[ndim], par_time=2)
+            G = GRIDS[ndim]
+            g = ref.random_grid(prog, G, seed=rad)
+            ds = DistributedStencil(prog, coeffs, plan, mesh, DECOMPS[ndim],
+                                    G)
+            got = ds.run(put(ds, g), STEPS)
+            want = ops.stencil_run(g, prog, coeffs, plan, STEPS)
+            # ulp-level tolerance, not bit-equality: the sharded and the
+            # single-device runs are different XLA executables, and XLA:CPU
+            # may pick different FMA fusions around the halo selects (the
+            # same caveat as the batched-executable server test).
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=1e-6, rtol=1e-4)
+            oracle = ref.numpy_program_nsteps(prog, coeffs, g, STEPS)
+            np.testing.assert_allclose(np.asarray(got), oracle, atol=5e-4,
+                                       rtol=5e-4)
+            print(f"OK parity_{ndim}d_r{rad}_{boundary}")
+
+# ---- trace counts: one executable per (remainder, decomposition) ----------
+
+prog = StencilProgram(ndim=2, radius=1)
+coeffs = prog.default_coeffs(seed=9)
+plan = BlockPlan(spec=prog, block_shape=(16, 128), par_time=2)
+G = (128, 512)
+g = ref.random_grid(prog, G, seed=9)
+ds = DistributedStencil(prog, coeffs, plan, mesh,
+                        Decomposition((("pod", "data"), ("model",))), G)
+common.reset_trace_counts()
+
+out = ds.run(put(ds, g), 5)                 # full=2, rem=1 -> one compile
+assert common.trace_count("dist_run_call") == 1
+ds.run(put(ds, g), 9)                       # full=4, same rem: zero compiles
+assert common.trace_count("dist_run_call") == 1
+ds.run(put(ds, g), 1)                       # full=0, same rem: zero compiles
+assert common.trace_count("dist_run_call") == 1
+ds.run(put(ds, g), 4)                       # rem=0: the one new executable
+assert common.trace_count("dist_run_call") == 2
+assert ds.run(put(ds, g), 0).shape == G     # steps=0: identity, no compile
+assert common.trace_count("dist_run_call") == 2
+
+# a different decomposition is a different executable — exactly one more
+ds_alt = DistributedStencil(prog, coeffs, plan, mesh,
+                            Decomposition((("model",), ("pod", "data"))), G)
+got_alt = ds_alt.run(put(ds_alt, g), 5)
+assert common.trace_count("dist_run_call") == 3
+# different decomposition -> different executable -> ulp tolerance
+np.testing.assert_allclose(np.asarray(got_alt), np.asarray(out),
+                           atol=1e-6, rtol=1e-4)
+
+want = ref.numpy_program_nsteps(prog, coeffs, g, 5)
+np.testing.assert_allclose(np.asarray(out), want, atol=5e-4, rtol=5e-4)
+print("OK trace_counts")
+
+# ---- donation: the sharded carry is consumed by the executable -------------
+
+carry = put(ds, g)
+ds.run(carry, 5)
+assert carry.is_deleted(), "sharded fused run must donate the carry"
+print("OK donated_carry")
+
+# ---- batch axis under shard_map -------------------------------------------
+
+B = 2
+prog_b = StencilProgram(ndim=2, radius=2, boundary="periodic")
+coeffs_b = prog_b.default_coeffs(seed=3)
+plan_b = BlockPlan(spec=prog_b, block_shape=(16, 128), par_time=2)
+ds_b = DistributedStencil(prog_b, coeffs_b, plan_b, mesh,
+                          Decomposition((("pod", "data"), ("model",))),
+                          (64, 256))
+gb = jnp.stack([ref.random_grid(prog_b, (64, 256), seed=s)
+                for s in range(B)])
+bat = ds_b.run(put(ds_b, gb), STEPS)
+assert bat.shape == gb.shape
+for i in range(B):
+    one = ds_b.run(put(ds_b, gb[i]), STEPS)
+    # batched and unbatched are distinct executables -> ulp tolerance
+    np.testing.assert_allclose(np.asarray(bat[i]), np.asarray(one),
+                               atol=1e-6, rtol=1e-4)
+print("OK batched_sharded")
+
+# ---- pipelined local kernel, registry-resolved -----------------------------
+
+ds_p = DistributedStencil(prog_b, coeffs_b, plan_b, mesh,
+                          Decomposition((("pod", "data"), ("model",))),
+                          (64, 256), pipelined=True)
+assert ds_p.backend_name.endswith("-pipelined"), ds_p.backend_name
+pipe = ds_p.run(put(ds_p, gb[0]), STEPS)
+plain = ds_b.run(put(ds_b, gb[0]), STEPS)
+np.testing.assert_allclose(np.asarray(pipe), np.asarray(plain),
+                           atol=1e-6, rtol=1e-4)
+print("OK pipelined_sharded")
+
+# ---- serving front places batched groups onto the mesh ---------------------
+
+import os
+import tempfile
+
+from repro.launch.stencil_serve import StencilServer
+
+with tempfile.TemporaryDirectory() as td:
+    server = StencilServer(max_batch=4, max_par_time=2, mesh_devices=8,
+                           cache_path=os.path.join(td, "plans.json"))
+    rng = np.random.RandomState(0)
+    shape = (64, 256)
+    prog_s = StencilProgram(ndim=2, radius=1)
+    grids = [rng.uniform(-1, 1, shape) for _ in range(5)]
+    rids = [server.submit(prog_s, g, steps=3) for g in grids]
+    results = server.flush()
+    assert set(results) == set(rids), server.failed
+    assert not server.mesh_fallbacks, server.mesh_fallbacks
+    assert server.stats.sharded_batches == 2           # batches of 4 + 1
+    coeffs_s = prog_s.default_coeffs()
+    for rid, g in zip(rids, grids):
+        want = ref.numpy_program_nsteps(prog_s, coeffs_s,
+                                        jnp.asarray(g, prog_s.dtype), 3)
+        np.testing.assert_allclose(results[rid], want, atol=5e-4, rtol=5e-4)
+print("OK served_on_mesh")
+
+# ---- backends without a local kernel are refused up front ------------------
+
+try:
+    DistributedStencil(prog_b, coeffs_b, plan_b, mesh,
+                       Decomposition((("pod", "data"), ("model",))),
+                       (64, 256), backend="xla-reference")
+except ValueError as e:
+    assert "local" in str(e)
+else:
+    raise AssertionError("xla-reference accepted as distributed local kernel")
+print("OK backend_guard")
+
+print("OK all")

@@ -1,0 +1,22 @@
+"""Wrapper for the sharded fused-run parity suite (8 fake CPU devices).
+
+The heavy lifting happens in ``tests/dist_scripts/stencil_fused_dist.py``
+(subprocess, so the fake device count is set before jax imports); this
+wrapper asserts every marker so a missing case fails loudly.
+"""
+
+import pytest
+
+PARITY = [f"parity_{nd}d_r{r}_{b}"
+          for nd in (2, 3)
+          for r in (1, 2, 3, 4)
+          for b in ("clamp", "periodic", "constant")]
+
+
+@pytest.mark.slow
+def test_sharded_fused_runs(dist_runner):
+    out = dist_runner("stencil_fused_dist.py")
+    for marker in PARITY + ["trace_counts", "donated_carry",
+                            "batched_sharded", "pipelined_sharded",
+                            "served_on_mesh", "backend_guard", "all"]:
+        assert f"OK {marker}" in out, marker

@@ -104,6 +104,106 @@ def test_cache_key_separates_pipelined_backend():
     assert plain != piped
 
 
+# ---- mesh-aware space / ranking / cache (ISSUE 4) --------------------------
+
+def test_enumerate_decompositions_factors_and_divisibility():
+    decomps = tspace.enumerate_decompositions(2, 8, (64, 256))
+    assert {d.axis_shards for d in decomps} == \
+        {(1, 8), (2, 4), (4, 2), (8, 1)}
+    assert all(d.n_devices == 8 for d in decomps)
+    # a non-divisible axis prunes the splits that land on it
+    decomps = tspace.enumerate_decompositions(2, 8, (12, 256))
+    shards = {d.axis_shards for d in decomps}
+    assert (8, 1) not in shards and (1, 8) in shards
+    assert all(12 % d.axis_shards[0] == 0 for d in decomps)
+
+
+@pytest.mark.parametrize("rad", [1, 2, 4])
+def test_mesh_space_prunes_per_shard(rad):
+    """Every mesh candidate satisfies the per-shard constraints the runtime
+    (DistributedStencil) enforces: local extent tiles by csize and the
+    par_time*halo_radius-deep exchange halo fits the local extent."""
+    prog = StencilProgram(ndim=2, radius=rad)
+    grid = (64, 256)
+    cands = tspace.enumerate_space(prog, V5E,
+                                   backends=("pallas-interpret",),
+                                   grid_shape=grid, n_devices=8,
+                                   max_par_time=8)
+    assert cands
+    for c in cands:
+        assert c.decomp is not None
+        assert tspace.fits_shard(c.plan, c.decomp, grid)
+        local = c.decomp.local_shape(grid)
+        assert all(l % b == 0 for l, b in zip(local, c.csize))
+        assert all(c.plan.halo <= l for l in local)
+    # mesh-aware enumeration without a grid is meaningless
+    with pytest.raises(ValueError):
+        tspace.enumerate_space(prog, V5E, n_devices=8)
+
+
+def test_mesh_rank_charges_exchange_traffic():
+    from repro.tuning.model_rank import exchange_bytes_per_superstep
+
+    prog = StencilProgram(ndim=2, radius=2)
+    grid = (64, 512)      # wide enough that a 4-way column split stays
+    cands = tspace.enumerate_space(prog, V5E,     # LANE-aligned
+                                   backends=("pallas-interpret",),
+                                   grid_shape=grid, n_devices=4,
+                                   max_par_time=2)
+    c = next(c for c in cands if c.decomp.axis_shards == (2, 2))
+    local = c.decomp.local_shape(grid)
+    # one halo-deep strip both ways per sharded axis, f32
+    want = sum(2 * c.plan.halo * local[1 - d] * 4 for d in range(2))
+    assert exchange_bytes_per_superstep(prog, c.plan, c.decomp, grid) == want
+
+    fast = tuning.predict(prog, c, V5E, grid)
+    slow = tuning.predict(prog, c,
+                          TpuChip(name="slow-ici",
+                                  ici_link_bytes_per_s=1.0), grid)
+    assert slow.bound == "ici"
+    assert slow.predicted_gbps < fast.predicted_gbps
+    # an unsharded axis exchanges nothing
+    c1 = next(c for c in cands if c.decomp.axis_shards == (1, 4))
+    l1 = c1.decomp.local_shape(grid)
+    assert exchange_bytes_per_superstep(prog, c1.plan, c1.decomp, grid) \
+        == 2 * c1.plan.halo * l1[0] * 4
+
+
+def test_cache_key_separates_decompositions():
+    prog = StencilProgram(ndim=2, radius=2)
+    args = (prog, (64, 256), V5E.name, "pallas-interpret", 1)
+    keys = {tcache.cache_key(*args),
+            tcache.cache_key(*args, decomp=(4, 2)),
+            tcache.cache_key(*args, decomp=(2, 4)),
+            tcache.cache_key(*args, decomp="ndev=8")}
+    assert len(keys) == 4
+
+
+def test_autotune_mesh_aware_model_only(tmp_path):
+    prog = StencilProgram(ndim=2, radius=1)
+    kw = dict(grid_shape=(64, 256), backend="pallas-interpret",
+              max_par_time=4, cache_path=str(tmp_path / "plans.json"))
+
+    # mesh-aware measurement needs a real mesh: refused, not silently wrong
+    with pytest.raises(ValueError, match="model-only"):
+        tuning.autotune(prog, V5E, n_devices=8, **kw)
+
+    tuned = tuning.autotune(prog, V5E, n_devices=8, measure=False, **kw)
+    assert tuned.decomp is not None and math.prod(tuned.decomp) == 8
+    assert tuned.measurement is None
+
+    again = tuning.autotune(prog, V5E, n_devices=8, measure=False, **kw)
+    assert again.from_cache and again.decomp == tuned.decomp
+
+    # pinning a split is a different search space -> different cache key
+    pinned = tuning.autotune(prog, V5E, decomposition=(4, 2),
+                             measure=False, **kw)
+    assert not pinned.from_cache and pinned.decomp == (4, 2)
+    # ...and the single-device record is untouched by either
+    single = tuning.autotune(prog, V5E, measure=False, **kw)
+    assert single.decomp is None
+
+
 # ---- model ranking ---------------------------------------------------------
 
 def test_rank_is_monotone_in_predicted_throughput():
