@@ -5,11 +5,12 @@ harness and relative blocking behaviour, NOT TPU performance (that is the
 roofline analysis' job).  Derived column reports MCell/s and the speedup of
 temporal blocking vs par_time=1 at equal steps.
 
-Stencils are described as ``StencilProgram``s and lowered through the
-backend registry; a box/periodic row exercises the non-star path end to end.
+Every row runs through the unified executor —
+``repro.stencil(program).compile(shape, steps=..., plan=..., backend=...)``
+— so the benchmark exercises exactly the production entry point.
 Executor-comparison rows time the fused run executor vs the eager
 per-superstep chain, the double-buffered (pipelined) kernel vs the plain
-one, and a batched ``(B, *grid)`` run vs a per-grid Python loop.
+one, and a batched ``(B, *grid)`` executable vs a per-grid Python loop.
 
 Env knobs:
   REPRO_BENCH_TUNED=1      — blocked plans from the autotuner's persistent
@@ -28,7 +29,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.backends import lower, pipelined_variant
+import repro
+from repro.backends import pipelined_variant
 from repro.core import reference as ref
 from repro.core.blocking import BlockPlan
 from repro.core.program import StencilProgram
@@ -57,35 +59,40 @@ def _tuned_plan(prog, grid_shape) -> BlockPlan:
 
 def _executor_rows(prog, shape, plan, rows):
     """Fused-vs-eager, pipelined-vs-plain, and batched-vs-loop comparisons
-    on one program (direct pallas dispatch path)."""
-    coeffs = prog.default_coeffs()
+    on one program (the front door's direct pallas dispatch path)."""
+    sten = repro.stencil(prog)
     g = ref.random_grid(prog, shape, seed=0)
     cells = 1
     for s in shape:
         cells *= s
     steps = 2 * plan.par_time
+    cs = sten.compile(shape, steps=steps, plan=plan)
 
-    t_eager = _time(lambda: ops.stencil_run(g, prog, coeffs, plan, steps,
-                                            fused=False), reps=2)
-    t_fused = _time(lambda: ops.stencil_run(g, prog, coeffs, plan, steps),
-                    reps=2)
+    def eager():
+        # the historical per-superstep Python chain (one dispatch per
+        # superstep, remainder folded) — the executor's own un-fused
+        # control path, so fused and eager stay one implementation
+        return ops._stencil_run(g, prog, sten.coeffs, plan, steps,
+                                fused=False)
+
+    t_eager = _time(eager, reps=2)
+    t_fused = _time(cs.run, g, reps=2)
     mcells = cells * steps / t_fused / 1e6
     rows.append((f"run_fused_{prog.ndim}d_r{prog.radius}", t_fused * 1e6,
                  f"mcells_per_s={mcells:.1f};"
                  f"fused_speedup_vs_eager={t_eager / t_fused:.2f}x"))
 
-    t_pipe = _time(lambda: ops.stencil_run(g, prog, coeffs, plan, steps,
-                                           pipelined=True), reps=2)
+    cs_pipe = sten.compile(shape, steps=steps, plan=plan, pipelined=True)
+    t_pipe = _time(cs_pipe.run, g, reps=2)
     rows.append((f"run_pipelined_{prog.ndim}d_r{prog.radius}", t_pipe * 1e6,
                  f"mcells_per_s={cells * steps / t_pipe / 1e6:.1f};"
                  f"pipelined_speedup_vs_plain={t_fused / t_pipe:.2f}x"))
 
     B = 2
     gb = jnp.stack([ref.random_grid(prog, shape, seed=s) for s in range(B)])
-    t_loop = _time(lambda: [ops.stencil_run(gb[i], prog, coeffs, plan, steps)
-                            for i in range(B)], reps=2)
-    t_batch = _time(lambda: ops.stencil_run(gb, prog, coeffs, plan, steps),
-                    reps=2)
+    cs_b = sten.compile(shape, steps=steps, plan=plan, batch=B)
+    t_loop = _time(lambda: [cs.run(gb[i]) for i in range(B)], reps=2)
+    t_batch = _time(cs_b.run, gb, reps=2)
     rows.append((f"run_batched_b{B}_{prog.ndim}d_r{prog.radius}",
                  t_batch * 1e6,
                  f"mcells_per_s={B * cells * steps / t_batch / 1e6:.1f};"
@@ -131,15 +138,15 @@ def run(use_tuned=None, smoke=None):
         else:
             plan1 = BlockPlan(spec=prog, block_shape=block, par_time=1)
             plan2 = BlockPlan(spec=prog, block_shape=block, par_time=2)
-        low1 = lower(prog, plan1, backend=backend)
-        low2 = lower(prog, plan2, backend=backend)
+        steps = plan2.par_time
+        cs1 = repro.stencil(prog).compile(shape, steps=steps, plan=plan1,
+                                          backend=backend)
+        cs2 = repro.stencil(prog).compile(shape, steps=steps, plan=plan2,
+                                          backend=backend)
         g = ref.random_grid(prog, shape, seed=0)
 
-        steps = plan2.par_time
-        f1 = jax.jit(lambda g: low1.run(g, steps))
-        f2 = jax.jit(lambda g: low2.superstep(g))
-        t1 = _time(f1, g)
-        t2 = _time(f2, g)
+        t1 = _time(cs1.run, g)
+        t2 = _time(cs2.run, g)
         mcells = cells * steps / t2 / 1e6
         tag = f"kernel_{prog.ndim}d_r{prog.radius}"
         if prog.shape != "star":

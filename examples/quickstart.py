@@ -1,10 +1,13 @@
-"""Quickstart: high-order heat diffusion with combined spatial+temporal
-blocking.
+"""Quickstart: high-order heat diffusion through the one front door.
 
 Describes a radius-4 2D stencil (paper's hardest 2D case) as a
-``StencilProgram``, lowers it through the backend registry with the
-planner-chosen blocking, verifies against the naive reference, and prints
-the performance-model estimate for TPU v5e.
+``StencilProgram``, compiles it through the unified executor —
+``repro.stencil(program).compile(grid_shape, steps=...)`` — which resolves
+the blocking plan (autotuner + plan cache), the backend, and the
+performance-model cost, then runs it and verifies against the naive
+reference.  The legacy entry points (``StencilEngine``,
+``kernels.ops.stencil_run``, ``DistributedStencil``) are deprecated shims
+over this same executor.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,54 +15,57 @@ the performance-model estimate for TPU v5e.
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.analysis.hw import V5E
-from repro.backends import lower
-from repro.core import StencilProgram
-from repro.core.blocking import estimate
 from repro.core.reference import program_nsteps_unrolled, random_grid
-from repro.tuning import autotune
 
 
 def main():
-    program = StencilProgram(ndim=2, radius=4, shape="star",
-                             boundary="clamp")
+    program = repro.StencilProgram(ndim=2, radius=4, shape="star",
+                                   boundary="clamp")
     print(f"program: 2D star radius={program.radius}  "
           f"taps={program.num_taps}  "
           f"FLOP/cell={program.flops_per_cell} (paper Table I: 33)")
 
+    # one front door: plan="auto" searches the legal (bsize, par_time)
+    # space, ranks by the roofline model, and caches the winner — the
+    # second compile for this (program, grid, chip, backend) is a cache hit
     grid_shape = (256, 512)
-    lowered = lower(program, grid_shape=grid_shape)
-    plan = lowered.plan
-    print(f"backend: {lowered.backend_name} v{lowered.backend_version}")
+    steps = 8
+    cs = repro.stencil(program).compile(grid_shape, steps=steps,
+                                        plan="auto", max_par_time=4)
+    plan = cs.plan
+    print(f"backend: {cs.backend} v{cs.backend_version}"
+          f"{'  [plan cache]' if cs.from_plan_cache else ''}")
     print(f"plan: block={plan.block_shape} par_time={plan.par_time} "
           f"halo={plan.halo} vmem={plan.vmem_bytes / 2**20:.1f} MiB")
 
-    est = estimate(plan, V5E)
-    print(f"v5e model: {est.gcells_per_s / 1e9:.0f} GCell/s "
-          f"{est.gflops_per_s / 1e9:.0f} GFLOP/s ({est.bound}-bound), "
-          f"effective "
-          f"{est.gcells_per_s * program.bytes_per_cell / 1e9:.0f} GB/s"
+    est = cs.cost
+    print(f"v5e model: {est.predicted_gcells:.0f} GCell/s "
+          f"{est.predicted_gflops:.0f} GFLOP/s ({est.bound}-bound), "
+          f"effective {est.predicted_gbps:.0f} GB/s"
           f" vs {V5E.hbm_bytes_per_s / 1e9:.0f} GB/s HBM")
 
     grid = random_grid(program, grid_shape, seed=0)
-    steps = 2 * plan.par_time
-    out = lowered.run(grid, steps)
-    want = program_nsteps_unrolled(program, lowered.coeffs, grid, steps)
+    out = cs.run(grid)
+    want = program_nsteps_unrolled(program, cs.coeffs, grid, steps)
     err = float(jnp.max(jnp.abs(out - want)))
     assert np.allclose(out, want, atol=1e-4), err
     print(f"{steps} steps via temporal blocking == naive reference "
           f"(max err {err:.2e})  OK")
 
-    # autotune: search the legal (bsize, par_time) space, rank by the model,
-    # measure the frontier, cache the winner (repro.tuning; DESIGN.md §6)
-    tuned = autotune(program, V5E, grid_shape=grid_shape, top_k=3,
-                     max_par_time=4)
-    src = "cache" if tuned.from_cache else \
-        f"search over {tuned.space_size} candidates"
-    print(f"autotuned plan [{src}]: block={tuned.plan.block_shape} "
-          f"par_time={tuned.plan.par_time} "
-          f"measured={tuned.measured_gbps:.3f} GB/s "
-          f"on {tuned.backend}")
+    # the same handle compiles every execution shape: a batched executable
+    # runs B independent grids as ONE donated dispatch
+    B = 2
+    csb = repro.stencil(program).compile(grid_shape, steps=steps,
+                                         plan=plan, batch=B)
+    outs = csb.run(jnp.stack([grid, grid]))
+    assert outs.shape == (B, *grid_shape)
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(out))
+    print(f"batched: {B} grids, one executable, bit-equal to the single "
+          f"run  OK")
+    print("(multi-device: compile(devices=N) searches mesh decompositions; "
+          "see README)")
 
 
 if __name__ == "__main__":

@@ -14,10 +14,10 @@ the temporal-blocking engine and check energy stays bounded (CFL respected).
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.core import StencilProgram
 from repro.core.blocking import BlockPlan
 from repro.core.program import ProgramCoeffs
-from repro.kernels import ops
 
 
 def laplacian_coeffs(program: StencilProgram,
@@ -56,9 +56,14 @@ def main():
     r2 = ((z - 16) ** 2 + (y - 24) ** 2 + (x - 128) ** 2).astype(jnp.float32)
     u = jnp.exp(-r2 / 50.0)
 
+    # one superstep (= par_time steps) per executor call, through the front
+    # door; every call reuses the same compiled executable
+    cs = repro.stencil(spec, coeffs=coeffs).compile(shape,
+                                                    steps=plan.par_time,
+                                                    plan=plan)
     e0 = float(jnp.sum(u ** 2))
     for superstep in range(4):
-        u = ops.stencil_superstep(u, spec, coeffs, plan)
+        u = cs.run(u)
         e = float(jnp.sum(u ** 2))
         print(f"superstep {superstep} ({(superstep + 1) * plan.par_time:2d} "
               f"steps): energy={e:.4f} (e/e0={e / e0:.3f}) "

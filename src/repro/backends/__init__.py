@@ -15,6 +15,7 @@ from repro.backends.registry import (  # noqa: F401
     lower,
     pipelined_variant,
     register_backend,
+    resolve_backend,
 )
 from repro.backends import pallas_backend as _pallas  # noqa: F401
 from repro.backends import xla_ref as _xla  # noqa: F401
@@ -29,4 +30,5 @@ __all__ = [
     "lower",
     "pipelined_variant",
     "register_backend",
+    "resolve_backend",
 ]

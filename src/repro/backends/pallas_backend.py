@@ -13,7 +13,7 @@ flag) puts it on the autotuner's search axis and into the plan-cache key,
 so a plan tuned on one kernel variant never silently serves the other.
 
 ``run`` on every pallas backend goes through the fused run executor
-(``ops.stencil_run(fused=True)``): one donated executable per run, the
+(``ops._stencil_run(fused=True)``): one donated executable per run, the
 remainder superstep folded in.  All backends accept a leading batch axis
 (``(B, *grid)``) on both ``superstep`` and ``run``.
 """
@@ -41,28 +41,30 @@ def _make(program: StencilProgram, plan: Optional[BlockPlan],
                                      pipelined=pipelined)
 
     def run_fn(grid, c, steps):
-        return ops.stencil_run(grid, program, c, plan, steps,
-                               interpret=interpret, pipelined=pipelined)
+        return ops._stencil_run(grid, program, c, plan, steps,
+                                interpret=interpret, pipelined=pipelined)
 
     return LoweredStencil(program, plan, coeffs, superstep_fn, run_fn)
 
 
 @register_backend("pallas-tpu", version=1,
-                  traits=BackendTraits(local_kernel=True))
+                  traits=BackendTraits(local_kernel=True, fused_run=True))
 def pallas_tpu(program, plan, coeffs) -> LoweredStencil:
     """Compiled Pallas kernels (requires a TPU backend)."""
     return _make(program, plan, coeffs, interpret=False, pipelined=False)
 
 
 @register_backend("pallas-interpret", version=1,
-                  traits=BackendTraits(interpret=True, local_kernel=True))
+                  traits=BackendTraits(interpret=True, local_kernel=True,
+                                       fused_run=True))
 def pallas_interpret(program, plan, coeffs) -> LoweredStencil:
     """Same kernels under the Pallas interpreter — CPU CI / debugging."""
     return _make(program, plan, coeffs, interpret=True, pipelined=False)
 
 
 @register_backend("pallas-tpu-pipelined", version=1,
-                  traits=BackendTraits(pipelined=True, local_kernel=True))
+                  traits=BackendTraits(pipelined=True, local_kernel=True,
+                                       fused_run=True))
 def pallas_tpu_pipelined(program, plan, coeffs) -> LoweredStencil:
     """Double-buffered prefetch kernels, compiled mode."""
     return _make(program, plan, coeffs, interpret=False, pipelined=True)
@@ -70,7 +72,7 @@ def pallas_tpu_pipelined(program, plan, coeffs) -> LoweredStencil:
 
 @register_backend("pallas-interpret-pipelined", version=1,
                   traits=BackendTraits(interpret=True, pipelined=True,
-                                       local_kernel=True))
+                                       local_kernel=True, fused_run=True))
 def pallas_interpret_pipelined(program, plan, coeffs) -> LoweredStencil:
     """Double-buffered prefetch kernels under the interpreter (CPU CI)."""
     return _make(program, plan, coeffs, interpret=True, pipelined=True)

@@ -48,11 +48,20 @@ class BackendTraits:
     block inside ``shard_map``).  The oracle backend lowers a whole-grid
     jnp loop with its own boundary padding, so it cannot — its halos would
     be synthesized locally instead of exchanged.
+
+    ``fused_run=True`` declares that the backend's ``run`` *is* the fused
+    run executor (``kernels/ops._stencil_run`` configured by the
+    interpret/pipelined flags above): the unified executor
+    (``repro.executor``) then dispatches to it directly — honoring a
+    caller ``interpret`` override — instead of through the lowering
+    object.  Backends with their own run implementation must leave it
+    False or the executor would silently bypass them.
     """
 
     interpret: bool = False
     pipelined: bool = False
     local_kernel: bool = False
+    fused_run: bool = False
 
 
 class LoweredStencil:
@@ -162,6 +171,28 @@ def pipelined_variant(name: str) -> Optional[str]:
     """
     cand = name if name.endswith("-pipelined") else f"{name}-pipelined"
     return cand if cand in _REGISTRY else None
+
+
+def resolve_backend(name: Optional[str] = None, pipelined: bool = False
+                    ) -> "tuple[str, int, BackendTraits]":
+    """One resolution rule for every executor: ``(name, version, traits)``.
+
+    ``name=None`` picks the platform default; ``pipelined=True`` resolves
+    the ``-pipelined`` double-buffered sibling and raises when the backend
+    has none (silently running the plain kernel is never acceptable).
+    """
+    name = name or default_backend_name()
+    if pipelined:
+        pipe = pipelined_variant(name)
+        if pipe is None:
+            raise ValueError(
+                f"backend {name!r} has no pipelined lowering; "
+                f"pipelined=True would silently run the plain kernel — "
+                f"pick a pallas backend (their -pipelined siblings are "
+                f"registered) or drop pipelined=True")
+        name = pipe
+    _, version = get_backend(name)
+    return name, version, backend_traits(name, version)
 
 
 def lower(program, plan: Optional[BlockPlan] = None, *,

@@ -10,6 +10,9 @@ shape/boundary generality through the identical pipeline.
 below for the ``repro.tuning`` autotuner's pick (model-guided by default,
 empirically measured with ``measure=True`` on real hardware); the
 hand-written values remain the deterministic fallback.
+
+``StencilWorkload.compile(steps=...)`` routes the workload through the
+unified executor (``repro.stencil(...).compile(...)``) with its own plan.
 """
 
 from __future__ import annotations
@@ -27,6 +30,25 @@ class StencilWorkload:
     grid_shape: Tuple[int, ...]
     block_shape: Tuple[int, ...]
     par_time: int
+
+    def plan(self):
+        """This workload's hand-written (or autotuned) blocking plan."""
+        from repro.core.blocking import BlockPlan
+        return BlockPlan(spec=self.spec, block_shape=self.block_shape,
+                         par_time=self.par_time)
+
+    def compile(self, *, steps: int, plan=None, **compile_kwargs):
+        """Front-door executable for this workload.
+
+        Routes through the unified executor (``repro.stencil``); ``plan``
+        defaults to the workload's own blocking plan, and every other
+        ``compile`` knob (``batch``, ``devices``, ``backend``,
+        ``pipelined``, ...) passes through.
+        """
+        from repro.executor import stencil
+        return stencil(self.spec).compile(
+            self.grid_shape, steps=steps,
+            plan=self.plan() if plan is None else plan, **compile_kwargs)
 
 
 def autotune_workloads(

@@ -1,7 +1,8 @@
 """The paper's own workload: 3D star stencils, radius 1..4 (paper ~696^3).
 
 ``workloads(autotune=True)`` routes through ``repro.tuning`` exactly like
-the 2D configs — see ``configs/stencil2d.py``.
+the 2D configs, and each workload's ``compile(steps=...)`` hands back a
+unified-executor executable — see ``configs/stencil2d.py``.
 """
 
 from __future__ import annotations

@@ -185,6 +185,11 @@ def _local_superstep(block, center, taps, *, program, plan, decomp,
 class DistributedStencil:
     """A stencil problem decomposed over a device mesh.
 
+    Direct construction is deprecated (it warns): the unified executor —
+    ``repro.stencil(...).compile(grid_shape, steps=..., devices=...)`` —
+    resolves the decomposition, builds the mesh, and dispatches here; this
+    class remains the sharded executor implementation behind it.
+
     ``spec`` may be a legacy ``StencilSpec`` or a ``StencilProgram``; the
     exchange depth and boundary synthesis follow the program.
 
@@ -206,23 +211,25 @@ class DistributedStencil:
     interpret: Optional[bool] = None
     backend: Optional[str] = None
     pipelined: bool = False
+    # Internal constructions (the unified executor) pass _warn=False; direct
+    # use is deprecated in favor of repro.stencil(...).compile(devices=...).
+    _warn: bool = True
 
     def __post_init__(self):
-        from repro.backends import (backend_traits, default_backend_name,
-                                    get_backend, pipelined_variant)
+        from repro.backends import resolve_backend
+        if self._warn:
+            import warnings
+            warnings.warn(
+                "constructing DistributedStencil directly is deprecated; "
+                "use repro.stencil(program, coeffs=...).compile(grid_shape, "
+                "steps=..., devices=<count or shards-per-axis>) — the "
+                "unified executor builds the mesh and dispatches to the "
+                "same sharded fused executor (DESIGN.md §9)",
+                DeprecationWarning, stacklevel=3)
         self.program = as_program(self.spec)
         self.pcoeffs = normalize_coeffs(self.program, self.coeffs)
 
-        name = self.backend or default_backend_name()
-        if self.pipelined:
-            pipe = pipelined_variant(name)
-            if pipe is None:
-                raise ValueError(
-                    f"backend {name!r} has no pipelined lowering; "
-                    f"pipelined=True would silently run the plain kernel")
-            name = pipe
-        _, version = get_backend(name)
-        traits = backend_traits(name, version)
+        name, version, traits = resolve_backend(self.backend, self.pipelined)
         if not traits.local_kernel:
             raise ValueError(
                 f"backend {name!r} cannot serve as the distributed local "

@@ -1,45 +1,38 @@
-"""Temporal-blocking engine: planning + execution for a single chip.
+"""Temporal-blocking engine — DEPRECATED shim over the unified executor.
 
-``StencilEngine`` bundles a program (or legacy spec), coefficients, and a
-blocking plan chosen by the performance model (paper §V.A's tuning loop),
-lowers through the backend registry (``repro.backends``), and exposes:
-
-* ``superstep(grid)``  — advance ``par_time`` steps, one HBM round trip
-* ``run(grid, steps)`` — arbitrary step counts through the fused run
-                         executor (one donated executable, remainder folded
-                         in — see ``kernels/common.run_call``)
-* ``estimate()``       — the model's predicted throughput for the plan
-
-``pipelined=True`` selects the double-buffered prefetch kernel (the paper's
-deep pipeline) on both the direct dispatch path and — via the ``-pipelined``
-backend siblings — the registry path.  Grids may carry a leading batch axis
-(``(B, *grid)`` of independent grids).
+``StencilEngine`` predates the one-front-door API; construct executables
+through ``repro.stencil(program, coeffs=...).compile(grid_shape, steps=...,
+plan=..., backend=..., pipelined=...)`` instead.  The shim stays
+bit-compatible: ``run`` builds the same :class:`~repro.executor.
+CompiledStencil` the front door would and dispatches through the identical
+fused run executor (one donated executable, remainder folded in), and
+``superstep``/``lowered``/``estimate`` keep their historical behavior.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.analysis.hw import TpuChip, V5E
 from repro.core.blocking import BlockPlan, PlanEstimate, estimate, plan_blocking
-from repro.core.program import as_program
-from repro.kernels import ops
+from repro.core.program import as_program, normalize_coeffs
+from repro.kernels import common, ops
 
 
 @dataclasses.dataclass
 class StencilEngine:
-    """Planning + execution bundle.
+    """Planning + execution bundle (deprecated; see module docstring).
 
     ``spec`` may be a legacy ``StencilSpec`` or a ``StencilProgram``;
-    ``coeffs`` the matching ``StencilCoeffs``/``ProgramCoeffs`` (the kernels
-    normalize either into canonical tap order).  ``backend`` optionally pins
-    a registry backend name; None keeps the direct Pallas dispatch with
-    ``interpret`` auto-detection.  ``pipelined=True`` selects the
-    double-buffered kernel: directly on the dispatch path, or — when a
-    pallas ``backend`` is pinned — by resolving its ``-pipelined`` sibling.
+    ``coeffs`` the matching ``StencilCoeffs``/``ProgramCoeffs``.
+    ``backend`` optionally pins a registry backend name; ``pipelined=True``
+    selects the double-buffered kernel (resolving the ``-pipelined``
+    backend sibling where a backend is pinned).
     """
 
     spec: object
@@ -49,6 +42,18 @@ class StencilEngine:
     interpret: Optional[bool] = None
     backend: Optional[str] = None
     pipelined: bool = False
+
+    def __post_init__(self):
+        warnings.warn(
+            "StencilEngine is deprecated; use repro.stencil(program, "
+            "coeffs=...).compile(grid_shape, steps=..., plan=..., "
+            "backend=..., pipelined=...) (DESIGN.md §9)",
+            DeprecationWarning, stacklevel=3)
+        # Single-slot (key, CompiledStencil) memo: run() resolves the
+        # executor once per (shape, engine config), not per call, and a
+        # config change replaces the slot — no unbounded growth for
+        # engines whose coefficients vary every call
+        self._memo = None
 
     @classmethod
     def create(cls, spec, grid_shape: Tuple[int, ...],
@@ -68,15 +73,10 @@ class StencilEngine:
 
     def lowered(self):
         """Lower through the backend registry (pins ``backend`` if set)."""
-        from repro.backends import lower, pipelined_variant
+        from repro.backends import lower, resolve_backend
         name = self.backend
         if self.pipelined and name is not None:
-            pipe = pipelined_variant(name)
-            if pipe is None:
-                raise ValueError(
-                    f"backend {name!r} has no pipelined lowering; "
-                    f"pipelined=True would silently run the plain kernel")
-            name = pipe
+            name, _, _ = resolve_backend(name, pipelined=True)
         return lower(as_program(self.spec), self.plan, coeffs=self.coeffs,
                      backend=name)
 
@@ -88,11 +88,34 @@ class StencilEngine:
                                      pipelined=self.pipelined)
 
     def run(self, grid: jnp.ndarray, steps: int) -> jnp.ndarray:
-        if self.backend is not None:
-            return self.lowered().run(grid, steps)
-        return ops.stencil_run(grid, self.spec, self.coeffs, self.plan, steps,
-                               interpret=self.interpret,
-                               pipelined=self.pipelined)
+        """Advance ``steps`` time steps through the unified executor."""
+        if steps < 0:
+            raise ValueError("steps must be >= 0")
+        program = as_program(self.spec)
+        nb = common.batch_dims(program, grid.ndim)
+        if steps == 0:
+            return grid
+        # Coefficients enter the key by VALUE (tiny arrays, cheap bytes):
+        # engine fields are mutable and the pre-shim engine read them on
+        # every call, so rebinding OR in-place mutation must miss the memo.
+        pc = normalize_coeffs(program, self.coeffs)
+        ckey = (np.asarray(pc.center).tobytes(),
+                np.asarray(pc.taps).tobytes())
+        key = (grid.shape[nb:], grid.shape[0] if nb else None,
+               self.plan, self.backend, self.pipelined, self.interpret,
+               self.hw, program, ckey)
+        if self._memo is not None and self._memo[0] == key:
+            cs = self._memo[1]
+        else:
+            from repro.executor import stencil as _stencil
+            cs = _stencil(program, coeffs=pc).compile(
+                grid.shape[nb:], steps=steps,
+                batch=grid.shape[0] if nb else None,
+                plan=self.plan, backend=self.backend,
+                pipelined=self.pipelined, interpret=self.interpret,
+                hw=self.hw)
+            self._memo = (key, cs)
+        return cs.run(grid, steps)
 
     def estimate(self) -> PlanEstimate:
         return estimate(self.plan, self.hw)

@@ -1,0 +1,447 @@
+"""One front door: ``repro.stencil(program).compile(...)`` — the unified
+executor API over every run shape the repo knows.
+
+The paper's whole point is that ONE parameterized design (radius, blocking,
+par_time) covers every stencil configuration; this module is that claim at
+the API level.  Historically the repo exposed four divergent run surfaces —
+``kernels.ops.stencil_run``, ``StencilEngine``, ``DistributedStencil``, and
+``StencilServer`` — each with its own plan/backend/batch/steps plumbing and
+``tuning.autotune`` bolted on the side.  Now:
+
+    sten = repro.stencil(program, coeffs=...)      # describe once
+    cs = sten.compile((4096, 4096), steps=64,      # resolve everything
+                      batch=None, devices=None,
+                      plan="auto", backend=None,
+                      pipelined=False, donate=True)
+    out = cs.run(grid)                             # one dispatch
+
+``compile`` resolves the blocking plan (autotuner + persistent plan cache
+for ``plan="auto"``, the pure model planner for ``plan="model"``, or a
+caller-pinned ``BlockPlan``), the backend (registry name, ``-pipelined``
+sibling when asked), and — for ``devices`` > 1 — the mesh decomposition
+(``enumerate_decompositions`` via the mesh-aware tuner, or model-ranked
+against a pinned plan).  The returned :class:`CompiledStencil` carries
+``.plan``, ``.decomp``, ``.cost`` (the roofline model's predicted GB/s /
+GFLOP/s / bound) and dispatches ``.run`` to exactly one of three internal
+executors:
+
+    devices <= 1, pallas backend  -> the fused run executor
+                                     (``kernels/common.run_call``: one
+                                     donated executable, dynamic superstep
+                                     count, remainder folded in)
+    devices <= 1, oracle backend  -> the backend's registry lowering
+                                     (``xla-reference``: the jnp loop)
+    devices  > 1                  -> the sharded fused executor
+                                     (``core/distributed``: shard_map +
+                                     deep-halo exchange, same donated
+                                     one-executable contract on the mesh)
+
+Executable caching is inherited from those executors: any
+``steps = k * par_time + rem`` with the same remainder (and the same batch
+rank) reuses one compile — ``run_call``'s jit cache on a single device, the
+per-instance ``(rem, batch-rank)`` table on the mesh — so repeated
+``.run()`` calls and varying step counts are O(1) compiles.
+
+The legacy entry points survive as thin deprecation-warning shims over this
+module (bit-compatible; see ``kernels/ops.stencil_run``,
+``core/temporal.StencilEngine``, ``core/distributed.DistributedStencil``).
+"""
+
+from __future__ import annotations
+
+import math
+import operator
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hw import TpuChip, V5E
+from repro.backends import lower, resolve_backend
+from repro.core import compat
+from repro.core.blocking import BlockPlan, plan_blocking
+from repro.core.distributed import Decomposition, DistributedStencil
+from repro.core.program import (ProgramCoeffs, StencilProgram, as_program,
+                                normalize_coeffs)
+from repro.kernels import ops
+from repro.tuning.model_rank import RankedCandidate, predict, rank
+from repro.tuning.space import (Candidate, MeshDecomposition,
+                                enumerate_decompositions, fits_shard,
+                                halo_aligned)
+
+Devices = Union[None, int, Tuple[int, ...]]
+
+
+def _as_int(value) -> Optional[int]:
+    """``operator.index``'d value (numpy ints included), or None for
+    non-integral types — bools deliberately excluded."""
+    if isinstance(value, bool):
+        return None
+    try:
+        return operator.index(value)
+    except TypeError:
+        return None
+
+
+def _check_steps(steps, context: str = "") -> int:
+    """Validate a step count: integral, >= 1."""
+    v = _as_int(steps)
+    if v is None or v < 1:
+        raise ValueError(f"steps must be an int >= 1 (got {steps!r})"
+                         f"{context}")
+    return v
+
+
+def stencil(program, coeffs=None) -> "Stencil":
+    """The front door: bind a program (or legacy spec) to its coefficients.
+
+    Returns a :class:`Stencil` handle whose :meth:`Stencil.compile` resolves
+    plan/backend/decomposition and hands back a runnable
+    :class:`CompiledStencil`.  ``coeffs`` defaults to the program's
+    canonical ``default_coeffs()``; legacy ``StencilCoeffs`` are normalized.
+    """
+    return Stencil(program, coeffs)
+
+
+class Stencil:
+    """A program + coefficients, ready to compile for any execution shape."""
+
+    def __init__(self, program, coeffs=None):
+        self.program: StencilProgram = as_program(program)
+        if coeffs is None:
+            coeffs = self.program.default_coeffs()
+        self.coeffs: ProgramCoeffs = normalize_coeffs(self.program, coeffs)
+
+    def __repr__(self) -> str:
+        p = self.program
+        return (f"Stencil({p.ndim}D {p.shape} r={p.radius} "
+                f"boundary={p.boundary})")
+
+    # -- compile -------------------------------------------------------------
+
+    def compile(self, grid_shape, *, steps: int,
+                batch: Optional[int] = None,
+                devices: Devices = None,
+                plan: Union[str, BlockPlan] = "auto",
+                backend: Optional[str] = None,
+                pipelined: bool = False,
+                donate: bool = True,
+                interpret: Optional[bool] = None,
+                hw: TpuChip = V5E,
+                max_par_time: int = 32,
+                cache: bool = True,
+                cache_path: Optional[str] = None) -> "CompiledStencil":
+        """Resolve plan, backend, and placement into a runnable executable.
+
+        grid_shape   spatial extent of one grid (must match the program's
+                     rank); ``batch`` adds a leading ``(B, *grid)`` axis of
+                     independent grids.
+        steps        the step count the executable is built for; ``run``
+                     may override it per call (same-remainder counts reuse
+                     the same compile).  Must be >= 1.
+        devices      None/1 = single device; an int N searches every
+                     factorization of N over the grid axes (mesh-aware
+                     tuner); a tuple pins shards-per-axis explicitly.
+        plan         "auto"  — the autotuner (model-guided, persistent plan
+                               cache; ``cache``/``cache_path`` control it),
+                     "model" — the zero-state model planner
+                               (``blocking.plan_blocking``), or
+                     a ``BlockPlan`` pinned by the caller.
+        backend      a registry backend name (default: the platform's
+                     pallas backend); ``pipelined=True`` resolves its
+                     ``-pipelined`` double-buffered sibling.
+        donate       donate the caller's (sharded) buffer to the run on the
+                     mesh path — supersteps then update it in place and the
+                     input is consumed.  On a single device the fused
+                     executor donates only its internal padded carry, so
+                     the caller's grid is never consumed either way.
+        interpret    force the Pallas interpreter on/off (None = follow the
+                     backend's traits / platform auto-detection).
+        """
+        prog = self.program
+        try:
+            # operator.index: accept ints/np ints, reject silently-truncating
+            # floats — a (128.5, 512) grid must fail HERE, not at run()
+            grid_shape = tuple(operator.index(s) for s in grid_shape)
+        except TypeError:
+            raise ValueError(
+                f"grid_shape must be a sequence of ints (got {grid_shape!r})")
+        if len(grid_shape) != prog.ndim or any(s < 1 for s in grid_shape):
+            raise ValueError(
+                f"grid_shape {grid_shape} does not describe a {prog.ndim}-D "
+                f"grid for this {prog.ndim}-D program (expected "
+                f"{prog.ndim} positive extents); a leading batch axis is "
+                f"declared via compile(batch=B), not in grid_shape")
+        steps = _check_steps(
+            steps,
+            "; compile() pins the step count the executable is built for, "
+            "and run(grid, steps=n) may override it per call")
+        if batch is not None:
+            b = _as_int(batch)
+            if b is None or b < 1:
+                raise ValueError(
+                    f"batch must be None (unbatched) or an int >= 1 — the "
+                    f"extent of the leading (B, *grid) axis of independent "
+                    f"grids (got {batch!r})")
+            batch = b
+
+        decomp_axes, n_devices = _normalize_devices(prog, devices)
+
+        name, version, traits = resolve_backend(backend, pipelined)
+        pipelined = traits.pipelined
+        if n_devices > 1 and not traits.local_kernel:
+            raise ValueError(
+                f"backend {name!r} cannot run sharded (it declares no "
+                f"local_kernel trait — its lowering pads its own "
+                f"boundaries and cannot consume an exchanged halo); "
+                f"compile(devices={devices!r}) needs a pallas backend")
+        if n_devices > len(jax.devices()):
+            raise ValueError(
+                f"compile(devices={devices!r}) needs {n_devices} visible "
+                f"devices but jax sees {len(jax.devices())}; on a CPU host "
+                f"set XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{n_devices} before importing jax")
+
+        tuned = None
+        if isinstance(plan, BlockPlan):
+            resolved = plan
+            if n_devices > 1 and decomp_axes is None:
+                decomp_axes = _pick_decomposition(
+                    prog, resolved, grid_shape, n_devices, hw, name, version)
+        elif plan == "auto":
+            from repro.tuning import autotune
+            tuned = autotune(
+                prog, hw, grid_shape=grid_shape, backend=name,
+                measure=False, cache=cache, cache_path=cache_path,
+                max_par_time=max_par_time,
+                n_devices=n_devices if (n_devices > 1
+                                        and decomp_axes is None) else None,
+                decomposition=decomp_axes if n_devices > 1 else None)
+            resolved = tuned.plan
+            if n_devices > 1:
+                decomp_axes = tuned.decomp or decomp_axes
+        elif plan == "model":
+            resolved = plan_blocking(prog, hw, grid_shape=grid_shape,
+                                     max_par_time=max_par_time).plan
+            if n_devices > 1 and decomp_axes is None:
+                decomp_axes = _pick_decomposition(
+                    prog, resolved, grid_shape, n_devices, hw, name, version)
+        else:
+            raise ValueError(
+                f'plan must be "auto", "model", or a BlockPlan '
+                f"(got {plan!r})")
+
+        if n_devices <= 1:
+            decomp_axes = None
+        if decomp_axes is not None and not fits_shard(
+                resolved, MeshDecomposition(decomp_axes), grid_shape):
+            raise ValueError(
+                f"devices={decomp_axes} cannot take block="
+                f"{resolved.block_shape} par_time={resolved.par_time} on "
+                f"grid {grid_shape}: every sharded axis must divide the "
+                f"grid, the local extent must tile by the block, and the "
+                f"halo must stay shallower than the shard; pass "
+                f"devices=<count> or plan='auto' to search blocking and "
+                f"split together")
+        cand = Candidate(
+            plan=resolved, backend=name, backend_version=version,
+            halo_aligned=halo_aligned(resolved.par_time, prog.halo_radius),
+            decomp=MeshDecomposition(decomp_axes) if decomp_axes else None)
+        cost = predict(prog, cand, hw, grid_shape=grid_shape)
+
+        if interpret is None and traits.fused_run:
+            # pin the backend's declared mode BEFORE any executor is built
+            # (the mesh executor would otherwise auto-resolve None): a
+            # compiled backend (pallas-tpu, interpret=False) must FAIL on
+            # a host that cannot compile it — exactly like its registry
+            # lowering — not silently fall back to the interpreter
+            interpret = traits.interpret
+
+        dist = None
+        lowered = None
+        if decomp_axes is not None:
+            names = tuple(f"d{i}" for i in range(prog.ndim))
+            mesh = compat.make_mesh(decomp_axes, names)
+            decomp = Decomposition(tuple(
+                (names[i],) if decomp_axes[i] > 1 else ()
+                for i in range(prog.ndim)))
+            dist = DistributedStencil(
+                prog, self.coeffs, resolved, mesh, decomp, grid_shape,
+                interpret=interpret, backend=name, _warn=False)
+        elif not traits.fused_run:
+            # a backend whose run is NOT the fused executor (the oracle, or
+            # a third-party lowering) executes through its own registry
+            # lowering — the fast path below would silently bypass it
+            lowered = lower(prog, resolved, coeffs=self.coeffs, backend=name)
+
+        return CompiledStencil(
+            program=prog, coeffs=self.coeffs, grid_shape=grid_shape,
+            steps=steps, batch=batch, plan=resolved, backend=name,
+            backend_version=version, decomp=decomp_axes, cost=cost,
+            tuned=tuned, pipelined=pipelined, donate=donate,
+            interpret=interpret, devices=n_devices, dist=dist,
+            lowered=lowered)
+
+
+def _normalize_devices(prog: StencilProgram, devices: Devices):
+    """-> (explicit shards-per-axis or None, total device count)."""
+    if devices is None:
+        return None, 1
+    n = _as_int(devices)
+    if n is not None:
+        if n < 1:
+            raise ValueError(f"devices must be >= 1 (got {devices})")
+        return None, n
+    try:
+        axes = tuple(operator.index(s) for s in devices)
+    except TypeError:
+        raise ValueError(
+            f"devices must be None, an int device count, or a "
+            f"{prog.ndim}-tuple of shards per grid axis (got {devices!r})")
+    if len(axes) != prog.ndim or any(s < 1 for s in axes):
+        raise ValueError(
+            f"devices {devices!r} must give one positive shard count per "
+            f"grid axis ({prog.ndim} of them)")
+    return axes, math.prod(axes)
+
+
+def _pick_decomposition(program, plan: BlockPlan, grid_shape, n_devices: int,
+                        hw: TpuChip, backend: str,
+                        version: int) -> Tuple[int, ...]:
+    """Best feasible split of ``n_devices`` for a caller-pinned plan.
+
+    The plan is fixed, so only the decomposition axis is searched: every
+    factorization that divides the grid and satisfies the per-shard eq. 2
+    constraints, ranked by the aggregate mesh model (exchange charged).
+    """
+    feasible = [dc for dc in
+                enumerate_decompositions(program.ndim, n_devices, grid_shape)
+                if fits_shard(plan, dc, grid_shape)]
+    if not feasible:
+        raise ValueError(
+            f"no feasible decomposition of {n_devices} devices over grid "
+            f"{grid_shape} for block={plan.block_shape} "
+            f"par_time={plan.par_time} (every split must divide the grid, "
+            f"tile the local extent by the block, and keep the halo "
+            f"shallower than the shard); pass devices=<shards per axis> "
+            f"or let plan='auto' search blocking and split together")
+    aligned = halo_aligned(plan.par_time, program.halo_radius)
+    cands = [Candidate(plan=plan, backend=backend, backend_version=version,
+                       halo_aligned=aligned, decomp=dc) for dc in feasible]
+    best = rank(program, cands, hw, grid_shape=grid_shape)[0]
+    return best.candidate.decomp.axis_shards
+
+
+class CompiledStencil:
+    """A resolved, runnable stencil executable.
+
+    ``plan``/``backend``/``decomp``/``cost`` expose what ``compile``
+    resolved; ``run`` dispatches to the matching internal executor.  One
+    ``CompiledStencil`` owns at most one sharded executor instance, so its
+    per-(remainder, batch-rank) executable table is reused across ``run``
+    calls; the single-device path shares the process-wide ``run_call`` jit
+    cache.
+    """
+
+    def __init__(self, *, program: StencilProgram, coeffs: ProgramCoeffs,
+                 grid_shape: Tuple[int, ...], steps: int,
+                 batch: Optional[int], plan: BlockPlan, backend: str,
+                 backend_version: int, decomp: Optional[Tuple[int, ...]],
+                 cost: RankedCandidate, tuned, pipelined: bool, donate: bool,
+                 interpret: Optional[bool], devices: int,
+                 dist: Optional[DistributedStencil], lowered):
+        self.program = program
+        self.coeffs = coeffs
+        self.grid_shape = grid_shape
+        self.steps = steps
+        self.batch = batch
+        self.plan = plan
+        self.backend = backend
+        self.backend_version = backend_version
+        self.decomp = decomp
+        self.cost = cost
+        self.tuned = tuned
+        self.pipelined = pipelined
+        self.donate = donate
+        self.interpret = interpret
+        self.devices = devices
+        self._dist = dist
+        self._lowered = lowered
+        # The xla-reference oracle has no internal jit entry of its own, so
+        # the executor supplies one — otherwise every .run() would
+        # re-execute the eager reference loop (static steps: its fori_loop
+        # bounds are python ints).  Third-party lowerings run as they are;
+        # whether/what to jit is their own contract.
+        if lowered is None:
+            self._lowered_jit = None
+        elif backend == "xla-reference":
+            self._lowered_jit = jax.jit(lambda g, s: lowered.run(g, s),
+                                        static_argnums=1)
+        else:
+            self._lowered_jit = lowered.run
+
+    @property
+    def from_plan_cache(self) -> bool:
+        """True when ``plan="auto"`` was served by the persistent cache."""
+        return bool(self.tuned is not None and self.tuned.from_cache)
+
+    def __repr__(self) -> str:
+        where = "1 device" if self.decomp is None else \
+            f"mesh {'x'.join(map(str, self.decomp))}"
+        b = "" if self.batch is None else f" batch={self.batch}"
+        return (f"CompiledStencil(grid={self.grid_shape}{b} "
+                f"steps={self.steps} block={self.plan.block_shape} "
+                f"par_time={self.plan.par_time} backend={self.backend} "
+                f"on {where})")
+
+    # -- execution -----------------------------------------------------------
+
+    def _check_grid(self, grid) -> None:
+        want = self.grid_shape if self.batch is None \
+            else (self.batch,) + self.grid_shape
+        if tuple(grid.shape) == want:
+            return
+        spatial = len(self.grid_shape)
+        if self.batch is None and grid.ndim == spatial + 1 \
+                and tuple(grid.shape[1:]) == self.grid_shape:
+            raise ValueError(
+                f"this executable was compiled unbatched for grid "
+                f"{self.grid_shape} but got a batched grid of shape "
+                f"{tuple(grid.shape)}; compile(batch={grid.shape[0]}) to "
+                f"run a leading axis of independent grids")
+        if self.batch is not None and tuple(grid.shape) == self.grid_shape:
+            raise ValueError(
+                f"this executable was compiled for batch={self.batch} "
+                f"grids of shape {self.grid_shape} but got a single "
+                f"unbatched grid {tuple(grid.shape)}; stack the grids "
+                f"(B, *grid) or compile(batch=None)")
+        raise ValueError(
+            f"grid shape {tuple(grid.shape)} does not match the compiled "
+            f"{'batch=' + str(self.batch) + ' ' if self.batch else ''}"
+            f"grid_shape {want}; compile() pins shapes so the executable "
+            f"cache stays exact — recompile for a different shape")
+
+    def run(self, grid, steps: Optional[int] = None):
+        """Advance ``steps`` time steps (default: the compiled count).
+
+        Any ``steps = k * par_time + rem`` with the remainder of an earlier
+        call reuses that call's executable; only a new remainder (or batch
+        rank) compiles again.
+        """
+        steps = self.steps if steps is None else _check_steps(steps)
+        grid = jnp.asarray(grid)
+        self._check_grid(grid)
+        if self._dist is not None:
+            nb = 0 if self.batch is None else 1
+            g = jax.device_put(grid, self._dist.sharding(nb=nb))
+            if not self.donate and g is grid:
+                # device_put was a no-op (already committed with the target
+                # sharding): donation would consume the caller's buffer, so
+                # pay a copy; a fresh device_put result needs none
+                g = jnp.copy(g)
+            return self._dist.run(g, steps)
+        if self._lowered is not None:
+            return self._lowered_jit(grid, steps)
+        return ops._stencil_run(grid, self.program, self.coeffs, self.plan,
+                                steps, interpret=self.interpret,
+                                pipelined=self.pipelined)

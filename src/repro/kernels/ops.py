@@ -16,11 +16,17 @@ prefetch kernel (the paper's deep pipeline, §III.A).
 
 Both accept the legacy (``StencilSpec``, ``StencilCoeffs``) pair or the
 unified-IR (``StencilProgram``, ``ProgramCoeffs``) pair.
+
+``stencil_run`` is a deprecation-warning shim since the unified executor
+API landed — ``repro.stencil(program).compile(...).run(grid)`` is the front
+door; internal callers (the pallas backends, the executor) use
+``_stencil_run`` directly, so the shim costs users nothing but the warning.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax.numpy as jnp
@@ -46,6 +52,27 @@ def stencil_run(grid, spec, coeffs, plan: BlockPlan, steps: int, *,
                 interpret: Optional[bool] = None,
                 pipelined: bool = False,
                 fused: bool = True):
+    """Deprecated front end of :func:`_stencil_run`.
+
+    Use ``repro.stencil(program, coeffs=...).compile(grid_shape,
+    steps=...).run(grid)`` — the unified executor resolves plan/backend/
+    placement once and dispatches to the identical fused executor, so the
+    shim is bit-compatible.
+    """
+    warnings.warn(
+        "kernels.ops.stencil_run is deprecated; use "
+        "repro.stencil(program, coeffs=...).compile(grid_shape, "
+        "steps=...).run(grid) (DESIGN.md §9)",
+        DeprecationWarning, stacklevel=2)
+    return _stencil_run(grid, spec, coeffs, plan, steps,
+                        interpret=interpret, pipelined=pipelined,
+                        fused=fused)
+
+
+def _stencil_run(grid, spec, coeffs, plan: BlockPlan, steps: int, *,
+                 interpret: Optional[bool] = None,
+                 pipelined: bool = False,
+                 fused: bool = True):
     """Advance ``steps`` time steps using temporal blocking.
 
     steps = k * par_time + rem: k full supersteps, then one superstep with

@@ -305,7 +305,7 @@ def run_stencil_cell(wl, multi_pod: bool, out_dir: Optional[str],
         parts = ((("pod", "data") if multi_pod else ("data",)), ("model",),
                  ())
     ds = DistributedStencil(spec, coeffs, plan, mesh, Decomposition(parts),
-                            wl.grid_shape, interpret=True)
+                            wl.grid_shape, interpret=True, _warn=False)
     grid_sds = jax.ShapeDtypeStruct(wl.grid_shape, jnp.dtype(spec.dtype))
     c_sds = common.as_sds(ds.pcoeffs.center)
     n_sds = common.as_sds(ds.pcoeffs.taps)

@@ -1,30 +1,31 @@
-"""Stencil serving front: same-shape micro-batching over the fused executor.
+"""Stencil serving front: same-shape micro-batching over the unified executor.
 
 The many-independent-grids workload (parameter sweeps, ensembles, per-user
 simulations) issues lots of small runs that individually under-utilize the
 chip and pay a full dispatch each.  This front queues requests and, on
 ``flush()``, groups them by (program, grid shape, dtype, steps) and executes
-each group as ONE batched fused run — ``(B, *grid)`` through
-``ops.stencil_run``, i.e. a single donated executable whose pallas grid
-carries a leading batch dimension — so B compatible requests cost one
-dispatch instead of B chains of them.
+each group through the one front door — ``repro.stencil(program)
+.compile(shape, steps=..., batch=B[, devices=N])`` — as batched fused runs:
+one donated executable whose pallas grid carries a leading batch dimension,
+so B compatible requests cost one dispatch instead of B chains of them.
 
 Requests in a group share the program's canonical coefficients (batching is
 only sound when every lane computes the same stencil); incompatible requests
 simply land in different groups and still execute, just unbatched.
 
-Blocking plans come from the model planner by default, or from the
-autotuner's persistent cache with ``use_autotune=True`` (model-guided mode —
-deterministic, zero search cost after the first call per shape).
+Blocking plans come from ``compile(plan="model")`` by default (the
+zero-state model planner) or ``plan="auto"`` with ``use_autotune=True``
+(the autotuner's persistent cache — deterministic, zero search cost after
+the first call per shape).
 
-``mesh_devices=N`` places batched groups onto an N-device mesh: the
-mesh-aware autotuner (model-only) picks the (plan, decomposition) pair per
-(program, shape), and the group executes as a *sharded* batched fused run —
-one donated multi-device executable through
-``core.distributed.DistributedStencil`` (batch replicated, grid decomposed,
-one deep-halo exchange per superstep).  Groups the mesh cannot take
-(non-divisible shapes, empty sharded space) fall back to the single-device
-executor, with the reason recorded in ``mesh_fallbacks``.
+``mesh_devices=N`` compiles batched groups onto an N-device mesh
+(``compile(devices=N)``): the mesh-aware autotuner picks the
+(plan, decomposition) pair per (program, shape), and the group executes as
+a *sharded* batched fused run — one donated multi-device executable (batch
+replicated, grid decomposed, one deep-halo exchange per superstep).  Groups
+the mesh cannot take (non-divisible shapes, empty sharded space) fall back
+to the single-device executor, with the reason recorded in
+``mesh_fallbacks``.
 
 CPU-scale usage:
     PYTHONPATH=src python -m repro.launch.stencil_serve \\
@@ -43,11 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.hw import TpuChip, V5E
-from repro.core import compat
-from repro.core.blocking import BlockPlan, plan_blocking
-from repro.core.distributed import Decomposition, DistributedStencil
 from repro.core.program import StencilProgram, as_program
-from repro.kernels import ops
+from repro.executor import CompiledStencil, stencil
 from repro.tuning.cache import program_fingerprint
 
 
@@ -102,17 +100,25 @@ class StencilServer:
         self.cache_path = cache_path
         self.hw = hw
         self.max_par_time = max_par_time
-        self.mesh_devices = mesh_devices
+        # a 1-device "mesh" is the single-device executor; normalizing here
+        # keeps stats.sharded_batches meaning actually-sharded batches
+        self.mesh_devices = None if mesh_devices == 1 else mesh_devices
         self.stats = ServeStats()
         self.failed: Dict[int, str] = {}
         #: (program fp, shape) -> why the mesh path declined the group
         self.mesh_fallbacks: Dict[Tuple[str, Tuple[int, ...]], str] = {}
         self._pending: List[StencilRequest] = []
         self._next_rid = 0
-        self._plans: Dict[Tuple[str, Tuple[int, ...]], BlockPlan] = {}
         self._programs: Dict[str, StencilProgram] = {}
-        self._dist: Dict[Tuple[str, Tuple[int, ...]],
-                         Optional[DistributedStencil]] = {}
+        #: (fp, shape, batch, on_mesh) -> compiled executable; steps stays
+        #: out of the key — run(grid, steps) overrides per call, and
+        #: same-remainder step counts share one executable (the mesh
+        #: executor's per-(remainder, batch-rank) table lives on the
+        #: CompiledStencil's DistributedStencil instance)
+        self._compiled: Dict[tuple, CompiledStencil] = {}
+        #: (fp, shape, on_mesh) -> (plan, decomp): the plan search runs
+        #: once per shape; per-batch compiles pin its result
+        self._resolved: Dict[tuple, tuple] = {}
 
     # -- request intake ------------------------------------------------------
 
@@ -133,65 +139,48 @@ class StencilServer:
     def pending(self) -> int:
         return len(self._pending)
 
-    # -- planning ------------------------------------------------------------
+    # -- compilation ---------------------------------------------------------
 
-    def _plan_for(self, program: StencilProgram,
-                  shape: Tuple[int, ...]) -> BlockPlan:
-        key = (program_fingerprint(program), shape)
-        plan = self._plans.get(key)
-        if plan is None:
-            if self.use_autotune:
-                from repro.tuning import autotune
-                plan = autotune(program, self.hw, grid_shape=shape,
-                                measure=False, cache_path=self.cache_path,
-                                max_par_time=self.max_par_time).plan
-            else:
-                plan = plan_blocking(program, self.hw, grid_shape=shape,
-                                     max_par_time=self.max_par_time).plan
-            self._plans[key] = plan
-        return plan
+    def _compiled_for(self, program: StencilProgram, shape: Tuple[int, ...],
+                      steps: int, batch: Optional[int],
+                      on_mesh: bool) -> CompiledStencil:
+        """Front-door executable for one chunk shape, memoized per server.
 
-    def _dist_for(self, program: StencilProgram,
-                  shape: Tuple[int, ...]) -> Optional[DistributedStencil]:
-        """The sharded executor for this (program, shape) group, or None
-        when the mesh cannot take it (reason in ``mesh_fallbacks``).
-
-        The mesh-aware autotuner (model-only) picks the
-        (plan, decomposition); the mesh itself is built one axis per grid
-        dimension with the tuned shard counts.  The persistent plan cache
-        is only touched when the caller opted into it (``use_autotune`` or
-        an explicit ``cache_path``) — with the defaults the tuner runs
-        pure model ranking, matching the single-device path's
-        no-persistent-state behavior.
+        ``steps`` only seeds the first compile of a key — every flush
+        passes its own count to ``run`` — so the executable (and the mesh
+        executor's per-remainder table behind it) is shared across step
+        counts.  The plan policy mirrors the historical server: the
+        autotuner's persistent cache when the caller opted in
+        (``use_autotune`` / explicit ``cache_path``), the pure model
+        planner otherwise — and on the mesh always the mesh-aware tuner
+        (model-only), touching the persistent cache only under the same
+        opt-in.
         """
-        key = (program_fingerprint(program), shape)
-        if key in self._dist:
-            return self._dist[key]
-        ds: Optional[DistributedStencil] = None
-        try:
-            from repro.tuning import autotune
-            tuned = autotune(program, self.hw, grid_shape=shape,
-                             measure=False,
-                             cache=self.use_autotune
-                             or self.cache_path is not None,
-                             cache_path=self.cache_path,
-                             max_par_time=self.max_par_time,
-                             n_devices=self.mesh_devices)
-            shards = tuned.decomp or (1,) * len(shape)
-            names = tuple(f"d{i}" for i in range(len(shape)))
-            mesh = compat.make_mesh(shards, names)
-            decomp = Decomposition(tuple(
-                (names[i],) if shards[i] > 1 else ()
-                for i in range(len(shape))))
-            ds = DistributedStencil(program, program.default_coeffs(),
-                                    tuned.plan, mesh, decomp, shape,
-                                    interpret=self.interpret,
-                                    pipelined=self.pipelined)
-        except Exception as e:
-            self.mesh_fallbacks[key] = f"{type(e).__name__}: {e}"
-            ds = None
-        self._dist[key] = ds
-        return ds
+        fp = program_fingerprint(program)
+        key = (fp, shape, batch, on_mesh)
+        cs = self._compiled.get(key)
+        if cs is None:
+            opted_in = self.use_autotune or self.cache_path is not None
+            resolved = self._resolved.get((fp, shape, on_mesh))
+            if resolved is None:
+                plan = "auto" if (on_mesh or self.use_autotune) else "model"
+                devices = self.mesh_devices if on_mesh else None
+            else:       # later step counts / chunk sizes pin the search's
+                plan, devices = resolved        # (plan, decomposition)
+            cs = stencil(program).compile(
+                shape, steps=steps, batch=batch, devices=devices,
+                plan=plan, pipelined=self.pipelined,
+                interpret=self.interpret, hw=self.hw,
+                max_par_time=self.max_par_time,
+                cache=opted_in, cache_path=self.cache_path)
+            self._resolved[(fp, shape, on_mesh)] = (cs.plan, cs.decomp)
+            self._compiled[key] = cs
+        return cs
+
+    def _mesh_ok(self, program: StencilProgram,
+                 shape: Tuple[int, ...]) -> bool:
+        return self.mesh_devices is not None and \
+            (program_fingerprint(program), shape) not in self.mesh_fallbacks
 
     # -- execution -----------------------------------------------------------
 
@@ -208,7 +197,9 @@ class StencilServer:
         through the same executor, just without the batch axis.  Group
         failures are isolated: a group whose plan or execution raises loses
         only its own requests — their rids land in ``self.failed`` with the
-        error — and every other group's results are still returned.
+        error — and every other group's results are still returned.  A
+        group the mesh refuses falls back to the single-device executor
+        (reason in ``mesh_fallbacks``) before counting as failed.
         """
         pending, self._pending = self._pending, []
         groups: Dict[tuple, List[StencilRequest]] = {}
@@ -221,36 +212,51 @@ class StencilServer:
         for (fp, shape, _dtype, steps), reqs in groups.items():
             program = self._programs[fp]
             done = 0     # requests of this group whose chunk already ran
-            try:
-                ds = self._dist_for(program, shape) \
-                    if self.mesh_devices else None
-                coeffs = program.default_coeffs()
-                plan = None if ds is not None \
-                    else self._plan_for(program, shape)
+            if steps == 0:      # identity: results are the inputs, no run
                 for lo in range(0, len(reqs), self.max_batch):
                     chunk = reqs[lo:lo + self.max_batch]
-                    if ds is not None:
+                    outs.append((chunk, jnp.stack([r.grid for r in chunk])))
+                    if len(chunk) > 1:
+                        self.stats.batched_requests += len(chunk)
+                    self.stats.batches += 1
+                continue
+            try:
+                on_mesh = self._mesh_ok(program, shape)
+                if on_mesh:
+                    try:
+                        # resolve plan + decomposition once per group; a
+                        # refusal (non-divisible shape, empty sharded
+                        # space) demotes the group, not the flush
+                        self._compiled_for(program, shape, steps,
+                                           len(reqs[:self.max_batch]),
+                                           on_mesh=True)
+                    except Exception as e:
+                        self.mesh_fallbacks[(fp, shape)] = \
+                            f"{type(e).__name__}: {e}"
+                        on_mesh = False
+                for lo in range(0, len(reqs), self.max_batch):
+                    chunk = reqs[lo:lo + self.max_batch]
+                    if on_mesh:
                         # mesh path: batched sharded fused run — one
                         # donated multi-device executable per chunk
-                        batch = jnp.stack([r.grid for r in chunk])
-                        out = ds.run(
-                            jax.device_put(batch, ds.sharding(nb=1)), steps)
+                        cs = self._compiled_for(program, shape, steps,
+                                                len(chunk), on_mesh=True)
+                        out = cs.run(jnp.stack([r.grid for r in chunk]),
+                                     steps)
                         outs.append((chunk, out))
                         self.stats.sharded_batches += 1
                         if len(chunk) > 1:
                             self.stats.batched_requests += len(chunk)
                     elif len(chunk) == 1:
-                        out = ops.stencil_run(
-                            chunk[0].grid, program, coeffs, plan, steps,
-                            interpret=self.interpret,
-                            pipelined=self.pipelined)
+                        cs = self._compiled_for(program, shape, steps,
+                                                None, on_mesh=False)
+                        out = cs.run(chunk[0].grid, steps)
                         outs.append((chunk, out[jnp.newaxis]))
                     else:
-                        batch = jnp.stack([r.grid for r in chunk])
-                        out = ops.stencil_run(
-                            batch, program, coeffs, plan, steps,
-                            interpret=self.interpret,
-                            pipelined=self.pipelined)
+                        cs = self._compiled_for(program, shape, steps,
+                                                len(chunk), on_mesh=False)
+                        out = cs.run(jnp.stack([r.grid for r in chunk]),
+                                     steps)
                         outs.append((chunk, out))
                         self.stats.batched_requests += len(chunk)
                     done += len(chunk)

@@ -46,6 +46,9 @@ SHARDS = {
     "distributed": [
         "tests/test_distributed.py",
         "tests/test_sharded_fused.py",
+        # the executor suite carries the host-mesh sharded-parity
+        # subprocess, so it rides the mesh-sim shard like its peers
+        "tests/test_executor.py",
     ],
 }
 

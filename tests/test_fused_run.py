@@ -297,7 +297,7 @@ def test_stencil_server_batches_and_matches_unbatched():
 def test_stencil_server_isolates_group_failures(monkeypatch):
     """One group failing to plan/compile loses only its own requests (rids
     land in server.failed); every other group's results still come back."""
-    from repro.launch import stencil_serve
+    from repro import executor
     from repro.launch.stencil_serve import StencilServer
 
     prog = StencilProgram(ndim=2, radius=1)
@@ -307,14 +307,14 @@ def test_stencil_server_isolates_group_failures(monkeypatch):
             for _ in range(2)]
     bad = [server.submit(prog, rng.uniform(-1, 1, (24, 130)), steps=2)]
 
-    orig = stencil_serve.ops.stencil_run
+    orig = executor.CompiledStencil.run
 
-    def exploding(grid, *a, **k):
-        if grid.shape[-2:] == (24, 130):
+    def exploding(self, grid, steps=None):
+        if tuple(grid.shape[-2:]) == (24, 130):
             raise RuntimeError("deliberate group failure")
-        return orig(grid, *a, **k)
+        return orig(self, grid, steps)
 
-    monkeypatch.setattr(stencil_serve.ops, "stencil_run", exploding)
+    monkeypatch.setattr(executor.CompiledStencil, "run", exploding)
     results = server.flush()
     assert set(results) == set(good)
     assert set(server.failed) == set(bad)

@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Deprecation audit: no legacy stencil entry points outside the shims.
+
+The unified executor (``repro.stencil(...).compile(...)``) is the one front
+door; the legacy entry points — ``StencilEngine``, ``kernels.ops
+.stencil_run``, ``DistributedStencil`` — survive only as deprecation-warning
+shims inside ``src/repro`` and in the tests that pin those shims.  This
+audit greps the user-facing trees (examples/, benchmarks/, the workload
+configs, and the serving launcher) and fails if any legacy call survives
+there, so a new example or bench cannot quietly resurrect a dead surface.
+
+    python tools/deprecation_audit.py            # exit 1 on violations
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from typing import List
+
+#: call-site patterns of the deprecated entry points, plus the direct-import
+#: spellings that would dodge the attribute-call patterns (`from
+#: repro.kernels.ops import stencil_run`, `from repro.core.temporal import
+#: StencilEngine as Engine`, ...)
+LEGACY = (
+    "StencilEngine(",
+    "ops.stencil_run(",
+    "DistributedStencil(",
+    "import stencil_run",
+    "from repro.core.temporal import",
+    "from repro.core.distributed import",
+)
+
+#: trees that must be migrated to the front door (paths relative to repo
+#: root; src/repro internals and shim-pinning tests are deliberately out of
+#: scope — the shims live there)
+SCAN = (
+    "examples",
+    "benchmarks",
+    os.path.join("src", "repro", "configs"),
+    os.path.join("src", "repro", "launch", "stencil_serve.py"),
+)
+
+
+def audit(root: str) -> List[str]:
+    """-> ["path:line: offending source", ...] for every violation."""
+    bad: List[str] = []
+    for entry in SCAN:
+        top = os.path.join(root, entry)
+        if not os.path.exists(top):
+            # a renamed/missing tree must fail loudly, not pass vacuously
+            bad.append(f"{entry}: scanned tree does not exist — update "
+                       f"SCAN in tools/deprecation_audit.py")
+            continue
+        files = [top] if os.path.isfile(top) else [
+            os.path.join(dirpath, fn)
+            for dirpath, _, fns in os.walk(top)
+            for fn in fns if fn.endswith(".py")]
+        for path in sorted(files):
+            with open(path, encoding="utf-8") as fh:
+                for lineno, line in enumerate(fh, 1):
+                    if any(pat in line for pat in LEGACY):
+                        bad.append(f"{os.path.relpath(path, root)}:"
+                                   f"{lineno}: {line.strip()}")
+    return bad
+
+
+def main() -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    bad = audit(root)
+    if bad:
+        print("deprecation audit FAILED — legacy stencil entry points "
+              "survive outside the shims; migrate these call sites to "
+              "repro.stencil(...).compile(...):", file=sys.stderr)
+        for line in bad:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(f"deprecation audit OK: no {'/'.join(LEGACY)} call sites in "
+          f"{', '.join(SCAN)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
