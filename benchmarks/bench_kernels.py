@@ -47,6 +47,26 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps
 
 
+def _bytes_accessed(fn, *args):
+    """XLA ``cost_analysis()`` "bytes accessed" of the jitted ``fn`` on
+    ``args`` — the compiler's static count of HBM bytes the executable
+    touches (the quantity the padded-carry executor halved).  Returns None
+    when the backend/compiler does not expose the counter."""
+    try:
+        cost = jax.jit(fn).lower(*args).compile().cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        ba = cost.get("bytes accessed")
+        return int(ba) if ba is not None else None
+    except Exception:
+        return None
+
+
+def _with_bytes(derived: str, fn, *args) -> str:
+    ba = _bytes_accessed(fn, *args)
+    return derived if ba is None else f"{derived};bytes_accessed={ba}"
+
+
 def _tuned_plan(prog, grid_shape) -> BlockPlan:
     """Cached model-guided plan for this bench grid (zero search cost after
     the first call thanks to the plan cache)."""
@@ -79,14 +99,18 @@ def _executor_rows(prog, shape, plan, rows):
     t_fused = _time(cs.run, g, reps=2)
     mcells = cells * steps / t_fused / 1e6
     rows.append((f"run_fused_{prog.ndim}d_r{prog.radius}", t_fused * 1e6,
-                 f"mcells_per_s={mcells:.1f};"
-                 f"fused_speedup_vs_eager={t_eager / t_fused:.2f}x"))
+                 _with_bytes(
+                     f"mcells_per_s={mcells:.1f};"
+                     f"fused_speedup_vs_eager={t_eager / t_fused:.2f}x",
+                     cs.run, g)))
 
     cs_pipe = sten.compile(shape, steps=steps, plan=plan, pipelined=True)
     t_pipe = _time(cs_pipe.run, g, reps=2)
     rows.append((f"run_pipelined_{prog.ndim}d_r{prog.radius}", t_pipe * 1e6,
-                 f"mcells_per_s={cells * steps / t_pipe / 1e6:.1f};"
-                 f"pipelined_speedup_vs_plain={t_fused / t_pipe:.2f}x"))
+                 _with_bytes(
+                     f"mcells_per_s={cells * steps / t_pipe / 1e6:.1f};"
+                     f"pipelined_speedup_vs_plain={t_fused / t_pipe:.2f}x",
+                     cs_pipe.run, g)))
 
     B = 2
     gb = jnp.stack([ref.random_grid(prog, shape, seed=s) for s in range(B)])
@@ -95,8 +119,10 @@ def _executor_rows(prog, shape, plan, rows):
     t_batch = _time(cs_b.run, gb, reps=2)
     rows.append((f"run_batched_b{B}_{prog.ndim}d_r{prog.radius}",
                  t_batch * 1e6,
-                 f"mcells_per_s={B * cells * steps / t_batch / 1e6:.1f};"
-                 f"batched_speedup_vs_loop={t_loop / t_batch:.2f}x"))
+                 _with_bytes(
+                     f"mcells_per_s={B * cells * steps / t_batch / 1e6:.1f};"
+                     f"batched_speedup_vs_loop={t_loop / t_batch:.2f}x",
+                     cs_b.run, gb)))
 
 
 def run(use_tuned=None, smoke=None):
@@ -153,8 +179,10 @@ def run(use_tuned=None, smoke=None):
             tag += f"_{prog.shape}_{prog.boundary}"
         rows.append((
             tag, t2 * 1e6,
-            f"mcells_per_s={mcells:.1f};"
-            f"tb_speedup_vs_pt1={t1 / t2:.2f}x"))
+            _with_bytes(
+                f"mcells_per_s={mcells:.1f};"
+                f"tb_speedup_vs_pt1={t1 / t2:.2f}x",
+                cs2.run, g)))
 
     # executor comparisons ride the direct pallas path, so the
     # REPRO_BENCH_BACKEND pin does not apply to them; in smoke mode they

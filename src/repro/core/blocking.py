@@ -69,6 +69,21 @@ class BlockPlan:
         padded = math.prod(self.padded_shape)
         return 2 * padded * itemsize
 
+    def vmem_bytes_for(self, pipelined: bool) -> int:
+        """Variant-aware VMEM footprint of the superstep kernel's scratch.
+
+        The ``-pipelined`` double-buffered kernel revolves two halo'd window
+        buffers (prefetch g+1 while g computes); the plain kernel holds just
+        one.  Both stage the output tile through a block-shaped buffer.
+        ``vmem_bytes`` (always 2 windows) is the historical conservative
+        bound; pruning plain-kernel plans with it forfeits bigger blocks /
+        deeper ``par_time`` for no reason.
+        """
+        itemsize = 4 if self.spec.dtype == "float32" else 2
+        windows = 2 if pipelined else 1
+        return itemsize * (windows * math.prod(self.padded_shape)
+                           + math.prod(self.block_shape))
+
     # ---- redundancy accounting (paper's overlapped blocking cost) ----------
 
     @property
@@ -84,6 +99,26 @@ class BlockPlan:
         read = math.prod(self.padded_shape) * itemsize
         write = math.prod(self.block_shape) * itemsize
         return read + write
+
+    def run_bytes_per_superstep(self, grid_shape: Tuple[int, ...]) -> int:
+        """HBM bytes one fused-run superstep moves for ``grid_shape``.
+
+        The padded-carry executor's stream is the kernel's own traffic —
+        every block's overlapping halo'd read plus its tile write
+        (``hbm_bytes_per_block``) — plus one pass over each of the two
+        ping-pong padded buffers (the carry is read from one and written
+        through the other per superstep).  No O(volume) re-pad term: that
+        is precisely what the padded layout eliminated.
+        """
+        itemsize = 4 if self.spec.dtype == "float32" else 2
+        nblocks = math.prod(
+            round_up(g, b) // b
+            for g, b in zip(grid_shape, self.block_shape))
+        padded_carry = math.prod(
+            round_up(g, b) + 2 * self.halo
+            for g, b in zip(grid_shape, self.block_shape))
+        return nblocks * self.hbm_bytes_per_block() \
+            + 2 * padded_carry * itemsize
 
     def flops_per_block(self) -> int:
         """Sum over the shrinking valid regions of each fused time step."""
@@ -154,6 +189,7 @@ def candidate_plans(
     hw: TpuChip = V5E,
     max_par_time: int = 64,
     block_candidates: Optional[Sequence[Tuple[int, ...]]] = None,
+    pipelined: bool = False,
 ) -> list:
     """Enumerate alignment-respecting plans that fit the VMEM budget.
 
@@ -161,6 +197,11 @@ def candidate_plans(
     (our analogue of paper eq. 6).  par_time preferred such that
     (par_time * radius) % SUBLANE == 0 — exactly their alignment trick with
     4 -> 8 for the TPU sublane.
+
+    ``pipelined`` selects the kernel variant being planned for: the
+    double-buffered kernel's two revolving windows halve the feasible block
+    volume, so plain-kernel plans are pruned against the one-window bound
+    (``BlockPlan.vmem_bytes_for``).
     """
     if block_candidates is None:
         if spec.ndim == 2:
@@ -176,7 +217,7 @@ def candidate_plans(
     for bs in block_candidates:
         for pt in range(1, max_par_time + 1):
             plan = BlockPlan(spec=spec, block_shape=tuple(bs), par_time=pt)
-            if plan.vmem_bytes > hw.vmem_budget_bytes:
+            if plan.vmem_bytes_for(pipelined) > hw.vmem_budget_bytes:
                 continue
             if plan.useful_fraction <= MIN_USEFUL_FRACTION:
                 continue  # overlapped-blocking tax beyond any win
@@ -189,6 +230,7 @@ def plan_blocking(
     hw: TpuChip = V5E,
     grid_shape: Optional[Tuple[int, ...]] = None,
     max_par_time: int = 64,
+    pipelined: bool = False,
 ) -> PlanEstimate:
     """Pick the best plan by the model — the paper's §V.A tuning loop.
 
@@ -204,7 +246,8 @@ def plan_blocking(
     live in this module so the two cannot drift.
     """
     best = None
-    for plan in candidate_plans(spec, hw, max_par_time=max_par_time):
+    for plan in candidate_plans(spec, hw, max_par_time=max_par_time,
+                                pipelined=pipelined):
         est = estimate(plan, hw)
         # blocks larger than the grid still work (the kernel pads), but
         # padded cells are wasted compute — penalize them.

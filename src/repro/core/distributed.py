@@ -124,6 +124,40 @@ def exchange_halo(block: jnp.ndarray, axis: int, mesh_axes: AxisNames,
     return jnp.concatenate([halo_lo, block, halo_hi], axis=axis)
 
 
+def _exchange_into_ring(padded: jnp.ndarray, axis: int, mesh_axes: AxisNames,
+                        h: int, H: int, nloc: int, periodic: bool,
+                        n: int) -> jnp.ndarray:
+    """Refresh the halo ring of a *padded* sharded carry over ICI.
+
+    The sharded fused executor keeps each shard's carry in padded layout
+    (interior ``[H, H + nloc)`` per sharded axis, ring ``H`` deep), so the
+    per-superstep exchange sends only the ``h``-deep interior boundary
+    strips (``h`` = the step plan's halo, shallower for the remainder
+    superstep) and writes them in place at ring offset ``H - h`` — O(surface)
+    over ICI, no concat reallocating the block.  Strips span the full padded
+    extent of the other axes, so a later axis' exchange forwards the fresh
+    ring data of earlier axes (corner semantics of the old sequential
+    concat).  Non-periodic edge shards receive zeros from the open ppermute
+    ring; those positions are out-of-grid and healed by the kernel's t=0
+    ``boundary_fixup``.
+    """
+    lo = lax.slice_in_dim(padded, H, H + h, axis=axis)
+    hi = lax.slice_in_dim(padded, H + nloc - h, H + nloc, axis=axis)
+    if periodic:
+        fwd = [(i, (i + 1) % n) for i in range(n)]
+        bwd = [((i + 1) % n, i) for i in range(n)]
+    else:
+        fwd = [(i, i + 1) for i in range(n - 1)]
+        bwd = [(i + 1, i) for i in range(n - 1)]
+    from_left = lax.ppermute(hi, mesh_axes, fwd)   # my low ring
+    from_right = lax.ppermute(lo, mesh_axes, bwd)  # my high ring
+    padded = lax.dynamic_update_slice_in_dim(padded, from_left, H - h,
+                                             axis=axis)
+    padded = lax.dynamic_update_slice_in_dim(padded, from_right, H + nloc,
+                                             axis=axis)
+    return padded
+
+
 @dataclasses.dataclass(frozen=True)
 class Decomposition:
     """How grid axes map onto mesh axes.
@@ -304,9 +338,13 @@ class DistributedStencil:
         (a ``fori_loop`` trip count), so every ``steps = k * par_time + rem``
         with the same remainder reuses one executable; only a distinct
         ``rem`` (a shallower remainder exchange + kernel halo) or batch rank
-        compiles again.  The sharded carry is **donated**: supersteps update
-        the grid in place instead of allocating a fresh sharded buffer per
-        superstep.  Executables are cached on the instance, so repeated
+        compiles again.  The sharded carry is **donated** and lives in
+        *padded layout* for the whole run: one pad on entry, one interior
+        slice on exit, and per superstep only the ``par_time``-deep halo
+        strips cross ICI (written in place into the ring) while the kernel
+        ping-pongs between two padded local buffers — no per-superstep
+        re-pad or concat re-allocation.  Executables are cached on the
+        instance, so repeated
         ``run`` calls are O(1) dispatches with zero retracing — the fix for
         the historical ``run_fn(supersteps)`` that rebuilt (and re-jitted) a
         Python-int-bound loop per call.
@@ -315,19 +353,72 @@ class DistributedStencil:
         fn = self._exes.get(key)
         if fn is not None:
             return fn
-        step = self._mapped_superstep(self.plan, nb)
-        step_rem = None
-        if rem:
-            step_rem = self._mapped_superstep(
-                dataclasses.replace(self.plan, par_time=rem), nb)
+        program, decomp, plan = self.program, self.decomp, self.plan
+        ndim = program.ndim
+        gspec = self._gspec(nb)
+        shards = tuple(decomp.shards(self.mesh, d) for d in range(ndim))
+        local = tuple(self.global_shape[d] // shards[d]
+                      for d in range(ndim))
+        H = plan.halo
+        periodic = program.boundary == "periodic"
+        # In-kernel wrap refresh covers device-local periodic axes only;
+        # sharded periodic axes wrap through the cyclic ppermute ring.
+        # __post_init__ guarantees local % block == 0 and halo <= local, so
+        # the layout is never wrap-degenerate here.
+        wrap_axes = tuple(
+            d for d in range(ndim)
+            if periodic and not (decomp.partition[d] and shards[d] > 1))
+        layout = common.PaddedLayout(halo=H, local_shape=local,
+                                     rounded=local, wrap_axes=wrap_axes)
+        interpret, pipelined = self.interpret, self.pipelined
+        global_shape = tuple(self.global_shape)
+        rem_plan = dataclasses.replace(plan, par_time=rem) if rem else None
+
+        def local_body(grid, center, taps, full):
+            offsets = []
+            for d in range(ndim):
+                axes = decomp.partition[d]
+                offsets.append(
+                    lax.axis_index(axes) * local[d] if axes else 0)
+            offs = jnp.stack([jnp.asarray(o, jnp.int32) for o in offsets])
+            # Pad ONCE into ring layout; every superstep refreshes only the
+            # h-deep strips over ICI and ping-pongs the padded pair.
+            src = jnp.pad(grid, [(0, 0)] * nb + [(H, H)] * ndim)
+            dst = jnp.zeros_like(src)
+
+            def superstep(carry, step_plan):
+                s, d2 = carry
+                h = step_plan.halo
+                for dd in range(ndim):
+                    axes = decomp.partition[dd]
+                    if axes and shards[dd] > 1:
+                        s = _exchange_into_ring(s, nb + dd, axes, h, H,
+                                                local[dd], periodic,
+                                                shards[dd])
+                s2, o = common._padded_superstep_pallas(
+                    s, d2, center, taps, program=program, plan=step_plan,
+                    layout=layout, global_shape=global_shape,
+                    interpret=interpret, offsets=offs, pipelined=pipelined)
+                return (o, s2)
+
+            carry = lax.fori_loop(0, full,
+                                  lambda _, c: superstep(c, plan),
+                                  (src, dst))
+            if rem_plan is not None:
+                carry = superstep(carry, rem_plan)
+            interior = (slice(None),) * nb + tuple(
+                slice(H, H + local[d]) for d in range(ndim))
+            return carry[0][interior]
+
+        mapped = compat.shard_map(
+            local_body, mesh=self.mesh,
+            in_specs=(gspec, P(), P(), P()),
+            out_specs=gspec,
+        )
 
         def run(grid, center, taps, full):
             common._note_trace("dist_run_call")
-            g = lax.fori_loop(0, full,
-                              lambda _, g: step(g, center, taps), grid)
-            if step_rem is not None:
-                g = step_rem(g, center, taps)
-            return g
+            return mapped(grid, center, taps, full)
 
         fn = jax.jit(run, donate_argnums=(0,))
         self._exes[key] = fn

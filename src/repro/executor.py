@@ -222,7 +222,8 @@ class Stencil:
                 decomp_axes = tuned.decomp or decomp_axes
         elif plan == "model":
             resolved = plan_blocking(prog, hw, grid_shape=grid_shape,
-                                     max_par_time=max_par_time).plan
+                                     max_par_time=max_par_time,
+                                     pipelined=pipelined).plan
             if n_devices > 1 and decomp_axes is None:
                 decomp_axes = _pick_decomposition(
                     prog, resolved, grid_shape, n_devices, hw, name, version)

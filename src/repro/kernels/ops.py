@@ -106,16 +106,10 @@ def _stencil_run(grid, spec, coeffs, plan: BlockPlan, steps: int, *,
     if interpret is None:
         interpret = common.default_interpret()
     true_shape = grid.shape[nb:]
-    rounded = tuple(common.round_up(s, b)
-                    for s, b in zip(true_shape, plan.block_shape))
-    # Round up to a block multiple once; the executor re-synthesizes the
-    # boundary halo (and the round-up region) from the true grid every
-    # superstep, so the fill value never reaches the result.
-    pad = [(0, 0)] * nb + [(0, rounded[d] - true_shape[d])
-                           for d in range(program.ndim)]
-    carry = jnp.pad(grid, pad)
-    out = common.run_call(carry, pc.center, pc.taps, full,
-                          program=program, plan=plan, true_shape=true_shape,
-                          interpret=interpret, rem=rem, pipelined=pipelined)
-    return out[(slice(None),) * nb
-               + tuple(slice(0, s) for s in true_shape)]
+    # The executor donates its first argument (the carry lives in padded
+    # layout internally, pad-once-on-entry / slice-once-on-exit); copy so
+    # the caller's buffer is never consumed.
+    return common.run_call(jnp.copy(grid), pc.center, pc.taps, full,
+                           program=program, plan=plan,
+                           true_shape=true_shape, interpret=interpret,
+                           rem=rem, pipelined=pipelined)

@@ -29,7 +29,7 @@ from typing import List, Optional, Sequence, Tuple
 
 from repro.analysis.hw import TpuChip, V5E
 from repro.core import perf_model
-from repro.core.blocking import estimate, grid_useful_fraction
+from repro.core.blocking import estimate, grid_useful_fraction, round_up
 from repro.core.program import as_program
 from repro.tuning.space import Candidate
 
@@ -81,9 +81,17 @@ def predict(program, candidate: Candidate, chip: TpuChip = V5E,
                 "ranking a decomposed candidate needs grid_shape (exchange "
                 "traffic scales with the local extents)")
         local = decomp.local_shape(grid_shape)
+        itemsize = prog.bytes_per_cell // 2
         blocks = math.prod(
             -(-l // c) for l, c in zip(local, candidate.plan.block_shape))
-        t_local = blocks * max(est.compute_s_per_block, est.hbm_s_per_block)
+        # Kernel stream plus the executor's padded-carry pass-through: the
+        # sharded fused run reads one ping-pong buffer and writes the other
+        # per superstep (local extent + 2*halo ring per axis).
+        carry_s = 2 * math.prod(
+            l + 2 * candidate.plan.halo for l in local) * itemsize \
+            / chip.hbm_bytes_per_s
+        t_local = blocks * max(est.compute_s_per_block,
+                               est.hbm_s_per_block) + carry_s
         t_ici = exchange_bytes_per_superstep(
             prog, candidate.plan, decomp, grid_shape) \
             / chip.ici_link_bytes_per_s
@@ -100,16 +108,40 @@ def predict(program, candidate: Candidate, chip: TpuChip = V5E,
             * prog.flops_per_cell / 1e9,
             bound="ici" if t_ici > t_local else est.bound,
         )
-    useful = grid_useful_fraction(grid_shape, candidate.plan.block_shape)
+    if grid_shape is not None:
+        # Executor-traffic model: with the grid known, charge exactly what
+        # the padded-carry fused run moves per superstep — every block's
+        # halo'd read + tile write plus the 2x ping-pong pass-through
+        # (``BlockPlan.run_bytes_per_superstep``) — against the compute
+        # time of the whole block sweep.  Useful cells are the true grid's
+        # (round-up waste shows up as extra blocks, not a fraction), so the
+        # grid_useful_fraction penalty is built in rather than multiplied.
+        plan = candidate.plan
+        blocks = math.prod(
+            round_up(g, b) // b
+            for g, b in zip(grid_shape, plan.block_shape))
+        t_compute = blocks * est.compute_s_per_block
+        t_mem = plan.run_bytes_per_superstep(grid_shape) \
+            / chip.hbm_bytes_per_s
+        t_superstep = max(t_compute, t_mem)
+        cells_per_s = math.prod(grid_shape) * plan.par_time / t_superstep
+        return RankedCandidate(
+            candidate=candidate,
+            predicted_gbps=perf_model.gbps_from_cells_per_s(
+                cells_per_s, cell_bytes=prog.bytes_per_cell),
+            predicted_gcells=cells_per_s / 1e9,
+            predicted_gflops=cells_per_s * prog.flops_per_cell / 1e9,
+            bound="compute" if t_compute >= t_mem else "memory",
+        )
     # == perf_model.predicted_gbps(prog, plan, chip) on the estimate above
     # (one shared formula, one estimate() evaluation per candidate).
     gbps = perf_model.gbps_from_cells_per_s(est.gcells_per_s,
                                             cell_bytes=prog.bytes_per_cell)
     return RankedCandidate(
         candidate=candidate,
-        predicted_gbps=useful * gbps,
-        predicted_gcells=useful * est.gcells_per_s / 1e9,
-        predicted_gflops=useful * est.gflops_per_s / 1e9,
+        predicted_gbps=gbps,
+        predicted_gcells=est.gcells_per_s / 1e9,
+        predicted_gflops=est.gflops_per_s / 1e9,
         bound=est.bound,
     )
 

@@ -44,8 +44,8 @@ import math
 from typing import Iterator, List, Optional, Sequence, Tuple
 
 from repro.analysis.hw import TpuChip, V5E
-from repro.backends.registry import (default_backend_name, get_backend,
-                                     pipelined_variant)
+from repro.backends.registry import (backend_traits, default_backend_name,
+                                     get_backend, pipelined_variant)
 from repro.core.blocking import (LANE, MIN_USEFUL_FRACTION, SUBLANE,
                                  BlockPlan, round_up)
 from repro.core.program import as_program
@@ -181,10 +181,16 @@ def is_aligned(bsize: Shape) -> bool:
     return bsize[-1] % LANE == 0 and bsize[-2] % SUBLANE == 0
 
 
-def fits_vmem(plan: BlockPlan, chip: TpuChip) -> bool:
-    """Paper eq. 4/5 analogue: the double-buffered window must fit the
-    planner's VMEM budget (their DSP/BRAM caps, our on-chip SRAM cap)."""
-    return plan.vmem_bytes <= chip.vmem_budget_bytes
+def fits_vmem(plan: BlockPlan, chip: TpuChip,
+              pipelined: bool = False) -> bool:
+    """Paper eq. 4/5 analogue: the kernel's VMEM scratch must fit the
+    planner's budget (their DSP/BRAM caps, our on-chip SRAM cap).
+
+    Variant-aware: the ``-pipelined`` kernel revolves two halo'd window
+    buffers, the plain kernel just one — pruning plain plans with the
+    double-buffered bound would forfeit bigger blocks / deeper par_time.
+    """
+    return plan.vmem_bytes_for(pipelined) <= chip.vmem_budget_bytes
 
 
 def halo_aligned(par_time: int, halo_radius: int) -> bool:
@@ -302,8 +308,11 @@ def enumerate_space(
         pipe = pipelined_variant(base)
         backends = (base,) if pipe is None else (base, pipe)
 
-    resolved = [(name, get_backend(name, backend_version)[1])
-                for name in backends]
+    resolved = []
+    for name in backends:
+        version = get_backend(name, backend_version)[1]
+        resolved.append(
+            (name, version, backend_traits(name, version).pipelined))
 
     out: List[Candidate] = []
 
@@ -335,7 +344,12 @@ def enumerate_space(
                         break   # window = csize + 2*halo grows with pt
                     if plan.useful_fraction <= min_useful_fraction:
                         break   # strictly decreasing in pt
-                    for name, version in resolved:
+                    # Variant-aware budget: the point may fit the plain
+                    # kernel's single window but not the pipelined pair.
+                    fits_pipe = fits_vmem(plan, chip, pipelined=True)
+                    for name, version, pipe in resolved:
+                        if pipe and not fits_pipe:
+                            continue
                         out.append(Candidate(plan=plan, backend=name,
                                              backend_version=version,
                                              halo_aligned=halo_aligned(pt, r),
@@ -351,10 +365,13 @@ def enumerate_space(
                 break                      # csize shrinks with pt: no recovery
             plan = BlockPlan(spec=prog, block_shape=cs, par_time=pt)
             if not fits_vmem(plan, chip):
-                break   # VMEM is pt-invariant (streamed window == bsize)
+                # The plain bound (window + shrinking output tile) decreases
+                # with pt, so deeper supersteps may still fit: keep probing.
+                continue
             if plan.useful_fraction <= min_useful_fraction:
                 break   # strictly decreasing in pt; boundary matches
                         # blocking.candidate_plans
+            fits_pipe = fits_vmem(plan, chip, pipelined=True)
             if decomps is not None:
                 # Mesh path, explicit windows: keep the caller's bsize
                 # semantics and prune each (plan, decomposition) pair by
@@ -362,13 +379,17 @@ def enumerate_space(
                 for dc in decomps:
                     if not fits_shard(plan, dc, grid_shape):
                         continue
-                    for name, version in resolved:
+                    for name, version, pipe in resolved:
+                        if pipe and not fits_pipe:
+                            continue
                         out.append(Candidate(plan=plan, backend=name,
                                              backend_version=version,
                                              halo_aligned=halo_aligned(pt, r),
                                              decomp=dc))
                 continue
-            for name, version in resolved:
+            for name, version, pipe in resolved:
+                if pipe and not fits_pipe:
+                    continue
                 out.append(Candidate(plan=plan, backend=name,
                                      backend_version=version,
                                      halo_aligned=halo_aligned(pt, r)))

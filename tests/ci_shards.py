@@ -22,6 +22,7 @@ SHARDS = {
         "tests/test_kernels_2d.py",
         "tests/test_kernels_3d.py",
         "tests/test_fused_run.py",
+        "tests/test_padded_carry.py",
         "tests/test_temporal.py",
         "tests/test_stencil_ref.py",
         "tests/test_program_ir.py",

@@ -9,7 +9,7 @@ import numpy as np
 from repro.core import compat
 from repro.core import reference as ref
 from repro.core.blocking import BlockPlan
-from repro.core.distributed import Decomposition, DistributedStencil
+from repro.core.distributed import Decomposition, DistributedStencil  # legacy-ok
 from repro.core.program import StencilProgram
 from repro.core.spec import StencilSpec
 
@@ -21,7 +21,7 @@ coeffs = spec.default_coeffs(seed=1)
 plan = BlockPlan(spec=spec, block_shape=(16, 128), par_time=2)
 G = (128, 512)
 g = ref.random_grid(spec, G, seed=11)
-ds = DistributedStencil(spec, coeffs, plan, mesh,
+ds = DistributedStencil(spec, coeffs, plan, mesh,  # legacy-ok
                         Decomposition((("pod", "data"), ("model",))), G)
 got = ds.superstep(jax.device_put(g, ds.sharding()))
 want = ref.stencil_nsteps_unrolled(spec, coeffs, g, plan.par_time)
@@ -41,7 +41,7 @@ c3 = spec3.default_coeffs(seed=2)
 plan3 = BlockPlan(spec=spec3, block_shape=(8, 16, 128), par_time=2)
 G3 = (32, 64, 256)
 g3 = ref.random_grid(spec3, G3, seed=5)
-ds3 = DistributedStencil(spec3, c3, plan3, mesh,
+ds3 = DistributedStencil(spec3, c3, plan3, mesh,  # legacy-ok
                          Decomposition((("pod", "data"), ("model",), ())), G3)
 got3 = ds3.superstep(jax.device_put(g3, ds3.sharding()))
 want3 = ref.stencil_nsteps_unrolled(spec3, c3, g3, 2)
@@ -55,7 +55,7 @@ c4 = spec4.default_coeffs(seed=4)
 plan4 = BlockPlan(spec=spec4, block_shape=(32, 128), par_time=2)
 G4 = (128, 256)
 g4 = ref.random_grid(spec4, G4, seed=6)
-ds4 = DistributedStencil(spec4, c4, plan4, mesh,
+ds4 = DistributedStencil(spec4, c4, plan4, mesh,  # legacy-ok
                          Decomposition((("pod", "data"), ("model",))), G4)
 got4 = ds4.superstep(jax.device_put(g4, ds4.sharding()))
 want4 = ref.stencil_nsteps_unrolled(spec4, c4, g4, 2)
@@ -69,7 +69,7 @@ cp = progp.default_coeffs(seed=3)
 planp = BlockPlan(spec=progp, block_shape=(16, 128), par_time=2)
 Gp = (128, 512)
 gp = ref.random_grid(progp, Gp, seed=13)
-dsp = DistributedStencil(progp, cp, planp, mesh,
+dsp = DistributedStencil(progp, cp, planp, mesh,  # legacy-ok
                          Decomposition((("pod", "data"), ("model",))), Gp)
 gotp = dsp.run(jax.device_put(gp, dsp.sharding()), 4)
 wantp = ref.numpy_program_nsteps(progp, cp, gp, 4)
@@ -82,7 +82,7 @@ progc = StencilProgram(ndim=2, radius=3, shape="diamond", boundary="constant",
 cc = progc.default_coeffs(seed=8)
 planc = BlockPlan(spec=progc, block_shape=(16, 128), par_time=2)
 gc = ref.random_grid(progc, Gp, seed=17)
-dsc = DistributedStencil(progc, cc, planc, mesh,
+dsc = DistributedStencil(progc, cc, planc, mesh,  # legacy-ok
                          Decomposition((("pod", "data"), ("model",))), Gp)
 gotc = dsc.superstep(jax.device_put(gc, dsc.sharding()))
 wantc = ref.numpy_program_nsteps(progc, cc, gc, 2)

@@ -29,7 +29,7 @@ import repro
 from repro.core import compat
 from repro.core import reference as ref
 from repro.core.blocking import BlockPlan
-from repro.core.distributed import Decomposition, DistributedStencil
+from repro.core.distributed import Decomposition, DistributedStencil  # legacy-ok
 from repro.core.program import StencilProgram
 from repro.kernels import common
 
@@ -47,7 +47,7 @@ def legacy(prog, coeffs, plan, shards, G):
         (names[i],) if shards[i] > 1 else () for i in range(len(shards))))
     with warnings.catch_warnings():
         warnings.simplefilter("ignore", DeprecationWarning)
-        return DistributedStencil(prog, coeffs, plan, mesh, decomp, G)
+        return DistributedStencil(prog, coeffs, plan, mesh, decomp, G)  # legacy-ok
 
 
 # ---- parity matrix: front door == legacy DistributedStencil == oracle ------

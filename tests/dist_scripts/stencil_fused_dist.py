@@ -23,7 +23,7 @@ import numpy as np
 from repro.core import compat
 from repro.core import reference as ref
 from repro.core.blocking import BlockPlan
-from repro.core.distributed import Decomposition, DistributedStencil
+from repro.core.distributed import Decomposition, DistributedStencil  # legacy-ok
 from repro.core.program import StencilProgram
 from repro.kernels import common, ops
 
@@ -51,10 +51,10 @@ for ndim in (2, 3):
             plan = BlockPlan(spec=prog, block_shape=BLOCKS[ndim], par_time=2)
             G = GRIDS[ndim]
             g = ref.random_grid(prog, G, seed=rad)
-            ds = DistributedStencil(prog, coeffs, plan, mesh, DECOMPS[ndim],
+            ds = DistributedStencil(prog, coeffs, plan, mesh, DECOMPS[ndim],  # legacy-ok
                                     G)
             got = ds.run(put(ds, g), STEPS)
-            want = ops.stencil_run(g, prog, coeffs, plan, STEPS)
+            want = ops.stencil_run(g, prog, coeffs, plan, STEPS)  # legacy-ok
             # ulp-level tolerance, not bit-equality: the sharded and the
             # single-device runs are different XLA executables, and XLA:CPU
             # may pick different FMA fusions around the halo selects (the
@@ -73,7 +73,7 @@ coeffs = prog.default_coeffs(seed=9)
 plan = BlockPlan(spec=prog, block_shape=(16, 128), par_time=2)
 G = (128, 512)
 g = ref.random_grid(prog, G, seed=9)
-ds = DistributedStencil(prog, coeffs, plan, mesh,
+ds = DistributedStencil(prog, coeffs, plan, mesh,  # legacy-ok
                         Decomposition((("pod", "data"), ("model",))), G)
 common.reset_trace_counts()
 
@@ -89,7 +89,7 @@ assert ds.run(put(ds, g), 0).shape == G     # steps=0: identity, no compile
 assert common.trace_count("dist_run_call") == 2
 
 # a different decomposition is a different executable — exactly one more
-ds_alt = DistributedStencil(prog, coeffs, plan, mesh,
+ds_alt = DistributedStencil(prog, coeffs, plan, mesh,  # legacy-ok
                             Decomposition((("model",), ("pod", "data"))), G)
 got_alt = ds_alt.run(put(ds_alt, g), 5)
 assert common.trace_count("dist_run_call") == 3
@@ -114,7 +114,7 @@ B = 2
 prog_b = StencilProgram(ndim=2, radius=2, boundary="periodic")
 coeffs_b = prog_b.default_coeffs(seed=3)
 plan_b = BlockPlan(spec=prog_b, block_shape=(16, 128), par_time=2)
-ds_b = DistributedStencil(prog_b, coeffs_b, plan_b, mesh,
+ds_b = DistributedStencil(prog_b, coeffs_b, plan_b, mesh,  # legacy-ok
                           Decomposition((("pod", "data"), ("model",))),
                           (64, 256))
 gb = jnp.stack([ref.random_grid(prog_b, (64, 256), seed=s)
@@ -130,7 +130,7 @@ print("OK batched_sharded")
 
 # ---- pipelined local kernel, registry-resolved -----------------------------
 
-ds_p = DistributedStencil(prog_b, coeffs_b, plan_b, mesh,
+ds_p = DistributedStencil(prog_b, coeffs_b, plan_b, mesh,  # legacy-ok
                           Decomposition((("pod", "data"), ("model",))),
                           (64, 256), pipelined=True)
 assert ds_p.backend_name.endswith("-pipelined"), ds_p.backend_name
@@ -169,7 +169,7 @@ print("OK served_on_mesh")
 # ---- backends without a local kernel are refused up front ------------------
 
 try:
-    DistributedStencil(prog_b, coeffs_b, plan_b, mesh,
+    DistributedStencil(prog_b, coeffs_b, plan_b, mesh,  # legacy-ok
                        Decomposition((("pod", "data"), ("model",))),
                        (64, 256), backend="xla-reference")
 except ValueError as e:

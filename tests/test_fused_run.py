@@ -34,8 +34,8 @@ GRIDS = {2: (37, 150), 3: (9, 18, 140)}     # non-divisible by the blocks
 @pytest.mark.parametrize("rad", [1, 2, 3, 4])
 @pytest.mark.parametrize("boundary", ["clamp", "periodic", "constant"])
 def test_fused_matches_eager_and_numpy_oracle(ndim, rad, boundary):
-    """steps = 1 full superstep + remainder: the fused executable is
-    bit-identical to the eager chain and within fp32 tolerance of the
+    """steps = 1 full superstep + remainder: the fused executable matches
+    the eager chain at ulp level and stays within fp32 tolerance of the
     gather-based float64 numpy oracle."""
     prog = StencilProgram(ndim=ndim, radius=rad, boundary=boundary,
                           boundary_value=0.25)
@@ -45,7 +45,11 @@ def test_fused_matches_eager_and_numpy_oracle(ndim, rad, boundary):
     steps = 3                       # full=1, rem=1
     fused = ops.stencil_run(g, prog, coeffs, plan, steps)
     eager = ops.stencil_run(g, prog, coeffs, plan, steps, fused=False)
-    np.testing.assert_array_equal(np.asarray(fused), np.asarray(eager))
+    # ulp-level tolerance: the padded-carry executor and the eager chain are
+    # different executables, and XLA:CPU may pick different FMA fusions for
+    # the same arithmetic in each.
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(eager),
+                               atol=1e-6, rtol=1e-5)
     want = ref.numpy_program_nsteps(prog, coeffs, g, steps)
     np.testing.assert_allclose(np.asarray(fused), want, **TOL)
 
@@ -109,9 +113,9 @@ def test_fused_run_compile_and_dispatch_counts(monkeypatch):
 
 
 def test_fused_run_donates_the_carry():
-    """run_call really donates arg 0 (the rounded-up carry grid): the input
-    buffer is consumed by the executable — in-place superstep updates
-    instead of a fresh HBM grid per run."""
+    """run_call really donates arg 0 (the true-shaped grid): the input
+    buffer is consumed by the executable, which carries the run in its
+    internal padded ping-pong pair — no fresh HBM grid per superstep."""
     prog = StencilProgram(ndim=2, radius=1)
     plan = BlockPlan(spec=prog, block_shape=(8, 128), par_time=2)
     pc = prog.default_coeffs()
@@ -201,13 +205,18 @@ def test_pipelined_backends_registered():
 
 
 def test_pipelined_backend_actually_builds_pipelined_kernel(monkeypatch):
-    """Lowering probe: the -pipelined registry backend reaches
-    build_pipelined_kernel (it was unreachable when pallas_backend
-    hard-coded pipelined=False), and the plain backend never does."""
+    """Lowering probe: the -pipelined registry backend reaches a pipelined
+    kernel builder (it was unreachable when pallas_backend hard-coded
+    pipelined=False), and the plain backend never does.  The fused run
+    builds the padded-carry variant; the eager superstep path the legacy
+    one — both count."""
     calls = []
     orig = common.build_pipelined_kernel
     monkeypatch.setattr(common, "build_pipelined_kernel",
                         lambda *a, **k: calls.append(a) or orig(*a, **k))
+    orig_p = common.build_padded_pipelined_kernel
+    monkeypatch.setattr(common, "build_padded_pipelined_kernel",
+                        lambda *a, **k: calls.append(a) or orig_p(*a, **k))
 
     prog = StencilProgram(ndim=2, radius=2)
     plan = BlockPlan(spec=prog, block_shape=(16, 128), par_time=2)
@@ -232,6 +241,9 @@ def test_engine_pipelined_both_paths(monkeypatch):
     orig = common.build_pipelined_kernel
     monkeypatch.setattr(common, "build_pipelined_kernel",
                         lambda *a, **k: calls.append(a) or orig(*a, **k))
+    orig_p = common.build_padded_pipelined_kernel
+    monkeypatch.setattr(common, "build_padded_pipelined_kernel",
+                        lambda *a, **k: calls.append(a) or orig_p(*a, **k))
 
     prog = StencilProgram(ndim=2, radius=1, boundary="periodic")
     plan = BlockPlan(spec=prog, block_shape=(16, 128), par_time=2)
