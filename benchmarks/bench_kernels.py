@@ -33,6 +33,7 @@ import repro
 from repro.backends import pipelined_variant
 from repro.core import reference as ref
 from repro.core.blocking import BlockPlan
+from repro.core.perf_model import gbps_from_cells_per_s
 from repro.core.program import StencilProgram
 from repro.kernels import ops
 
@@ -65,6 +66,17 @@ def _bytes_accessed(fn, *args):
 def _with_bytes(derived: str, fn, *args) -> str:
     ba = _bytes_accessed(fn, *args)
     return derived if ba is None else f"{derived};bytes_accessed={ba}"
+
+
+def _acc_fields(cs, cells_per_s: float) -> str:
+    """Per-row model-accuracy telemetry: resolved backend, achieved
+    effective GB/s, and the paper's Table III ratio (measured/estimated)
+    against the plan's perf-model estimate."""
+    gbps = gbps_from_cells_per_s(cells_per_s, cs.program.bytes_per_cell)
+    pred = cs.cost.predicted_gbps
+    acc = gbps / pred if pred else 0.0
+    return (f"backend={cs.backend};achieved_gbps={gbps:.4f};"
+            f"model_accuracy={acc:.4f}")
 
 
 def _tuned_plan(prog, grid_shape) -> BlockPlan:
@@ -101,7 +113,8 @@ def _executor_rows(prog, shape, plan, rows):
     rows.append((f"run_fused_{prog.ndim}d_r{prog.radius}", t_fused * 1e6,
                  _with_bytes(
                      f"mcells_per_s={mcells:.1f};"
-                     f"fused_speedup_vs_eager={t_eager / t_fused:.2f}x",
+                     f"fused_speedup_vs_eager={t_eager / t_fused:.2f}x;"
+                     f"{_acc_fields(cs, cells * steps / t_fused)}",
                      cs.run, g)))
 
     cs_pipe = sten.compile(shape, steps=steps, plan=plan, pipelined=True)
@@ -109,7 +122,8 @@ def _executor_rows(prog, shape, plan, rows):
     rows.append((f"run_pipelined_{prog.ndim}d_r{prog.radius}", t_pipe * 1e6,
                  _with_bytes(
                      f"mcells_per_s={cells * steps / t_pipe / 1e6:.1f};"
-                     f"pipelined_speedup_vs_plain={t_fused / t_pipe:.2f}x",
+                     f"pipelined_speedup_vs_plain={t_fused / t_pipe:.2f}x;"
+                     f"{_acc_fields(cs_pipe, cells * steps / t_pipe)}",
                      cs_pipe.run, g)))
 
     B = 2
@@ -121,7 +135,8 @@ def _executor_rows(prog, shape, plan, rows):
                  t_batch * 1e6,
                  _with_bytes(
                      f"mcells_per_s={B * cells * steps / t_batch / 1e6:.1f};"
-                     f"batched_speedup_vs_loop={t_loop / t_batch:.2f}x",
+                     f"batched_speedup_vs_loop={t_loop / t_batch:.2f}x;"
+                     f"{_acc_fields(cs_b, B * cells * steps / t_batch)}",
                      cs_b.run, gb)))
 
 
@@ -181,7 +196,8 @@ def run(use_tuned=None, smoke=None):
             tag, t2 * 1e6,
             _with_bytes(
                 f"mcells_per_s={mcells:.1f};"
-                f"tb_speedup_vs_pt1={t1 / t2:.2f}x",
+                f"tb_speedup_vs_pt1={t1 / t2:.2f}x;"
+                f"{_acc_fields(cs2, cells * steps / t2)}",
                 cs2.run, g)))
 
     # executor comparisons ride the direct pallas path, so the

@@ -55,28 +55,58 @@ def _rows(payload: dict) -> dict:
     return out
 
 
+def _accuracy(payload: dict) -> dict:
+    """name -> model-accuracy ratio (first-class row field, with a
+    metrics-dict fallback for result files predating the promotion)."""
+    out = {}
+    for row in payload.get("results", []):
+        v = row.get("model_accuracy")
+        if v is None:
+            v = (row.get("metrics") or {}).get("model_accuracy")
+        if isinstance(v, (int, float)):
+            out[row["name"]] = float(v)
+    return out
+
+
 def merge_best(payloads) -> dict:
-    """Per-row max of the gated metric over several result payloads."""
+    """Per-row max of the gated metric over several result payloads;
+    each row keeps the model-accuracy of the run that won it."""
     best: dict = {}
+    acc: dict = {}
     for p in payloads:
+        a = _accuracy(p)
         for name, v in _rows(p).items():
-            best[name] = max(v, best.get(name, v))
-    return {"results": [{"name": n, "metrics": {METRIC: v}}
-                        for n, v in best.items()]}
+            if name not in best or v > best[name]:
+                best[name] = v
+                if name in a:
+                    acc[name] = a[name]
+    return {"results": [
+        dict({"name": n, "metrics": {METRIC: v}},
+             **({"model_accuracy": acc[n]} if n in acc else {}))
+        for n, v in best.items()]}
 
 
 def compare(current: dict, baseline: dict, threshold_pct: float):
-    """Returns (table_lines, failures) comparing the two payloads."""
+    """Returns (table_lines, failures) comparing the two payloads.
+
+    The model-accuracy column (measured/estimated effective GB/s, the
+    paper's Table III ratio) is informational — only ``mcells_per_s``
+    gates.
+    """
     cur, base = _rows(current), _rows(baseline)
-    lines = [f"| row | baseline {METRIC} | current {METRIC} | delta | gate |",
-             "|---|---|---|---|---|"]
+    cur_acc = _accuracy(current)
+    lines = [f"| row | baseline {METRIC} | current {METRIC} | delta "
+             f"| model acc | gate |",
+             "|---|---|---|---|---|---|"]
     failures = []
     for name in sorted(set(cur) | set(base)):
         c, b = cur.get(name), base.get(name)
+        acc = cur_acc.get(name)
+        acc_s = f"{acc:.2f}" if acc is not None else "—"
         if c is None or b is None:
             which = "baseline only" if c is None else "new row"
             lines.append(f"| {name} | {b or '—'} | {c or '—'} | — "
-                         f"| skipped ({which}) |")
+                         f"| {acc_s} | skipped ({which}) |")
             continue
         delta = (c - b) / b * 100.0
         bad = delta < -threshold_pct
@@ -84,7 +114,7 @@ def compare(current: dict, baseline: dict, threshold_pct: float):
             failures.append((name, b, c, delta))
         verdict = f"FAIL (<-{threshold_pct:g}%)" if bad else "ok"
         lines.append(f"| {name} | {b:.1f} | {c:.1f} | {delta:+.1f}% "
-                     f"| {verdict} |")
+                     f"| {acc_s} | {verdict} |")
     return lines, failures
 
 

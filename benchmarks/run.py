@@ -74,13 +74,24 @@ def main() -> None:
         try:
             for row_name, us, derived in mod.run():
                 print(f"{row_name},{us:.2f},{derived}")
-                results.append({
+                metrics = _parse_derived(derived)
+                row = {
                     "name": row_name,
                     "suite": name,
                     "us_per_call": round(float(us), 3),
                     "derived": derived,
-                    "metrics": _parse_derived(derived),
-                })
+                    "metrics": metrics,
+                }
+                # model-accuracy telemetry rides as first-class row fields
+                # so downstream consumers (check_regression, CI asserts)
+                # need not re-parse the derived string
+                if "model_accuracy" in metrics:
+                    row["model_accuracy"] = metrics["model_accuracy"]
+                if "bytes_accessed" in metrics:
+                    row["bytes_accessed"] = int(metrics["bytes_accessed"])
+                if isinstance(metrics.get("backend"), str):
+                    row["backend"] = metrics["backend"]
+                results.append(row)
         except Exception as e:  # pragma: no cover
             errors.append({"suite": name,
                            "error": f"{type(e).__name__}: {e}"})

@@ -15,8 +15,14 @@ backend, and — for ``devices`` — the mesh decomposition, then hands back a
 pipelined runs through one executor (DESIGN.md §9).  The legacy entry
 points (``StencilEngine``, ``kernels.ops.stencil_run``,
 ``DistributedStencil``) survive as bit-compatible deprecation shims.
+
+``repro.obs`` is the flight recorder: ``with repro.obs.profile() as rec:``
+around any front-door work yields compile/run spans with achieved GB/s and
+the predicted-vs-measured model-accuracy ratio (``REPRO_OBS=1`` enables
+the same globally; off by default and free when off).
 """
 
+from repro import obs
 from repro.backends import (
     available_backends,
     backend_traits,
@@ -30,7 +36,7 @@ from repro.core.program import ProgramCoeffs, StencilProgram
 from repro.executor import CompiledStencil, Stencil, stencil
 from repro.tuning import TunedPlan, autotune
 
-__version__ = "0.2.0"
+__version__ = "0.3.0"
 
 __all__ = [
     "BlockPlan",
@@ -44,6 +50,7 @@ __all__ = [
     "backend_traits",
     "default_backend_name",
     "lower",
+    "obs",
     "pipelined_variant",
     "plan_blocking",
     "register_backend",

@@ -21,6 +21,20 @@ import jax
 AxisType = getattr(jax.sharding, "AxisType", None)
 
 
+def tracing() -> bool:
+    """True while jax is tracing.
+
+    Host-side instrumentation (the ``repro.obs`` flight recorder, which is
+    deliberately jax-free) must not time, block, or emit per-run events
+    inside a trace — a jitted wrapper around an instrumented entry point
+    would otherwise record trace-time garbage once per compile.
+    """
+    try:
+        return not jax.core.trace_state_clean()
+    except Exception:  # pragma: no cover - jax internals drift
+        return False
+
+
 def make_mesh(axis_shapes, axis_names, *, devices=None):
     """``jax.make_mesh`` with all-Auto axis types where supported."""
     if AxisType is not None:

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core import compat
 from repro.core.blocking import BlockPlan
 from repro.core.codegen import boundary_pad
@@ -446,6 +447,21 @@ class DistributedStencil:
         if steps == 0:
             return grid
         full, rem = divmod(steps, self.plan.par_time)
+        rec = obs.active()
+        if rec is not None and not compat.tracing():
+            # Tag what each superstep's ICI exchange moves: the full
+            # supersteps refresh a plan.halo-deep ring per sharded axis,
+            # the remainder superstep a shallower rem*halo_radius one.
+            rec.event(
+                "exchange",
+                depth=self.plan.halo,
+                rem_depth=rem * self.program.halo_radius,
+                supersteps=int(full), rem=rem,
+                decomp=[self.decomp.shards(self.mesh, d)
+                        for d in range(self.program.ndim)],
+                batch_rank=nb,
+                backend=f"{self.backend_name}@{self.backend_version}",
+                boundary=self.program.boundary)
         fn = self.run_fn(rem, nb)
         return fn(grid, self.pcoeffs.center, self.pcoeffs.taps,
                   jnp.asarray(full, jnp.int32))

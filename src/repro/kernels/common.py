@@ -33,6 +33,7 @@ import collections
 import dataclasses
 import functools
 import math
+import threading
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -66,19 +67,33 @@ dma_semaphore = pltpu.SemaphoreType.DMA
 # compile-count regression tests key off this (no jax.monitoring dependency).
 
 _TRACE_COUNTS: Dict[str, int] = collections.Counter()
+# Concurrent compiles (threaded serving fronts, parallel test workers) bump
+# the same Counter; ``c[k] += 1`` is a read-modify-write, so without the
+# lock two racing traces can lose an increment and the compile-count
+# regression tests go flaky exactly when compiles overlap.
+_TRACE_LOCK = threading.Lock()
 
 
 def _note_trace(name: str) -> None:
-    _TRACE_COUNTS[name] += 1
+    with _TRACE_LOCK:
+        _TRACE_COUNTS[name] += 1
 
 
 def trace_count(name: str) -> int:
     """How many times the named jit'd entry point traced since last reset."""
-    return _TRACE_COUNTS.get(name, 0)
+    with _TRACE_LOCK:
+        return _TRACE_COUNTS.get(name, 0)
+
+
+def trace_counts() -> Dict[str, int]:
+    """Snapshot of every counter (the obs layer diffs these around runs)."""
+    with _TRACE_LOCK:
+        return dict(_TRACE_COUNTS)
 
 
 def reset_trace_counts() -> None:
-    _TRACE_COUNTS.clear()
+    with _TRACE_LOCK:
+        _TRACE_COUNTS.clear()
 
 
 def batch_dims(program: StencilProgram, grid_ndim: int) -> int:

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.analysis.hw import TpuChip, V5E
 from repro.core.program import StencilProgram, as_program
 from repro.executor import CompiledStencil, stencil
@@ -55,20 +56,67 @@ class StencilRequest:
     program: StencilProgram
     grid: jnp.ndarray           # (*grid_shape)
     steps: int
+    t_submit: float = 0.0       # perf_counter at submit; latency anchor
 
 
-@dataclasses.dataclass
 class ServeStats:
-    requests: int = 0
-    batches: int = 0
-    batched_requests: int = 0   # requests that shared their executable
-    sharded_batches: int = 0    # batches placed on the device mesh
-    seconds: float = 0.0
-    cell_steps: int = 0
+    """Live read-only view over the server's flight recorder.
+
+    The historical counter names survive (``requests``, ``batches``,
+    ``batched_requests``, ``sharded_batches``, ``cell_steps``,
+    ``seconds``, ``mcell_steps_per_s``) but are now derived from the
+    recorder, and ``seconds`` splits into ``compile_seconds`` (dispatch
+    time of cold executables — the synchronous trace+compile) and
+    ``run_seconds`` (warm dispatches plus the blocking pass).  Queueing
+    behaviour is histogrammed: ``latency_percentiles()`` gives
+    per-request p50/p95/p99, ``queue_depth``/``batch_occupancy`` samples
+    live under the same names on ``recorder``.
+    """
+
+    def __init__(self, recorder: "obs.Recorder"):
+        self.recorder = recorder
+
+    @property
+    def requests(self) -> int:
+        return self.recorder.counter("serve.requests")
+
+    @property
+    def batches(self) -> int:
+        return self.recorder.counter("serve.batches")
+
+    @property
+    def batched_requests(self) -> int:
+        """Requests that shared their executable with a batch-mate."""
+        return self.recorder.counter("serve.batched_requests")
+
+    @property
+    def sharded_batches(self) -> int:
+        """Batches placed on the device mesh."""
+        return self.recorder.counter("serve.sharded_batches")
+
+    @property
+    def cell_steps(self) -> int:
+        return self.recorder.counter("serve.cell_steps")
+
+    @property
+    def compile_seconds(self) -> float:
+        return self.recorder.sample_sum("serve.compile_s")
+
+    @property
+    def run_seconds(self) -> float:
+        return self.recorder.sample_sum("serve.run_s")
+
+    @property
+    def seconds(self) -> float:
+        return self.compile_seconds + self.run_seconds
 
     @property
     def mcell_steps_per_s(self) -> float:
         return self.cell_steps / max(self.seconds, 1e-9) / 1e6
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        """{"p50": s, "p95": s, "p99": s} of submit->result latency."""
+        return self.recorder.percentiles("serve.request_latency_s")
 
 
 class StencilServer:
@@ -87,7 +135,8 @@ class StencilServer:
                  cache_path: Optional[str] = None,
                  hw: TpuChip = V5E,
                  max_par_time: int = 8,
-                 mesh_devices: Optional[int] = None):
+                 mesh_devices: Optional[int] = None,
+                 recorder: Optional["obs.Recorder"] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1 (got {max_batch})")
         if mesh_devices is not None and mesh_devices < 1:
@@ -103,7 +152,13 @@ class StencilServer:
         # a 1-device "mesh" is the single-device executor; normalizing here
         # keeps stats.sharded_batches meaning actually-sharded batches
         self.mesh_devices = None if mesh_devices == 1 else mesh_devices
-        self.stats = ServeStats()
+        # explicit recorders record unconditionally (the REPRO_OBS switch
+        # gates only the ambient one), so serve stats always work
+        self.recorder = recorder if recorder is not None else obs.Recorder()
+        self.stats = ServeStats(self.recorder)
+        #: (executable identity, steps) pairs that already dispatched once —
+        #: their trace+compile cost is paid, later dispatches are warm
+        self._warm: set = set()
         self.failed: Dict[int, str] = {}
         #: (program fp, shape) -> why the mesh path declined the group
         self.mesh_fallbacks: Dict[Tuple[str, Tuple[int, ...]], str] = {}
@@ -133,7 +188,9 @@ class StencilServer:
             raise ValueError("steps must be >= 0")
         rid = self._next_rid
         self._next_rid += 1
-        self._pending.append(StencilRequest(rid, prog, grid, steps))
+        self._pending.append(
+            StencilRequest(rid, prog, grid, steps,
+                           t_submit=time.perf_counter()))
         return rid
 
     def pending(self) -> int:
@@ -201,87 +258,116 @@ class StencilServer:
         group the mesh refuses falls back to the single-device executor
         (reason in ``mesh_fallbacks``) before counting as failed.
         """
+        rec = self.recorder
         pending, self._pending = self._pending, []
+        rec.observe("serve.queue_depth", float(len(pending)))
         groups: Dict[tuple, List[StencilRequest]] = {}
         for req in pending:
             groups.setdefault(self._group_key(req), []).append(req)
 
         results: Dict[int, np.ndarray] = {}
-        t0 = time.perf_counter()
+        failed_before = len(self.failed)
         outs = []
-        for (fp, shape, _dtype, steps), reqs in groups.items():
-            program = self._programs[fp]
-            done = 0     # requests of this group whose chunk already ran
-            if steps == 0:      # identity: results are the inputs, no run
-                for lo in range(0, len(reqs), self.max_batch):
-                    chunk = reqs[lo:lo + self.max_batch]
-                    outs.append((chunk, jnp.stack([r.grid for r in chunk])))
-                    if len(chunk) > 1:
-                        self.stats.batched_requests += len(chunk)
-                    self.stats.batches += 1
-                continue
-            try:
-                on_mesh = self._mesh_ok(program, shape)
-                if on_mesh:
-                    try:
-                        # resolve plan + decomposition once per group; a
-                        # refusal (non-divisible shape, empty sharded
-                        # space) demotes the group, not the flush
-                        self._compiled_for(program, shape, steps,
-                                           len(reqs[:self.max_batch]),
-                                           on_mesh=True)
-                    except Exception as e:
-                        self.mesh_fallbacks[(fp, shape)] = \
-                            f"{type(e).__name__}: {e}"
-                        on_mesh = False
-                for lo in range(0, len(reqs), self.max_batch):
-                    chunk = reqs[lo:lo + self.max_batch]
+        with rec.span("serve.flush", requests=len(pending),
+                      groups=len(groups)) as flush_span:
+            for (fp, shape, _dtype, steps), reqs in groups.items():
+                program = self._programs[fp]
+                done = 0     # requests of this group whose chunk already ran
+                if steps == 0:      # identity: results are the inputs, no run
+                    for lo in range(0, len(reqs), self.max_batch):
+                        chunk = reqs[lo:lo + self.max_batch]
+                        outs.append((chunk,
+                                     jnp.stack([r.grid for r in chunk])))
+                        self._count_chunk(chunk, shape, steps)
+                    continue
+                try:
+                    on_mesh = self._mesh_ok(program, shape)
                     if on_mesh:
-                        # mesh path: batched sharded fused run — one
-                        # donated multi-device executable per chunk
-                        cs = self._compiled_for(program, shape, steps,
-                                                len(chunk), on_mesh=True)
-                        out = cs.run(jnp.stack([r.grid for r in chunk]),
-                                     steps)
-                        outs.append((chunk, out))
-                        self.stats.sharded_batches += 1
-                        if len(chunk) > 1:
-                            self.stats.batched_requests += len(chunk)
-                    elif len(chunk) == 1:
-                        cs = self._compiled_for(program, shape, steps,
-                                                None, on_mesh=False)
-                        out = cs.run(chunk[0].grid, steps)
-                        outs.append((chunk, out[jnp.newaxis]))
-                    else:
-                        cs = self._compiled_for(program, shape, steps,
-                                                len(chunk), on_mesh=False)
-                        out = cs.run(jnp.stack([r.grid for r in chunk]),
-                                     steps)
-                        outs.append((chunk, out))
-                        self.stats.batched_requests += len(chunk)
-                    done += len(chunk)
-                    self.stats.batches += 1
-                    self.stats.cell_steps += (
-                        len(chunk) * int(np.prod(shape)) * steps)
-            except Exception as e:  # plan/compile failure: fail the rest
-                for req in reqs[done:]:
-                    self.failed[req.rid] = f"{type(e).__name__}: {e}"
-        # Resolution is a separate pass so dispatches overlap across groups;
-        # execution errors surface asynchronously at block_until_ready, so
-        # isolation must hold here too — a chunk whose executable fails at
-        # runtime fails only its own rids.
-        for chunk, out in outs:
-            try:
-                out = np.asarray(jax.block_until_ready(out))
-            except Exception as e:
-                for req in chunk:
-                    self.failed[req.rid] = f"{type(e).__name__}: {e}"
-                continue
-            for i, req in enumerate(chunk):
-                results[req.rid] = out[i]
-        self.stats.seconds += time.perf_counter() - t0
-        self.stats.requests += len(pending)
+                        try:
+                            # resolve plan + decomposition once per group; a
+                            # refusal (non-divisible shape, empty sharded
+                            # space) demotes the group, not the flush
+                            t0 = time.perf_counter()
+                            self._compiled_for(program, shape, steps,
+                                               len(reqs[:self.max_batch]),
+                                               on_mesh=True)
+                            rec.observe("serve.compile_s",
+                                        time.perf_counter() - t0)
+                        except Exception as e:
+                            self.mesh_fallbacks[(fp, shape)] = \
+                                f"{type(e).__name__}: {e}"
+                            on_mesh = False
+                    for lo in range(0, len(reqs), self.max_batch):
+                        chunk = reqs[lo:lo + self.max_batch]
+                        t0 = time.perf_counter()
+                        if on_mesh:
+                            # mesh path: batched sharded fused run — one
+                            # donated multi-device executable per chunk
+                            cs = self._compiled_for(program, shape, steps,
+                                                    len(chunk), on_mesh=True)
+                            out = cs.run(jnp.stack([r.grid for r in chunk]),
+                                         steps)
+                            outs.append((chunk, out))
+                            rec.count("serve.sharded_batches")
+                        elif len(chunk) == 1:
+                            cs = self._compiled_for(program, shape, steps,
+                                                    None, on_mesh=False)
+                            out = cs.run(chunk[0].grid, steps)
+                            outs.append((chunk, out[jnp.newaxis]))
+                        else:
+                            cs = self._compiled_for(program, shape, steps,
+                                                    len(chunk), on_mesh=False)
+                            out = cs.run(jnp.stack([r.grid for r in chunk]),
+                                         steps)
+                            outs.append((chunk, out))
+                        # first dispatch of an (executable, steps) pair is
+                        # the synchronous trace+compile; later ones enqueue
+                        wkey = (id(cs), steps)
+                        cold = wkey not in self._warm
+                        self._warm.add(wkey)
+                        rec.observe(
+                            "serve.compile_s" if cold else "serve.run_s",
+                            time.perf_counter() - t0)
+                        done += len(chunk)
+                        self._count_chunk(chunk, shape, steps)
+                except Exception as e:  # plan/compile failure: fail the rest
+                    for req in reqs[done:]:
+                        self.failed[req.rid] = f"{type(e).__name__}: {e}"
+            # Resolution is a separate pass so dispatches overlap across
+            # groups; execution errors surface asynchronously at
+            # block_until_ready, so isolation must hold here too — a chunk
+            # whose executable fails at runtime fails only its own rids.
+            t0 = time.perf_counter()
+            for chunk, out in outs:
+                try:
+                    out = np.asarray(jax.block_until_ready(out))
+                except Exception as e:
+                    for req in chunk:
+                        self.failed[req.rid] = f"{type(e).__name__}: {e}"
+                    continue
+                t_done = time.perf_counter()
+                for i, req in enumerate(chunk):
+                    results[req.rid] = out[i]
+                    rec.observe("serve.request_latency_s",
+                                t_done - req.t_submit)
+            rec.observe("serve.run_s", time.perf_counter() - t0)
+            rec.count("serve.requests", len(pending))
+            newly_failed = len(self.failed) - failed_before
+            if newly_failed:
+                rec.count("serve.failed", newly_failed)
+            flush_span.set(results=len(results), failed=newly_failed)
         return results
+
+    def _count_chunk(self, chunk: List[StencilRequest],
+                     shape: Tuple[int, ...], steps: int) -> None:
+        rec = self.recorder
+        rec.count("serve.batches")
+        rec.observe("serve.batch_occupancy", len(chunk) / self.max_batch)
+        if len(chunk) > 1:
+            rec.count("serve.batched_requests", len(chunk))
+        if steps:
+            rec.count("serve.cell_steps",
+                      len(chunk) * int(np.prod(shape)) * steps)
 
 
 def main(argv=None):
@@ -320,10 +406,15 @@ def main(argv=None):
             for _ in range(args.requests)]
     results = server.flush()
     s = server.stats
+    lat = s.latency_percentiles()
     print(f"[stencil-serve] {s.requests} requests -> {s.batches} batches "
           f"({s.batched_requests} batched, {s.sharded_batches} sharded), "
-          f"{s.seconds * 1e3:.1f} ms, "
+          f"{s.compile_seconds * 1e3:.1f} ms compile + "
+          f"{s.run_seconds * 1e3:.1f} ms run, "
           f"{s.mcell_steps_per_s:.1f} Mcell-steps/s")
+    print(f"[stencil-serve] request latency "
+          f"p50={lat['p50'] * 1e3:.1f} ms p95={lat['p95'] * 1e3:.1f} ms "
+          f"p99={lat['p99'] * 1e3:.1f} ms")
     for key, why in server.mesh_fallbacks.items():
         print(f"[stencil-serve] mesh fallback {key[1]}: {why}")
     for rid in rids[:2]:

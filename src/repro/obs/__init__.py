@@ -1,0 +1,187 @@
+"""repro.obs — the flight recorder: structured tracing + run metrics.
+
+The paper's headline claim is a performance *model* accurate to a few
+percent of measured throughput (Table III); this package turns that
+comparison from a once-per-bench artifact into continuously accumulated
+telemetry.  Every instrumented path — ``executor.compile``/``run``, the
+sharded exchange, the serving front, the tuner's measurement harness —
+emits structured events carrying predicted-vs-achieved GB/s, and accuracy
+samples append to a schema-versioned history ledger the calibration layer
+(ROADMAP item 3) can later fit from.
+
+Off by default.  ``REPRO_OBS=1`` (or an active :func:`profile` scope)
+turns recording on; when off, every module-level helper short-circuits to
+a shared no-op — one dict lookup, no allocation — so instrumented hot
+paths cost nothing (the overhead guard in tests/test_obs.py bounds it at
+<2% of a fused smoke run).
+
+Usage::
+
+    import repro, repro.obs
+
+    with repro.obs.profile() as rec:
+        cs = repro.stencil(program).compile((256, 1024), steps=8)
+        out = cs.run(grid)
+    rec.spans("run")[0]["achieved_gbps"]     # measured effective bandwidth
+    rec.accuracy_samples()[0]["model_accuracy"]  # Table III-style ratio
+
+Env:
+    REPRO_OBS          1/true enables the global recorder (default off)
+    REPRO_OBS_JSONL    stream every event to this JSONL file
+    REPRO_OBS_HISTORY  accuracy-sample ledger (default obs/history.jsonl;
+                       empty string disables the ledger)
+
+``python -m repro.obs report`` renders the human summary (per-backend
+accuracy distribution, slowest spans, plan-cache hit rates); ``--json``
+emits the same machine-readably for CI.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+from typing import Optional
+
+from repro.obs.history import (DEFAULT_HISTORY_PATH, SCHEMA_VERSION,
+                               append_sample, default_history_path,
+                               read_history)
+from repro.obs.recorder import NULL_SPAN, Recorder, Span, percentile
+
+__all__ = [
+    "NULL_SPAN",
+    "Recorder",
+    "SCHEMA_VERSION",
+    "Span",
+    "active",
+    "append_sample",
+    "count",
+    "enabled",
+    "event",
+    "observe",
+    "percentile",
+    "profile",
+    "read_history",
+    "record_accuracy",
+    "reset",
+    "span",
+]
+
+ENV_SWITCH = "REPRO_OBS"
+_OFF = frozenset(("", "0", "false", "off", "no"))
+
+# One slot each so toggles are atomic swaps; the lock only guards lazy
+# construction of the env-driven recorder (profile() swaps are per-call).
+# ``env_off`` caches the REPRO_OBS decision (environ lookups are too slow
+# for per-call-site checks); :func:`reset` re-reads it.
+_state = {"override": None, "env_recorder": None, "env_off": None}
+_state_lock = threading.Lock()
+
+
+def active() -> Optional[Recorder]:
+    """The recorder every module-level helper routes to, or None when off.
+
+    A :func:`profile` scope (or :func:`enable`) wins over the environment;
+    otherwise ``REPRO_OBS`` decides — read once per process (:func:`reset`
+    re-reads, for tests) — with the env-driven recorder built lazily on
+    first use (JSONL/history sinks from ``REPRO_OBS_JSONL`` /
+    ``REPRO_OBS_HISTORY``).
+    """
+    rec = _state["override"]
+    if rec is not None:
+        return rec
+    off = _state["env_off"]
+    if off is None:
+        off = os.environ.get(ENV_SWITCH, "0").strip().lower() in _OFF
+        _state["env_off"] = off
+    if off:
+        return None
+    rec = _state["env_recorder"]
+    if rec is None:
+        with _state_lock:
+            rec = _state["env_recorder"]
+            if rec is None:
+                rec = Recorder(
+                    jsonl_path=os.environ.get("REPRO_OBS_JSONL") or None,
+                    history_path=default_history_path())
+                _state["env_recorder"] = rec
+    return rec
+
+
+def enabled() -> bool:
+    return active() is not None
+
+
+def enable(recorder: Optional[Recorder] = None) -> Recorder:
+    """Force recording on for this process (until :func:`disable`)."""
+    rec = recorder if recorder is not None else Recorder()
+    _state["override"] = rec
+    return rec
+
+
+def disable() -> None:
+    """Drop any programmatic override (the env switch still applies)."""
+    _state["override"] = None
+
+
+def reset() -> None:
+    """Forget the override, the env-driven recorder, and the cached
+    ``REPRO_OBS`` decision (test isolation / env re-reads)."""
+    _state["override"] = None
+    _state["env_off"] = None
+    rec = _state["env_recorder"]
+    _state["env_recorder"] = None
+    if rec is not None:
+        rec.close()
+
+
+@contextlib.contextmanager
+def profile(jsonl_path: Optional[str] = None,
+            history_path: Optional[str] = None):
+    """Record everything inside the scope into a fresh :class:`Recorder`.
+
+    The yielded recorder becomes the process-global target for the scope
+    (nesting restores the previous one), so ``with repro.obs.profile() as
+    rec:`` observes any instrumented code it wraps regardless of
+    ``REPRO_OBS``.  Sinks default to in-memory only — pass ``jsonl_path`` /
+    ``history_path`` to persist.
+    """
+    rec = Recorder(jsonl_path=jsonl_path, history_path=history_path)
+    prev = _state["override"]
+    _state["override"] = rec
+    try:
+        yield rec
+    finally:
+        _state["override"] = prev
+        rec.close()
+
+
+# -- module-level instrumentation helpers (no-ops when disabled) -------------
+
+def span(name: str, **attrs):
+    """A timed-region context manager, or the shared no-op when disabled."""
+    rec = active()
+    return NULL_SPAN if rec is None else rec.span(name, **attrs)
+
+
+def event(name: str, **attrs) -> None:
+    rec = active()
+    if rec is not None:
+        rec.event(name, **attrs)
+
+
+def count(name: str, n: int = 1) -> None:
+    rec = active()
+    if rec is not None:
+        rec.count(name, n)
+
+
+def observe(name: str, value: float) -> None:
+    rec = active()
+    if rec is not None:
+        rec.observe(name, value)
+
+
+def record_accuracy(**fields) -> Optional[dict]:
+    rec = active()
+    return None if rec is None else rec.record_accuracy(**fields)

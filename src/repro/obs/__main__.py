@@ -1,0 +1,7 @@
+"""``python -m repro.obs`` — CLI front of the flight recorder (report.py)."""
+
+import sys
+
+from repro.obs.report import main
+
+sys.exit(main())

@@ -1,0 +1,76 @@
+"""Accuracy history: a schema-versioned JSONL ledger of model-accuracy samples.
+
+The paper's Table III prints one measured/estimated ratio per configuration,
+measured once on the bench.  Here every instrumented run appends a sample —
+keyed by the tuning cache key, so samples aggregate per (program, grid,
+chip, backend@version, decomposition) exactly like tuned plans do — and the
+file grows into the dataset the measured-mesh calibration layer (ROADMAP
+item 3) will fit per-chip correction factors from.
+
+One JSON object per line::
+
+    {"schema": 1, "unix_time": ..., "key": <tuning cache key>,
+     "backend": ..., "backend_version": ..., "chip": ..., "grid_shape": [...],
+     "block_shape": [...], "par_time": ..., "decomp": ... | null,
+     "predicted_gbps": ..., "achieved_gbps": ..., "model_accuracy": ...,
+     "source": "executor.run" | "tuning.measure" | ...}
+
+Appends are line-atomic on POSIX (single ``write`` of one line, O_APPEND),
+so concurrent writers interleave lines but never corrupt them; readers skip
+lines that fail to parse or carry a different schema.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List, Optional
+
+#: Bump when the sample fields change meaning; readers skip other schemas.
+SCHEMA_VERSION = 1
+
+ENV_HISTORY_PATH = "REPRO_OBS_HISTORY"
+DEFAULT_HISTORY_PATH = os.path.join("obs", "history.jsonl")
+
+
+def default_history_path() -> Optional[str]:
+    """History file the env-driven recorder appends to (None = disabled)."""
+    return os.environ.get(ENV_HISTORY_PATH, DEFAULT_HISTORY_PATH) or None
+
+
+def make_sample(fields: dict) -> dict:
+    """Stamp one accuracy sample with schema + wall time."""
+    sample = {"schema": SCHEMA_VERSION, "unix_time": int(time.time())}
+    sample.update(fields)
+    return sample
+
+
+def append_sample(path: str, sample: dict) -> None:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    line = json.dumps(sample, default=str, sort_keys=True) + "\n"
+    with open(path, "a") as f:
+        f.write(line)
+
+
+def read_history(path: str, schema: int = SCHEMA_VERSION) -> List[dict]:
+    """Every parseable sample of the given schema (missing file -> [])."""
+    out: List[dict] = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    sample = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if isinstance(sample, dict) and \
+                        sample.get("schema") == schema:
+                    out.append(sample)
+    except FileNotFoundError:
+        pass
+    return out

@@ -31,6 +31,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import jax
 
+from repro import obs
 from repro.analysis.hw import TpuChip, V5E
 from repro.core import reference as ref
 from repro.core.program import as_program
@@ -46,6 +47,8 @@ class Measurement:
     ranked: RankedCandidate
     ok: bool
     error: Optional[str] = None
+    error_class: Optional[str] = None  # exception type name of the skip
+    stage: Optional[str] = None        # where it died: lower/warmup/timed
     us_per_superstep: float = 0.0
     achieved_gcells: float = 0.0   # useful GCell/s
     achieved_gbps: float = 0.0     # effective GB/s (Table I bytes/cell)
@@ -58,7 +61,8 @@ class Measurement:
 
     def describe(self) -> str:
         if not self.ok:
-            return f"{self.candidate.describe()} -> FAILED: {self.error}"
+            where = f" at {self.stage}" if self.stage else ""
+            return f"{self.candidate.describe()} -> FAILED{where}: {self.error}"
         return (f"{self.candidate.describe()} -> "
                 f"{self.achieved_gbps:.3f} GB/s measured vs "
                 f"{self.ranked.predicted_gbps:.3f} est "
@@ -66,9 +70,17 @@ class Measurement:
                 f"{self.us_per_superstep:.0f} us/superstep)")
 
 
-def _failed(ranked: RankedCandidate, err: BaseException) -> Measurement:
+def _failed(ranked: RankedCandidate, err: BaseException,
+            stage: str) -> Measurement:
+    cls = type(err).__name__
+    obs.count("tuning.measure_skip")
+    obs.count(f"tuning.measure_skip.{cls}")
+    obs.event("measure_skip", candidate=ranked.candidate.describe(),
+              backend=f"{ranked.candidate.backend}"
+                      f"@{ranked.candidate.backend_version}",
+              stage=stage, error_class=cls, error=str(err))
     return Measurement(ranked=ranked, ok=False,
-                       error=f"{type(err).__name__}: {err}")
+                       error=f"{cls}: {err}", error_class=cls, stage=stage)
 
 
 def measure_candidate(
@@ -103,20 +115,23 @@ def measure_candidate(
     prog = as_program(program)
     cand = ranked.candidate
     steps = cand.plan.par_time * supersteps
+    stage = "lower"
     try:
         lowered = lower(prog, cand.plan, backend=cand.backend,
                         version=cand.backend_version)
         grid = ref.random_grid(prog, grid_shape, seed=seed)
         fn = jax.jit(lambda g: lowered.run(g, steps))
+        stage = "warmup"    # first call = trace + compile
         for _ in range(warmup):
             jax.block_until_ready(fn(grid))
+        stage = "timed"
         t0 = time.perf_counter()
         for _ in range(reps):
             out = fn(grid)
         jax.block_until_ready(out)
         dt = (time.perf_counter() - t0) / (reps * supersteps)
     except Exception as e:  # lowering/compile/runtime failure: skip, not crash
-        return _failed(ranked, e)
+        return _failed(ranked, e, stage)
 
     useful_cells = math.prod(grid_shape) * cand.plan.par_time
     gcells = useful_cells / dt / 1e9

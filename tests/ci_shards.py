@@ -30,6 +30,7 @@ SHARDS = {
         "tests/test_properties.py",
     ],
     "models-tuning": [
+        "tests/test_obs.py",
         "tests/test_tuning.py",
         "tests/test_perf_model.py",
         "tests/test_roofline_parser.py",

@@ -370,7 +370,7 @@ def test_server_shares_executables_across_step_counts():
 # ---- package surface + audit -----------------------------------------------
 
 def test_public_surface_and_version():
-    assert repro.__version__ == "0.2.0"
+    assert repro.__version__ == "0.3.0"
     for name in repro.__all__:
         assert getattr(repro, name, None) is not None, name
     from repro import executor
