@@ -79,6 +79,21 @@ def _acc_fields(cs, cells_per_s: float) -> str:
             f"model_accuracy={acc:.4f}")
 
 
+def _verify_ms(prog, plan, shape, reps=10) -> float:
+    """Best-of-``reps`` wall time of the static pre-flight (repro.lint's
+    verifier) for one compile configuration, in milliseconds.  Reported
+    per row so the artifact proves the fail-fast check stays sub-1ms —
+    pure integer arithmetic, no tracing (guarded in tests/test_lint.py)."""
+    from repro.lint import verify
+
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        verify(prog, plan, shape)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
 def _tuned_plan(prog, grid_shape) -> BlockPlan:
     """Cached model-guided plan for this bench grid (zero search cost after
     the first call thanks to the plan cache)."""
@@ -197,6 +212,7 @@ def run(use_tuned=None, smoke=None):
             _with_bytes(
                 f"mcells_per_s={mcells:.1f};"
                 f"tb_speedup_vs_pt1={t1 / t2:.2f}x;"
+                f"verify_ms={_verify_ms(prog, plan2, shape):.3f};"
                 f"{_acc_fields(cs2, cells * steps / t2)}",
                 cs2.run, g)))
 

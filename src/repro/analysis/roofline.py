@@ -98,6 +98,75 @@ def _shape_dims(type_str: str) -> Tuple[int, ...]:
     return tuple(int(d) for d in dims.split(","))
 
 
+_PARAM_TYPE_RE = re.compile(r"[\w.\-]+:\s*([a-z0-9]+\[[\d,]*\])")
+_TYPE_RE = re.compile(r"[a-z0-9]+\[[\d,]*\]")
+_ENTRY_RE = re.compile(r"ENTRY\s+%?[\w.\-]+\s*\((.*)\)\s*->\s*(.*?)\s*\{?\s*$")
+_ALIAS_PAIR_RE = re.compile(
+    r"\{([\d,\s]*)\}:\s*\((\d+),\s*\{([\d,\s]*)\}(?:,\s*([\w-]+))?\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class AliasPair:
+    """One ``input_output_alias`` entry from an HLO module header.
+
+    ``output_index`` indexes into the entry's (possibly tuple) result,
+    ``param_number`` is the aliased entry parameter, ``param_index`` its
+    tuple sub-index (usually empty).  ``kind`` is XLA's may/must-alias.
+    """
+
+    output_index: Tuple[int, ...]
+    param_number: int
+    param_index: Tuple[int, ...]
+    kind: str = "may-alias"
+
+
+def _index_tuple(text: str) -> Tuple[int, ...]:
+    return tuple(int(x) for x in text.replace(" ", "").split(",") if x)
+
+
+def parse_input_output_aliases(hlo_text: str) -> List[AliasPair]:
+    """Donation pairs from the module header's ``input_output_alias={...}``.
+
+    Returns ``[]`` for modules without donation (XLA:CPU never records
+    any — buffer donation is unimplemented there, which is exactly why
+    ``repro.lint`` audits dumped artifacts instead of trusting the run).
+    """
+    m = re.search(r"input_output_alias=\{", hlo_text)
+    if not m:
+        return []
+    depth, i = 1, m.end()
+    while i < len(hlo_text) and depth:
+        if hlo_text[i] == "{":
+            depth += 1
+        elif hlo_text[i] == "}":
+            depth -= 1
+        i += 1
+    block = hlo_text[m.end():i - 1]
+    return [AliasPair(_index_tuple(pm.group(1)), int(pm.group(2)),
+                      _index_tuple(pm.group(3)), pm.group(4) or "may-alias")
+            for pm in _ALIAS_PAIR_RE.finditer(block)]
+
+
+def entry_signature(hlo_text: str) -> Tuple[List[str], List[str]]:
+    """(param types, result types) of the ENTRY computation, layout-stripped.
+
+    Each element is a bare ``dtype[dims]`` string (``"f32[4096,4096]"``).
+    A tuple-typed result is flattened in index order, so ``results[i]`` is
+    the type an ``AliasPair`` with ``output_index == (i,)`` refers to.
+    """
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s.startswith("ENTRY"):
+            continue
+        em = _ENTRY_RE.match(s)
+        if not em:
+            continue
+        params = _PARAM_TYPE_RE.findall(em.group(1))
+        results = _TYPE_RE.findall(em.group(2))
+        return params, results
+    return [], []
+
+
 def _result_bytes_all(rest: str) -> int:
     """Sum ALL shapes in the result type (handles tuple-typed whiles)."""
     opm = _OPCODE_RE.search(rest)

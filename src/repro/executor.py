@@ -68,6 +68,9 @@ from repro.core.perf_model import gbps_from_cells_per_s
 from repro.core.program import (ProgramCoeffs, StencilProgram, as_program,
                                 normalize_coeffs)
 from repro.kernels import common, ops
+from repro.lint.diagnostics import DiagnosticError
+from repro.lint.diagnostics import error as _diag
+from repro.lint.verify import check as _preflight
 from repro.tuning.cache import cache_key
 from repro.tuning.model_rank import RankedCandidate, predict, rank
 from repro.tuning.space import (Candidate, MeshDecomposition,
@@ -95,11 +98,14 @@ def _as_int(value) -> Optional[int]:
 
 
 def _check_steps(steps, context: str = "") -> int:
-    """Validate a step count: integral, >= 1."""
+    """Validate a step count: integral, >= 1 (RP102 on rejection)."""
     v = _as_int(steps)
     if v is None or v < 1:
-        raise ValueError(f"steps must be an int >= 1 (got {steps!r})"
-                         f"{context}")
+        raise DiagnosticError([_diag(
+            "RP102",
+            f"steps must be an int >= 1 (got {steps!r}){context}",
+            hint="run at least one time step; fractional or zero step "
+                 "counts have no executable")])
     return v
 
 
@@ -226,14 +232,18 @@ class Stencil:
             # floats — a (128.5, 512) grid must fail HERE, not at run()
             grid_shape = tuple(operator.index(s) for s in grid_shape)
         except TypeError:
-            raise ValueError(
-                f"grid_shape must be a sequence of ints (got {grid_shape!r})")
+            raise DiagnosticError([_diag(
+                "RP101",
+                f"grid_shape must be a sequence of ints (got {grid_shape!r})",
+                hint="pass the spatial extents, e.g. (4096, 4096)")])
         if len(grid_shape) != prog.ndim or any(s < 1 for s in grid_shape):
-            raise ValueError(
+            raise DiagnosticError([_diag(
+                "RP101",
                 f"grid_shape {grid_shape} does not describe a {prog.ndim}-D "
                 f"grid for this {prog.ndim}-D program (expected "
                 f"{prog.ndim} positive extents); a leading batch axis is "
-                f"declared via compile(batch=B), not in grid_shape")
+                f"declared via compile(batch=B), not in grid_shape",
+                hint=f"give exactly {prog.ndim} positive extents")])
         steps = _check_steps(
             steps,
             "; compile() pins the step count the executable is built for, "
@@ -241,10 +251,13 @@ class Stencil:
         if batch is not None:
             b = _as_int(batch)
             if b is None or b < 1:
-                raise ValueError(
+                raise DiagnosticError([_diag(
+                    "RP103",
                     f"batch must be None (unbatched) or an int >= 1 — the "
                     f"extent of the leading (B, *grid) axis of independent "
-                    f"grids (got {batch!r})")
+                    f"grids (got {batch!r})",
+                    hint="drop batch= for a single grid, or stack "
+                         "independent grids along a leading axis")])
             batch = b
 
         decomp_axes, n_devices = _normalize_devices(prog, devices)
@@ -252,17 +265,22 @@ class Stencil:
         name, version, traits = resolve_backend(backend, pipelined)
         pipelined = traits.pipelined
         if n_devices > 1 and not traits.local_kernel:
-            raise ValueError(
+            raise DiagnosticError([_diag(
+                "RP110",
                 f"backend {name!r} cannot run sharded (it declares no "
                 f"local_kernel trait — its lowering pads its own "
                 f"boundaries and cannot consume an exchanged halo); "
-                f"compile(devices={devices!r}) needs a pallas backend")
+                f"compile(devices={devices!r}) needs a pallas backend",
+                hint="drop devices= for this backend, or use a pallas "
+                     "backend for mesh runs")])
         if n_devices > len(jax.devices()):
-            raise ValueError(
+            raise DiagnosticError([_diag(
+                "RP110",
                 f"compile(devices={devices!r}) needs {n_devices} visible "
                 f"devices but jax sees {len(jax.devices())}; on a CPU host "
                 f"set XLA_FLAGS=--xla_force_host_platform_device_count="
-                f"{n_devices} before importing jax")
+                f"{n_devices} before importing jax",
+                hint="request at most the visible device count")])
 
         tuned = None
         if isinstance(plan, BlockPlan):
@@ -290,22 +308,20 @@ class Stencil:
                 decomp_axes = _pick_decomposition(
                     prog, resolved, grid_shape, n_devices, hw, name, version)
         else:
-            raise ValueError(
+            raise DiagnosticError([_diag(
+                "RP112",
                 f'plan must be "auto", "model", or a BlockPlan '
-                f"(got {plan!r})")
+                f"(got {plan!r})",
+                hint='use plan="auto" unless pinning a tuned BlockPlan')])
 
         if n_devices <= 1:
             decomp_axes = None
-        if decomp_axes is not None and not fits_shard(
-                resolved, MeshDecomposition(decomp_axes), grid_shape):
-            raise ValueError(
-                f"devices={decomp_axes} cannot take block="
-                f"{resolved.block_shape} par_time={resolved.par_time} on "
-                f"grid {grid_shape}: every sharded axis must divide the "
-                f"grid, the local extent must tile by the block, and the "
-                f"halo must stay shallower than the shard; pass "
-                f"devices=<count> or plan='auto' to search blocking and "
-                f"split together")
+        # fail-fast pre-flight: every tuner legality constraint re-checked
+        # statically (eq. 2 csize, the VMEM budget, per-shard halo bounds,
+        # dtype support) BEFORE any Pallas lowering — raises DiagnosticError
+        # with stable RP codes; warnings survive on CompiledStencil.preflight
+        preflight = _preflight(prog, resolved, grid_shape, hw,
+                               decomp=decomp_axes, pipelined=pipelined)
         cand = Candidate(
             plan=resolved, backend=name, backend_version=version,
             halo_aligned=halo_aligned(resolved.par_time, prog.halo_radius),
@@ -343,14 +359,11 @@ class Stencil:
             backend_version=version, decomp=decomp_axes, cost=cost,
             tuned=tuned, pipelined=pipelined, donate=donate,
             interpret=interpret, devices=n_devices, dist=dist,
-            lowered=lowered, hw=hw)
+            lowered=lowered, hw=hw, preflight=preflight)
 
 
-def _trace_delta(before: dict) -> dict:
-    """Per-entry-point retrace counts since the ``before`` snapshot."""
-    after = common.trace_counts()
-    return {k: v - before.get(k, 0) for k, v in after.items()
-            if v != before.get(k, 0)}
+#: back-compat alias — the counter diff now lives with the counters.
+_trace_delta = common.trace_delta
 
 
 def _normalize_devices(prog: StencilProgram, devices: Devices):
@@ -360,18 +373,25 @@ def _normalize_devices(prog: StencilProgram, devices: Devices):
     n = _as_int(devices)
     if n is not None:
         if n < 1:
-            raise ValueError(f"devices must be >= 1 (got {devices})")
+            raise DiagnosticError([_diag(
+                "RP110", f"devices must be >= 1 (got {devices})",
+                hint="pass a positive device count or drop devices=")])
         return None, n
     try:
         axes = tuple(operator.index(s) for s in devices)
     except TypeError:
-        raise ValueError(
+        raise DiagnosticError([_diag(
+            "RP110",
             f"devices must be None, an int device count, or a "
-            f"{prog.ndim}-tuple of shards per grid axis (got {devices!r})")
+            f"{prog.ndim}-tuple of shards per grid axis (got {devices!r})",
+            hint="an int searches every factorization; a tuple pins "
+                 "shards per axis")])
     if len(axes) != prog.ndim or any(s < 1 for s in axes):
-        raise ValueError(
+        raise DiagnosticError([_diag(
+            "RP110",
             f"devices {devices!r} must give one positive shard count per "
-            f"grid axis ({prog.ndim} of them)")
+            f"grid axis ({prog.ndim} of them)",
+            hint=f"give {prog.ndim} positive shard counts")])
     return axes, math.prod(axes)
 
 
@@ -388,13 +408,15 @@ def _pick_decomposition(program, plan: BlockPlan, grid_shape, n_devices: int,
                 enumerate_decompositions(program.ndim, n_devices, grid_shape)
                 if fits_shard(plan, dc, grid_shape)]
     if not feasible:
-        raise ValueError(
+        raise DiagnosticError([_diag(
+            "RP107",
             f"no feasible decomposition of {n_devices} devices over grid "
             f"{grid_shape} for block={plan.block_shape} "
             f"par_time={plan.par_time} (every split must divide the grid, "
             f"tile the local extent by the block, and keep the halo "
-            f"shallower than the shard); pass devices=<shards per axis> "
-            f"or let plan='auto' search blocking and split together")
+            f"shallower than the shard)",
+            hint="pass devices=<shards per axis> or let plan='auto' "
+                 "search blocking and split together")])
     aligned = halo_aligned(plan.par_time, program.halo_radius)
     cands = [Candidate(plan=plan, backend=backend, backend_version=version,
                        halo_aligned=aligned, decomp=dc) for dc in feasible]
@@ -420,7 +442,11 @@ class CompiledStencil:
                  cost: RankedCandidate, tuned, pipelined: bool, donate: bool,
                  interpret: Optional[bool], devices: int,
                  dist: Optional[DistributedStencil], lowered,
-                 hw: TpuChip = V5E):
+                 hw: TpuChip = V5E, preflight=None):
+        #: non-fatal pre-flight diagnostics (RP106 alignment, RP108
+        #: wrap-degenerate, RP113 overlap tax) the verifier attached at
+        #: compile time — errors never get here, they raise.
+        self.preflight = list(preflight or [])
         self.program = program
         self.hw = hw
         self.coeffs = coeffs
@@ -476,22 +502,28 @@ class CompiledStencil:
         spatial = len(self.grid_shape)
         if self.batch is None and grid.ndim == spatial + 1 \
                 and tuple(grid.shape[1:]) == self.grid_shape:
-            raise ValueError(
+            raise DiagnosticError([_diag(
+                "RP103",
                 f"this executable was compiled unbatched for grid "
                 f"{self.grid_shape} but got a batched grid of shape "
                 f"{tuple(grid.shape)}; compile(batch={grid.shape[0]}) to "
-                f"run a leading axis of independent grids")
+                f"run a leading axis of independent grids",
+                hint=f"recompile with batch={grid.shape[0]}")])
         if self.batch is not None and tuple(grid.shape) == self.grid_shape:
-            raise ValueError(
+            raise DiagnosticError([_diag(
+                "RP103",
                 f"this executable was compiled for batch={self.batch} "
                 f"grids of shape {self.grid_shape} but got a single "
                 f"unbatched grid {tuple(grid.shape)}; stack the grids "
-                f"(B, *grid) or compile(batch=None)")
-        raise ValueError(
+                f"(B, *grid) or compile(batch=None)",
+                hint="batch rank is pinned at compile time")])
+        raise DiagnosticError([_diag(
+            "RP101",
             f"grid shape {tuple(grid.shape)} does not match the compiled "
             f"{'batch=' + str(self.batch) + ' ' if self.batch else ''}"
             f"grid_shape {want}; compile() pins shapes so the executable "
-            f"cache stays exact — recompile for a different shape")
+            f"cache stays exact — recompile for a different shape",
+            hint=f"recompile for grid {tuple(grid.shape)}")])
 
     def run(self, grid, steps: Optional[int] = None):
         """Advance ``steps`` time steps (default: the compiled count).

@@ -96,6 +96,18 @@ def reset_trace_counts() -> None:
         _TRACE_COUNTS.clear()
 
 
+def trace_delta(before: Dict[str, int]) -> Dict[str, int]:
+    """Per-entry-point retrace counts since a ``trace_counts()`` snapshot.
+
+    The obs layer attaches this to compile/run spans, and
+    ``repro.lint.check_trace_budget`` turns a nonzero steady-state delta
+    into an RP203 recompile-hazard diagnostic.
+    """
+    after = trace_counts()
+    return {k: v - before.get(k, 0) for k, v in after.items()
+            if v != before.get(k, 0)}
+
+
 def batch_dims(program: StencilProgram, grid_ndim: int) -> int:
     """Number of leading batch axes on a grid: 0 (unbatched) or 1.
 

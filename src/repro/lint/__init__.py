@@ -1,0 +1,64 @@
+"""repro.lint — the pre-flight static verifier and repo linter.
+
+The paper's design space is fenced by hard legality constraints (eq. 2
+``csize > 0``, the eq. 4/5 on-chip memory budget, eq. 6 alignment, the
+per-shard halo bound) and its predecessor work shows what happens without
+a static checker: illegal configurations die hours later at synthesis
+time with unhelpful errors.  Our port has the same failure mode — an
+illegal (program, plan, decomposition) surfaces as a deep Pallas lowering
+traceback or a silently-wrong wrap DMA.  This package checks everything
+checkable *without executing anything*, as three passes over one
+diagnostic engine with stable codes:
+
+``RP1xx`` — plan/program legality (:func:`verify`): every constraint the
+    tuner prunes on, re-checked statically for arbitrary caller input.
+    ``Stencil.compile`` runs it as a fail-fast pre-flight, so users get
+    "RP104: par_time=6 shrinks csize to 0 on axis 1" instead of a Mosaic
+    traceback.
+
+``RP2xx`` — lowered-artifact hazards (:func:`analyze_artifact`): audits
+    HLO text of a compiled executable for donation/aliasing hazards
+    (shape/dtype-inconsistent ``input_output_alias`` pairs, one buffer
+    donated twice), unintended f64 promotion, and — via
+    :func:`check_trace_budget` — recompile hazards against the
+    O(1)-compile contract.
+
+``RP3xx`` — codebase rules (:func:`lint_paths`, AST-based): legacy entry
+    points outside the shims (absorbing ``tools/deprecation_audit.py``),
+    wall-clock timing of async dispatches without ``block_until_ready``,
+    direct ``pl.pallas_call`` outside ``kernels/``, and Python ``if`` on
+    tracer-valued expressions in kernel bodies.
+
+CLI::
+
+    python -m repro.lint src tests                 # codebase rules
+    python -m repro.lint check-artifact dump.hlo   # artifact audit
+    python -m repro.lint codes                     # the RP-code table
+
+Every :class:`Diagnostic` carries a severity, a location, and a fix hint;
+:class:`DiagnosticError` (a ``ValueError``) is how the executor surfaces
+fatal ones.  With the flight recorder on (``REPRO_OBS=1``), every pass
+bumps ``lint.diagnostics`` counters so reports show verifier activity.
+"""
+
+from __future__ import annotations
+
+from repro.lint.artifact import analyze_artifact, check_trace_budget
+from repro.lint.diagnostics import (CODES, Diagnostic, DiagnosticError,
+                                    Severity, emit, raise_on_error)
+from repro.lint.engine import lint_paths
+from repro.lint.verify import check, verify
+
+__all__ = [
+    "CODES",
+    "Diagnostic",
+    "DiagnosticError",
+    "Severity",
+    "analyze_artifact",
+    "check",
+    "check_trace_budget",
+    "emit",
+    "lint_paths",
+    "raise_on_error",
+    "verify",
+]

@@ -1,0 +1,69 @@
+"""CLI for the static verifier and linter.
+
+    python -m repro.lint src tests                  # codebase rules (RP3xx)
+    python -m repro.lint src --json diag.json       # + machine-readable dump
+    python -m repro.lint check-artifact dump.hlo \\
+        [--dtype float32] [--json diag.json]        # artifact audit (RP2xx)
+    python -m repro.lint codes                      # the RP-code registry
+
+Exit status 1 when any ERROR-severity diagnostic fires, 0 otherwise
+(warnings print but never fail the run) — the contract the CI lint job
+and ``tests/test_lint.py``'s repo-is-clean test rely on.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.lint.artifact import analyze_artifact
+from repro.lint.diagnostics import CODES, Diagnostic
+from repro.lint.engine import lint_paths, to_json
+
+
+def _render(diagnostics: List[Diagnostic], label: str,
+            json_path: Optional[str]) -> int:
+    if json_path:
+        with open(json_path, "w") as fh:
+            fh.write(to_json(diagnostics))
+    for d in diagnostics:
+        print(f"{d.severity.value}: {d.describe()}")
+    errors = sum(1 for d in diagnostics if d.is_error)
+    warnings = len(diagnostics) - errors
+    if errors:
+        print(f"{label}: {errors} error(s), {warnings} warning(s)",
+              file=sys.stderr)
+        return 1
+    print(f"{label} OK: 0 errors, {warnings} warning(s)")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "codes":
+        for code in sorted(CODES):
+            print(f"{code}  {CODES[code]}")
+        return 0
+    if argv and argv[0] == "check-artifact":
+        p = argparse.ArgumentParser(prog="repro.lint check-artifact")
+        p.add_argument("hlo", help="HLO text file (compiled.as_text() dump)")
+        p.add_argument("--dtype", default=None,
+                       help="expected program dtype (f64 becomes an error)")
+        p.add_argument("--json", default=None, help="write diagnostics JSON")
+        ns = p.parse_args(argv[1:])
+        with open(ns.hlo, encoding="utf-8") as fh:
+            text = fh.read()
+        diags = analyze_artifact(text, expect_dtype=ns.dtype)
+        return _render(diags, f"artifact audit of {ns.hlo}", ns.json)
+
+    p = argparse.ArgumentParser(prog="repro.lint")
+    p.add_argument("paths", nargs="+", help="files/trees to lint")
+    p.add_argument("--json", default=None, help="write diagnostics JSON")
+    ns = p.parse_args(argv)
+    diags = lint_paths(ns.paths)
+    return _render(diags, f"lint of {' '.join(ns.paths)}", ns.json)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,137 @@
+"""The lowered-artifact analyzer: RP2xx hazards in compiled HLO text.
+
+The zero-copy superstep carry lives or dies by buffer donation: every
+``input_output_aliases`` pair we declare must pair a parameter and an
+output of identical shape+dtype, and no input may be donated twice —
+XLA:CPU silently ignores donation (it is unimplemented there), so a
+mis-declared alias never fails in our CI environment and only corrupts
+data on real TPUs.  :func:`analyze_artifact` audits dumped HLO text
+(``compiled.as_text()`` or an ``--xla_dump_to`` file) for those hazards,
+plus unintended f64 promotion; :func:`check_trace_budget` turns a
+trace-count delta (``kernels.common.trace_delta``) into an RP203
+recompile-hazard diagnostic when it exceeds the O(1)-compile contract.
+
+CLI: ``python -m repro.lint check-artifact dump.hlo [--dtype float32]``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.roofline import (AliasPair, entry_signature,
+                                     parse_input_output_aliases)
+from repro.lint.diagnostics import Diagnostic, error, warning
+
+#: program dtype name -> the HLO primitive type it lowers to.
+_HLO_DTYPE = {"float32": "f32", "bfloat16": "bf16", "float16": "f16",
+              "float64": "f64"}
+
+
+def _dtype_of(type_str: str) -> str:
+    return type_str.split("[", 1)[0]
+
+
+def analyze_artifact(hlo_text: str, *,
+                     expect_dtype: Optional[str] = None) -> List[Diagnostic]:
+    """Audit one compiled module's HLO text; returns every RP2xx finding.
+
+    RP201 (error)   — an ``input_output_alias`` pair whose output and
+                      donated parameter differ in shape or dtype, or name
+                      a parameter/output that does not exist.
+    RP204 (error)   — one parameter buffer donated to several outputs.
+    RP202           — ``f64`` anywhere in the module: an error when
+                      ``expect_dtype`` says the program is not float64
+                      (accidental promotion doubles every byte budget),
+                      a warning when no expectation is given.
+    """
+    out: List[Diagnostic] = []
+    params, results = entry_signature(hlo_text)
+    aliases = parse_input_output_aliases(hlo_text)
+
+    donors: Dict[Tuple[int, Tuple[int, ...]], AliasPair] = {}
+    for a in aliases:
+        out_type = _lookup_output(results, a.output_index)
+        if a.param_number >= len(params) or a.param_number < 0:
+            out.append(error(
+                "RP201",
+                f"alias {{{_fmt(a.output_index)}}} donates parameter "
+                f"{a.param_number}, but the entry has only "
+                f"{len(params)} parameter(s)",
+                hint="the input_output_aliases list indexes the flattened "
+                     "argument tuple — recount after adding/removing "
+                     "kernel operands"))
+            continue
+        if out_type is None:
+            out.append(error(
+                "RP201",
+                f"alias {{{_fmt(a.output_index)}}} names a missing output "
+                f"(entry returns {len(results)} value(s))",
+                hint="output indices follow the flattened result tuple"))
+            continue
+        in_type = params[a.param_number]
+        if in_type != out_type:
+            out.append(error(
+                "RP201",
+                f"alias output {{{_fmt(a.output_index)}}} is {out_type} "
+                f"but donated parameter {a.param_number} is {in_type}",
+                hint="donation reuses the input buffer in place; shapes "
+                     "and dtypes must match exactly or XLA copies (or, "
+                     "off CPU, corrupts) — align the ping-pong carry "
+                     "shapes"))
+        key = (a.param_number, a.param_index)
+        if key in donors:
+            out.append(error(
+                "RP204",
+                f"parameter {a.param_number} is donated to outputs "
+                f"{{{_fmt(donors[key].output_index)}}} and "
+                f"{{{_fmt(a.output_index)}}}",
+                hint="a buffer can back one output only; drop one pair "
+                     "or double-buffer the carry"))
+        else:
+            donors[key] = a
+
+    if "f64[" in hlo_text:
+        expected_hlo = _HLO_DTYPE.get(expect_dtype or "", None)
+        msg = ("module contains f64 values"
+               + (f" but the program dtype is {expect_dtype}"
+                  if expect_dtype else ""))
+        hint = ("a Python float/int leaking into jnp ops under "
+                "jax_enable_x64, or an un-cast literal, promotes the "
+                "whole chain; cast taps/constants to the program dtype")
+        if expected_hlo is not None and expected_hlo != "f64":
+            out.append(error("RP202", msg, hint=hint))
+        elif expect_dtype is None:
+            out.append(warning("RP202", msg, hint=hint))
+    return out
+
+
+def check_trace_budget(delta: int, budget: int, *,
+                       context: str = "run") -> List[Diagnostic]:
+    """RP203 when a trace-count delta breaks the O(1)-compile contract.
+
+    ``delta`` is what ``kernels.common.trace_delta`` measured around the
+    region; ``budget`` is how many fresh kernel traces the region is
+    allowed (steady-state loops budget 0).
+    """
+    if delta <= budget:
+        return []
+    return [error(
+        "RP203",
+        f"{context} traced {delta} fresh kernel(s) against a budget of "
+        f"{budget} — every extra trace is a recompile in steady state",
+        hint="a Python value that changes per call (shape, step count, "
+             "non-hashable static arg) is baked into the trace; hoist it "
+             "to an operand or pin it")]
+
+
+def _lookup_output(results: List[str], index: Tuple[int, ...]
+                   ) -> Optional[str]:
+    if not index:
+        return results[0] if len(results) == 1 else None
+    if len(index) == 1 and 0 <= index[0] < len(results):
+        return results[index[0]]
+    return None
+
+
+def _fmt(index: Tuple[int, ...]) -> str:
+    return ",".join(map(str, index))

@@ -1,0 +1,171 @@
+"""The diagnostic engine: stable codes, severities, locations, fix hints.
+
+Every check in the package — the plan/program verifier (RP1xx), the
+lowered-artifact analyzer (RP2xx), and the codebase rules (RP3xx) — emits
+:class:`Diagnostic` records through this one vocabulary, so the executor,
+the CLI, and CI all render and count them identically.  Codes are stable
+API: tests assert on them, users grep for them, and the CODES table below
+is the registry DESIGN.md §11 documents.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional, Sequence
+
+from repro import obs
+
+
+class Severity(enum.Enum):
+    """How fatal a diagnostic is.
+
+    ERROR   — the configuration/artifact/code is illegal; pre-flight
+              callers (``Stencil.compile``, the CLI) fail fast on these.
+    WARNING — legal but hazardous or slow (unaligned windows, the
+              wrap-degenerate fallback, extreme overlap tax); reported
+              and counted, never fatal.
+    INFO    — advisory context attached to a pass.
+    """
+
+    ERROR = "error"
+    WARNING = "warning"
+    INFO = "info"
+
+
+#: The registry of stable diagnostic codes.  RP1xx = plan/program
+#: legality, RP2xx = lowered-artifact hazards, RP3xx = codebase rules.
+#: A code's summary here is the one-line contract; the emitted message
+#: carries the concrete numbers and the fix hint.
+CODES = {
+    # -- RP1xx: plan/program legality (the verifier) --------------------------
+    "RP101": "grid shape does not describe the program's spatial rank",
+    "RP102": "step count must be an integer >= 1",
+    "RP103": "batch must be None or an integer >= 1 (and match at run)",
+    "RP104": "eq. 2 violation: par_time shrinks csize to <= 0 on some axis",
+    "RP105": "eq. 4/5 violation: kernel VMEM scratch exceeds the chip budget",
+    "RP106": "eq. 6 advisory: streamed window is not lane/sublane aligned",
+    "RP107": "decomposition infeasible: shard/divisibility/halo bound broken",
+    "RP108": "wrap-degenerate periodic axis routes through the re-pad "
+             "fallback",
+    "RP109": "program dtype outside the kernels' supported set",
+    "RP110": "device placement invalid for this backend/host",
+    "RP111": "plan block rank does not match the program rank",
+    "RP112": "plan selector must be \"auto\", \"model\", or a BlockPlan",
+    "RP113": "overlap-tax advisory: useful fraction at or below the "
+             "planner floor",
+    # -- RP2xx: lowered-artifact hazards (the analyzer) -----------------------
+    "RP201": "input_output_alias pair is shape/dtype-inconsistent",
+    "RP202": "unintended f64 promotion in the lowered module",
+    "RP203": "recompile hazard: trace-count delta exceeds the O(1)-compile "
+             "budget",
+    "RP204": "donation hazard: one input buffer aliased by multiple outputs",
+    # -- RP3xx: codebase rules (the AST linter) -------------------------------
+    "RP300": "file cannot be parsed (syntax error)",
+    "RP301": "legacy stencil entry point outside the shims "
+             "(missing # legacy-ok)",
+    "RP302": "wall-clock timing of .run(...) without block_until_ready",
+    "RP303": "direct pl.pallas_call outside src/repro/kernels/",
+    "RP304": "Python if/while on a tracer-valued expression in a kernel "
+             "body",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding: a stable code, severity, location, message, fix hint.
+
+    ``path``/``line`` locate codebase findings (``line`` is 1-based);
+    plan-verifier findings locate by ``axis`` instead, artifact findings
+    by HLO output index.  ``describe()`` is the one rendering every
+    consumer (CLI, DiagnosticError, CI summaries) uses.
+    """
+
+    code: str
+    message: str
+    severity: Severity = Severity.ERROR
+    hint: str = ""
+    path: Optional[str] = None
+    line: Optional[int] = None
+
+    def __post_init__(self):
+        if self.code not in CODES:
+            raise ValueError(f"unknown diagnostic code {self.code!r}; "
+                             f"register it in repro.lint.diagnostics.CODES")
+
+    @property
+    def is_error(self) -> bool:
+        return self.severity is Severity.ERROR
+
+    def describe(self) -> str:
+        loc = ""
+        if self.path is not None:
+            loc = f"{self.path}:{self.line}: " if self.line is not None \
+                else f"{self.path}: "
+        hint = f" (fix: {self.hint})" if self.hint else ""
+        return f"{loc}{self.code}: {self.message}{hint}"
+
+    def to_json(self) -> dict:
+        return {
+            "code": self.code,
+            "severity": self.severity.value,
+            "message": self.message,
+            "hint": self.hint,
+            "path": self.path,
+            "line": self.line,
+        }
+
+
+class DiagnosticError(ValueError):
+    """A fatal pre-flight rejection carrying its structured diagnostics.
+
+    Subclasses ``ValueError`` so every caller (and test) that caught the
+    executor's historical ad-hoc ``ValueError`` keeps working; the message
+    now leads with the stable RP code and ends with the fix hint.
+    """
+
+    def __init__(self, diagnostics: Sequence[Diagnostic]):
+        self.diagnostics: List[Diagnostic] = list(diagnostics)
+        super().__init__("; ".join(d.describe() for d in self.diagnostics))
+
+
+def emit(diagnostics: Sequence[Diagnostic], source: str) -> None:
+    """Count diagnostics through the flight recorder (no-op when off).
+
+    ``lint.diagnostics`` totals every finding; per-severity and per-code
+    counters let ``python -m repro.obs report`` show which checks fire.
+    """
+    if not diagnostics:
+        return
+    rec = obs.active()
+    if rec is None:
+        return
+    rec.count("lint.diagnostics", len(diagnostics))
+    for d in diagnostics:
+        rec.count(f"lint.{source}.{d.severity.value}")
+        rec.count(f"lint.code.{d.code}")
+
+
+def raise_on_error(diagnostics: Sequence[Diagnostic],
+                   source: str = "verify") -> List[Diagnostic]:
+    """Emit counters, then raise :class:`DiagnosticError` on any ERROR.
+
+    Returns the (possibly warning-only) list for callers that want to
+    attach it to their result.
+    """
+    diags = list(diagnostics)
+    emit(diags, source)
+    errors = [d for d in diags if d.is_error]
+    if errors:
+        raise DiagnosticError(errors)
+    return diags
+
+
+def error(code: str, message: str, hint: str = "", **loc) -> Diagnostic:
+    return Diagnostic(code=code, message=message, hint=hint,
+                      severity=Severity.ERROR, **loc)
+
+
+def warning(code: str, message: str, hint: str = "", **loc) -> Diagnostic:
+    return Diagnostic(code=code, message=message, hint=hint,
+                      severity=Severity.WARNING, **loc)

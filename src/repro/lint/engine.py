@@ -1,0 +1,70 @@
+"""Drive the RP3xx rules over files and trees; render and count results.
+
+:func:`lint_paths` is the library entry the CLI and tests share: walk the
+given files/directories, run :func:`repro.lint.rules.lint_source` on each
+``.py`` file (a file that fails to parse yields RP300 and nothing else),
+bump the flight-recorder counters, and return every diagnostic sorted by
+location.  JSON serialization feeds the CI artifact upload.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterable, List, Sequence
+
+from repro.lint.diagnostics import Diagnostic, emit
+from repro.lint.rules import lint_source
+
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", ".ruff_cache",
+              "build", "dist"}
+
+
+def iter_python_files(paths: Sequence[str]) -> Iterable[str]:
+    """Expand files/directories into a deterministic .py file sequence."""
+    for path in paths:
+        if os.path.isfile(path):
+            yield path
+            continue
+        for dirpath, dirnames, filenames in os.walk(path):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in _SKIP_DIRS
+                                 and not d.startswith("."))
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def lint_paths(paths: Sequence[str]) -> List[Diagnostic]:
+    """Run every codebase rule over the given files/trees.
+
+    Missing paths are reported loudly (RP300 against the path itself)
+    rather than skipped — a renamed tree must not pass vacuously, same
+    policy as the deprecation audit it absorbed.
+    """
+    out: List[Diagnostic] = []
+    for path in paths:
+        if not os.path.exists(path):
+            out.append(Diagnostic(
+                code="RP300",
+                message="path does not exist — a renamed tree must fail "
+                        "loudly, not pass vacuously",
+                hint="fix the lint invocation (CI: .github/workflows/"
+                     "ci.yml, lint job)",
+                path=path))
+    for path in iter_python_files([p for p in paths if os.path.exists(p)]):
+        with open(path, encoding="utf-8") as fh:
+            source = fh.read()
+        out.extend(lint_source(path, source))
+    out.sort(key=lambda d: (d.path or "", d.line or 0, d.code))
+    emit(out, source="rules")
+    return out
+
+
+def to_json(diagnostics: Sequence[Diagnostic]) -> str:
+    """The CI artifact format: a stable JSON document, errors counted."""
+    return json.dumps({
+        "diagnostics": [d.to_json() for d in diagnostics],
+        "errors": sum(1 for d in diagnostics if d.is_error),
+        "total": len(diagnostics),
+    }, indent=1)

@@ -1,0 +1,328 @@
+"""The RP3xx codebase rules: AST checks for the repo's hot-path foot-guns.
+
+Each rule encodes a failure mode this codebase has actually hit (or a
+class of bug JAX makes silent):
+
+RP301 — legacy entry points (``StencilEngine``/``ops.stencil_run``/
+        ``DistributedStencil`` and their import spellings) in the
+        user-facing trees.  Absorbs ``tools/deprecation_audit.py`` —
+        :func:`audit` reproduces its exact output contract and the old
+        script is now a thin shim over it.
+RP302 — wall-clock timing (two ``time.perf_counter``/``time.time`` reads)
+        around a ``.run(...)`` dispatch with no ``block_until_ready`` in
+        the same scope: JAX dispatch is async, so such a timer measures
+        enqueue latency, not the kernel.
+RP303 — ``pl.pallas_call`` outside ``src/repro/kernels/``: every Mosaic
+        lowering goes through the kernels package so the trace-count
+        accounting, interpret fallback, and VMEM budgeting stay in one
+        place.
+RP304 — Python ``if``/``while`` on a tracer-valued expression
+        (anything data-flowing from ``pl.program_id``/``pl.num_programs``)
+        inside a kernel body: that's a trace-time branch on a runtime
+        value — Pallas raises a ConcretizationTypeError at best, bakes in
+        one branch at worst.  Kernels use ``pl.when`` instead.
+
+Per-line opt-outs: ``# lint-ok: RP30x`` (or bare ``# lint-ok``); RP301
+also honors the audit's historical ``# legacy-ok`` marker.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterable, List, Optional, Sequence, Set
+
+from repro.lint.diagnostics import Diagnostic, error
+
+# ---- RP301: legacy entry points (ex tools/deprecation_audit.py) -------------
+
+#: call-site patterns of the deprecated entry points, plus the direct-import
+#: spellings that would dodge the attribute-call patterns.
+LEGACY = (
+    "StencilEngine(",
+    "ops.stencil_run(",
+    "DistributedStencil(",
+    "import stencil_run",
+    "from repro.core.temporal import",
+    "from repro.core.distributed import",
+)
+
+#: trees that must stay migrated to the front door (relative to repo root;
+#: src/repro internals and shim-pinning tests are deliberately out of
+#: scope — the shims live there).
+SCAN = (
+    "examples",
+    "benchmarks",
+    os.path.join("src", "repro", "configs"),
+    os.path.join("src", "repro", "launch", "stencil_serve.py"),
+    os.path.join("tests", "dist_scripts"),
+)
+
+#: per-line opt-out for deliberate shim exercises; must sit on the line.
+OPT_OUT = "# legacy-ok"
+
+LINT_OK = "# lint-ok"
+
+#: timing reads whose difference is a wall-clock duration.
+_CLOCKS = {"perf_counter", "perf_counter_ns", "monotonic", "monotonic_ns",
+           "time"}
+#: names that seed tracer taint when called (any base object, usually pl).
+_TRACER_SOURCES = {"program_id", "num_programs"}
+#: the one tree allowed to call pl.pallas_call directly.
+_KERNELS_TREE = ("src", "repro", "kernels")
+
+
+def audit(root: str) -> List[str]:
+    """-> ["path:line: offending source", ...] — the deprecation audit.
+
+    Exact output contract of the old ``tools/deprecation_audit.py`` (which
+    now delegates here): scans the :data:`SCAN` trees for :data:`LEGACY`
+    substrings, honors the per-line ``# legacy-ok`` opt-out, and reports a
+    renamed/missing tree loudly instead of passing vacuously.
+    """
+    bad: List[str] = []
+    for entry in SCAN:
+        top = os.path.join(root, entry)
+        if not os.path.exists(top):
+            bad.append(f"{entry}: scanned tree does not exist — update "
+                       f"SCAN in repro.lint.rules")
+            continue
+        files = [top] if os.path.isfile(top) else [
+            os.path.join(dirpath, fn)
+            for dirpath, _, fns in os.walk(top)
+            for fn in fns if fn.endswith(".py")]
+        for path in sorted(files):
+            with open(path, encoding="utf-8") as fh:
+                for lineno, line in enumerate(fh, 1):
+                    if (any(pat in line for pat in LEGACY)
+                            and OPT_OUT not in line):
+                        bad.append(f"{os.path.relpath(path, root)}:"
+                                   f"{lineno}: {line.strip()}")
+    return bad
+
+
+# ---- shared AST helpers -----------------------------------------------------
+
+def _attr_name(func: ast.expr) -> Optional[str]:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _mentions(node: ast.AST, name: str) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and n.id == name:
+            return True
+        if isinstance(n, ast.Attribute) and n.attr == name:
+            return True
+    return False
+
+
+def _opted_out(source_lines: Sequence[str], lineno: int, code: str) -> bool:
+    if not 1 <= lineno <= len(source_lines):
+        return False
+    line = source_lines[lineno - 1]
+    if f"{LINT_OK}: {code}" in line or line.rstrip().endswith(LINT_OK):
+        return True
+    return code == "RP301" and OPT_OUT in line
+
+
+def _scopes(tree: ast.Module) -> Iterable[ast.AST]:
+    """The module's statement scopes: each function, plus the module body
+    with function/class bodies masked (so module-level timing is still
+    seen but cross-function aggregation never false-positives)."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+    top = ast.Module(body=[
+        s for s in tree.body
+        if not isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef))], type_ignores=[])
+    yield top
+
+
+def _is_clock_call(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and _attr_name(node.func) in _CLOCKS
+            and (isinstance(node.func, ast.Name)
+                 or _mentions(node.func, "time")))
+
+
+# ---- the RP302/RP303/RP304 walkers ------------------------------------------
+
+def _rule_timing(tree: ast.Module, path: str,
+                 lines: Sequence[str]) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    seen: Set[int] = set()
+    for scope in _scopes(tree):
+        clock_lines = [n.lineno for n in ast.walk(scope)
+                       if _is_clock_call(n)]
+        runs = [n for n in ast.walk(scope)
+                if isinstance(n, ast.Call) and _attr_name(n.func) == "run"
+                and isinstance(n.func, ast.Attribute)]
+        if len(clock_lines) < 2 or not runs:
+            continue
+        if _mentions(scope, "block_until_ready"):
+            continue
+        lineno = runs[0].lineno
+        if lineno in seen or _opted_out(lines, lineno, "RP302"):
+            continue
+        seen.add(lineno)
+        out.append(error(
+            "RP302",
+            "wall-clock timing around .run(...) without "
+            "block_until_ready — JAX dispatch is async, so this measures "
+            "enqueue latency, not the kernel",
+            hint="call jax.block_until_ready(result) (or .block_until_"
+                 "ready()) inside the timed region before the second "
+                 "clock read",
+            path=path, line=lineno))
+    return out
+
+
+def _in_kernels_tree(path: str) -> bool:
+    parts = os.path.normpath(path).split(os.sep)
+    for i in range(len(parts) - len(_KERNELS_TREE) + 1):
+        if tuple(parts[i:i + len(_KERNELS_TREE)]) == _KERNELS_TREE:
+            return True
+    return False
+
+
+def _rule_pallas_call(tree: ast.Module, path: str,
+                      lines: Sequence[str]) -> List[Diagnostic]:
+    if _in_kernels_tree(path):
+        return []
+    out: List[Diagnostic] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) \
+                and _attr_name(node.func) == "pallas_call" \
+                and not _opted_out(lines, node.lineno, "RP303"):
+            out.append(error(
+                "RP303",
+                "direct pl.pallas_call outside src/repro/kernels/ — "
+                "Mosaic lowerings must go through the kernels package so "
+                "trace accounting, interpret fallback, and VMEM "
+                "budgeting stay centralized",
+                hint="add (or extend) a kernels/ entry point and call "
+                     "that; mark deliberate exceptions with "
+                     "# lint-ok: RP303",
+                path=path, line=node.lineno))
+    return out
+
+
+def _tainted_names(scope: ast.AST) -> Set[str]:
+    """Names data-flowing from pl.program_id/num_programs, to a fixpoint."""
+    def _seeds_taint(value: ast.AST, tainted: Set[str]) -> bool:
+        for n in ast.walk(value):
+            if isinstance(n, ast.Call) \
+                    and _attr_name(n.func) in _TRACER_SOURCES:
+                return True
+        return bool(_names_in(value) & tainted)
+
+    tainted: Set[str] = set()
+    changed = True
+    while changed:
+        changed = False
+        for node in ast.walk(scope):
+            targets: List[ast.expr] = []
+            value: Optional[ast.AST] = None
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, (ast.AnnAssign, ast.AugAssign)) \
+                    and node.value is not None:
+                targets, value = [node.target], node.value
+            if value is None or not _seeds_taint(value, tainted):
+                continue
+            for t in targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name) and n.id not in tainted:
+                        tainted.add(n.id)
+                        changed = True
+    return tainted
+
+
+def _rule_tracer_branch(tree: ast.Module, path: str,
+                        lines: Sequence[str]) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    seen: Set[int] = set()
+    for scope in _scopes(tree):
+        if not isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        tainted = _tainted_names(scope)
+        for node in ast.walk(scope):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            test = node.test
+            direct = any(isinstance(n, ast.Call)
+                         and _attr_name(n.func) in _TRACER_SOURCES
+                         for n in ast.walk(test))
+            if not direct and not (_names_in(test) & tainted):
+                continue
+            if node.lineno in seen \
+                    or _opted_out(lines, node.lineno, "RP304"):
+                continue
+            seen.add(node.lineno)
+            kind = "if" if isinstance(node, ast.If) else "while"
+            out.append(error(
+                "RP304",
+                f"Python {kind} on a tracer-valued expression (derived "
+                f"from pl.program_id/num_programs) in a kernel body — "
+                f"this branches at trace time, not per grid cell",
+                hint="use pl.when(cond)(...) or jnp.where for runtime "
+                     "predication",
+                path=path, line=node.lineno))
+    return out
+
+
+def _rule_legacy(path: str, lines: Sequence[str]) -> List[Diagnostic]:
+    rel = os.path.normpath(path)
+    scanned = any(
+        rel == os.path.normpath(entry)
+        or rel.startswith(os.path.normpath(entry) + os.sep)
+        or (os.sep + os.path.normpath(entry) + os.sep) in (os.sep + rel)
+        or rel.endswith(os.sep + os.path.normpath(entry))
+        for entry in SCAN)
+    if not scanned:
+        return []
+    out: List[Diagnostic] = []
+    for lineno, line in enumerate(lines, 1):
+        if any(pat in line for pat in LEGACY) \
+                and not _opted_out(lines, lineno, "RP301"):
+            out.append(error(
+                "RP301",
+                f"legacy stencil entry point outside the shims: "
+                f"{line.strip()}",
+                hint="migrate to repro.stencil(...).compile(...); "
+                     "deliberate shim exercises mark the line "
+                     "# legacy-ok",
+                path=path, line=lineno))
+    return out
+
+
+def lint_source(path: str, source: str) -> List[Diagnostic]:
+    """Run every RP3xx rule over one file's source text.
+
+    Returns RP300 alone when the file does not parse (every other rule
+    needs the AST).  ``path`` is reported verbatim in diagnostics and
+    decides path-scoped rules (RP301's scanned trees, RP303's kernels
+    exemption).
+    """
+    lines = source.splitlines()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [error("RP300", f"file cannot be parsed: {e.msg}",
+                      hint="fix the syntax error; no other rule can run "
+                           "until the file parses",
+                      path=path, line=e.lineno)]
+    out = _rule_legacy(path, lines)
+    out += _rule_timing(tree, path, lines)
+    out += _rule_pallas_call(tree, path, lines)
+    out += _rule_tracer_branch(tree, path, lines)
+    return out

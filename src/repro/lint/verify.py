@@ -1,0 +1,248 @@
+"""The plan/program verifier: every tuner constraint, re-checked statically.
+
+``enumerate_space`` only ever *emits* legal points, but the front door also
+accepts caller-pinned plans, explicit decompositions, and arbitrary grids —
+historically those failed deep inside Pallas lowering (or worse, ran a
+silently-wrong wrap DMA).  :func:`verify` re-derives each pruning predicate
+from the same shared primitives the tuner uses (``eq2``/VMEM/alignment from
+``core.blocking`` + ``tuning.space``, the per-shard bound from
+``space.shard_violations``, wrap degeneracy from
+``kernels.common.PaddedLayout``) and reports violations as RP1xx
+diagnostics with fix hints.
+
+``Stencil.compile`` calls :func:`check` as a fail-fast pre-flight before
+any lowering; the whole pass is pure integer arithmetic and costs well
+under a millisecond (guarded in tests/test_lint.py, reported as
+``verify_ms`` by benchmarks/bench_kernels.py).
+"""
+
+from __future__ import annotations
+
+import operator
+from typing import List, Optional, Tuple, Union
+
+from repro.analysis.hw import TpuChip, V5E
+from repro.core.blocking import (LANE, MIN_USEFUL_FRACTION, SUBLANE,
+                                 BlockPlan, round_up)
+from repro.core.program import as_program
+from repro.lint.diagnostics import Diagnostic, error, raise_on_error, warning
+from repro.tuning.space import MeshDecomposition, is_aligned, shard_violations
+
+#: dtypes the kernels' itemsize accounting and VPU lowerings support;
+#: anything else (f64 above all) mis-sizes every VMEM/HBM formula.
+SUPPORTED_DTYPES = ("float32", "bfloat16", "float16")
+
+Decomp = Union[None, Tuple[int, ...], MeshDecomposition]
+
+
+def _axis_alignment(ndim: int, axis: int) -> int:
+    """The register-tile alignment the streamed window wants per axis."""
+    if axis == ndim - 1:
+        return LANE
+    if axis == ndim - 2:
+        return SUBLANE
+    return 1
+
+
+def verify(program, plan: BlockPlan, grid_shape, chip: TpuChip = V5E, *,
+           decomp: Decomp = None, pipelined: bool = False,
+           batch: Optional[int] = None,
+           steps: Optional[int] = None) -> List[Diagnostic]:
+    """Statically check a (program, plan, grid[, decomp]) configuration.
+
+    Returns every finding (errors and warnings); an empty list means the
+    configuration is exactly as legal as a tuner-enumerated point.  The
+    checks mirror ``tuning.space.enumerate_space`` one-for-one:
+
+    RP109  program dtype in the kernels' supported set
+    RP101  grid matches the program's spatial rank, positive extents
+    RP102  steps >= 1 (when given)
+    RP103  batch None or >= 1 (when given)
+    RP111  plan block rank == program rank
+    RP104  eq. 2: csize > 0 on every axis
+    RP105  eq. 4/5: variant-aware VMEM scratch within the chip budget
+    RP106  eq. 6 (warning): streamed window lane/sublane alignment
+    RP113  (warning) useful fraction above the overlap-tax floor
+    RP107  per-shard bounds: divisibility, csize tiling, halo <= shard
+    RP108  (warning) wrap-degenerate periodic axes fall back to re-pad
+    """
+    prog = as_program(program)
+    out: List[Diagnostic] = []
+
+    if prog.dtype not in SUPPORTED_DTYPES:
+        out.append(error(
+            "RP109",
+            f"program dtype {prog.dtype!r} is outside the kernels' "
+            f"supported set {SUPPORTED_DTYPES}",
+            hint="use float32 (the paper's dtype) or a 16-bit float; f64 "
+                 "mis-sizes every VMEM/HBM budget and the VPU has no f64 "
+                 "path"))
+
+    grid_ok = True
+    try:
+        grid_shape = tuple(operator.index(s) for s in grid_shape)
+    except TypeError:
+        grid_ok = False
+        out.append(error(
+            "RP101",
+            f"grid_shape must be a sequence of ints (got {grid_shape!r})",
+            hint="pass the spatial extents, e.g. (4096, 4096)"))
+    if grid_ok and (len(grid_shape) != prog.ndim
+                    or any(s < 1 for s in grid_shape)):
+        grid_ok = False
+        out.append(error(
+            "RP101",
+            f"grid_shape {grid_shape} does not describe a {prog.ndim}-D "
+            f"grid with positive extents for this {prog.ndim}-D program",
+            hint=f"give {prog.ndim} positive extents; a leading batch axis "
+                 f"is declared separately (batch=B), never in grid_shape"))
+
+    if steps is not None:
+        v = _as_int(steps)
+        if v is None or v < 1:
+            out.append(error(
+                "RP102", f"steps must be an int >= 1 (got {steps!r})",
+                hint="run at least one time step; fractional or zero step "
+                     "counts have no executable"))
+    if batch is not None:
+        b = _as_int(batch)
+        if b is None or b < 1:
+            out.append(error(
+                "RP103",
+                f"batch must be None (unbatched) or an int >= 1 "
+                f"(got {batch!r})",
+                hint="batch is the extent of the leading (B, *grid) axis "
+                     "of independent grids"))
+
+    if len(plan.block_shape) != prog.ndim:
+        out.append(error(
+            "RP111",
+            f"plan block_shape {plan.block_shape} is "
+            f"{len(plan.block_shape)}-D but the program is {prog.ndim}-D",
+            hint="give one output-tile extent per grid axis"))
+        return out
+
+    r = prog.halo_radius
+    halo = plan.halo
+    bsize = plan.padded_shape
+    for d, c in enumerate(plan.block_shape):
+        if c < 1:
+            max_pt = max((bsize[d] - 1) // (2 * r), 1)
+            align = _axis_alignment(prog.ndim, d)
+            min_bsize = round_up(2 * halo + 1, align)
+            out.append(error(
+                "RP104",
+                f"par_time={plan.par_time} shrinks csize to {c} on axis "
+                f"{d} (bsize={bsize[d]}, halo={plan.par_time}x{r} per "
+                f"side)",
+                hint=f"try bsize>={min_bsize} or par_time<={max_pt} on "
+                     f"axis {d} (eq. 2: csize = bsize - 2*par_time*"
+                     f"halo_radius must stay positive)"))
+    if any(c < 1 for c in plan.block_shape):
+        return out
+
+    need = plan.vmem_bytes_for(pipelined)
+    if need > chip.vmem_budget_bytes:
+        variant = "pipelined (two revolving windows)" if pipelined \
+            else "plain (one window)"
+        out.append(error(
+            "RP105",
+            f"the {variant} kernel needs {need / 2**20:.1f} MiB of VMEM "
+            f"scratch for block={plan.block_shape} "
+            f"par_time={plan.par_time} but {chip.name} budgets "
+            f"{chip.vmem_budget_bytes / 2**20:.0f} MiB",
+            hint="shrink block_shape or par_time (the halo'd window is "
+                 "block + 2*par_time*halo_radius per axis), or plan "
+                 "pipelined=False to halve the window count"))
+
+    if not is_aligned(bsize):
+        out.append(warning(
+            "RP106",
+            f"streamed window {bsize} is not register-tile aligned "
+            f"(minor % {LANE}, second minor % {SUBLANE})",
+            hint="aligned windows DMA without row padding; the tuner's "
+                 "bsize sweep only emits aligned points"))
+
+    if plan.useful_fraction <= MIN_USEFUL_FRACTION:
+        out.append(warning(
+            "RP113",
+            f"useful fraction {plan.useful_fraction:.3f} of the streamed "
+            f"window is at or below the planner floor "
+            f"{MIN_USEFUL_FRACTION} (overlap tax)",
+            hint="past ~4x redundancy overlapped blocking never wins "
+                 "(paper Fig. 3); grow the block or cut par_time"))
+
+    shards: Optional[Tuple[int, ...]] = None
+    if decomp is not None:
+        shards = decomp.axis_shards if isinstance(decomp, MeshDecomposition) \
+            else tuple(int(s) for s in decomp)
+        if len(shards) != prog.ndim or any(s < 1 for s in shards):
+            out.append(error(
+                "RP107",
+                f"decomposition {shards} does not give one positive shard "
+                f"count per axis of a {prog.ndim}-D grid",
+                hint="one positive shards-per-axis entry per grid axis"))
+            shards = None
+    if shards is not None and grid_ok:
+        for reason in shard_violations(plan, MeshDecomposition(shards),
+                                       grid_shape):
+            out.append(error(
+                "RP107",
+                f"decomposition {shards} cannot take "
+                f"block={plan.block_shape} par_time={plan.par_time} on "
+                f"grid {grid_shape}: {reason}",
+                hint="every sharded axis must divide the grid, the local "
+                     "extent must tile by csize, and the halo must stay "
+                     "shallower than the shard; devices=<count> or "
+                     "plan='auto' searches blocking and split together"))
+
+    if prog.boundary == "periodic" and grid_ok \
+            and not any(d.code == "RP107" for d in out):
+        # wrap axes = the device-local periodic axes: everything on one
+        # device, the unsharded axes on a mesh (sharded axes exchange).
+        local = grid_shape if shards is None else \
+            tuple(g // s for g, s in zip(grid_shape, shards))
+        wrap_axes = tuple(d for d in range(prog.ndim)
+                          if shards is None or shards[d] == 1)
+        from repro.kernels.common import PaddedLayout
+        layout = PaddedLayout(
+            halo=halo, local_shape=local,
+            rounded=tuple(round_up(n, b)
+                          for n, b in zip(local, plan.block_shape)),
+            wrap_axes=wrap_axes)
+        if layout.wrap_degenerate():
+            out.append(warning(
+                "RP108",
+                f"periodic wrap is degenerate for local extents {local} "
+                f"under block={plan.block_shape} "
+                f"par_time={plan.par_time}: some wrap axis is shallower "
+                f"than the halo ring ({halo}) or the round-up slack",
+                hint="the run falls back to the O(volume) re-pad path; "
+                     "grow the axis, shrink par_time, or pick a block "
+                     "that divides the axis"))
+    return out
+
+
+def check(program, plan: BlockPlan, grid_shape, chip: TpuChip = V5E, *,
+          decomp: Decomp = None, pipelined: bool = False,
+          batch: Optional[int] = None,
+          steps: Optional[int] = None) -> List[Diagnostic]:
+    """:func:`verify`, then raise :class:`DiagnosticError` on any error.
+
+    Returns the surviving warning/info diagnostics.  This is the
+    fail-fast entry ``Stencil.compile`` runs before any Pallas lowering;
+    counters land in the flight recorder when it is on.
+    """
+    return raise_on_error(
+        verify(program, plan, grid_shape, chip, decomp=decomp,
+               pipelined=pipelined, batch=batch, steps=steps),
+        source="verify")
+
+
+def _as_int(value):
+    if isinstance(value, bool):
+        return None
+    try:
+        return operator.index(value)
+    except TypeError:
+        return None

@@ -107,6 +107,32 @@ def enumerate_decompositions(ndim: int, n_devices: int,
     return out
 
 
+def shard_violations(plan: BlockPlan, decomp: MeshDecomposition,
+                     grid_shape: Shape) -> List[str]:
+    """Why a (plan, decomposition) pair is per-shard infeasible — [] if fine.
+
+    The reason strings feed the static verifier's RP107 diagnostics
+    (``repro.lint``); :func:`fits_shard` is the boolean view the
+    enumeration loops prune on.  One rule set, two consumers.
+    """
+    bad: List[str] = []
+    for d, (g, s, c) in enumerate(zip(grid_shape, decomp.axis_shards,
+                                      plan.block_shape)):
+        if g % s != 0:
+            bad.append(f"axis {d}: grid extent {g} does not divide into "
+                       f"{s} shards")
+            continue
+        local = g // s
+        if local % c != 0:
+            bad.append(f"axis {d}: local extent {local} does not tile by "
+                       f"csize {c}")
+        if local < plan.halo:
+            bad.append(f"axis {d}: exchange halo {plan.halo} "
+                       f"(par_time={plan.par_time} x halo_radius) is deeper "
+                       f"than the local extent {local}")
+    return bad
+
+
 def fits_shard(plan: BlockPlan, decomp: MeshDecomposition,
                grid_shape: Shape) -> bool:
     """Per-shard feasibility — eq. 2 applied to the local extent.
@@ -117,15 +143,7 @@ def fits_shard(plan: BlockPlan, decomp: MeshDecomposition,
     the local extent (the strips ppermute'd to neighbors are cut from the
     local block, so a halo deeper than the shard is unsatisfiable).
     """
-    for g, s, c in zip(grid_shape, decomp.axis_shards, plan.block_shape):
-        if g % s != 0:
-            return False
-        local = g // s
-        if local % c != 0:
-            return False
-        if local < plan.halo:
-            return False
-    return True
+    return not shard_violations(plan, decomp, grid_shape)
 
 
 @dataclasses.dataclass(frozen=True)

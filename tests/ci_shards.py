@@ -44,6 +44,7 @@ SHARDS = {
         "tests/test_train_loop.py",
         "tests/test_checkpoint.py",
         "tests/test_fault.py",
+        "tests/test_lint.py",
     ],
     "distributed": [
         "tests/test_distributed.py",

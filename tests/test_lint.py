@@ -1,0 +1,425 @@
+"""repro.lint: the pre-flight verifier, artifact analyzer, and repo linter.
+
+Coverage contract (the PR's acceptance bar):
+  * the verifier accepts 100% of tuner-enumerated points — every
+    ``enumerate_space`` candidate (radii 1-4, 2D+3D, both kernel
+    variants, mesh decompositions included) verifies with zero errors;
+  * seeded-illegal mutations are rejected with the right stable code
+    (RP104 csize, RP105 VMEM, RP107 shard, RP109 dtype, ...);
+  * ``Stencil.compile`` surfaces those codes (still as ValueError);
+  * a mis-aliased artifact is caught (RP201/RP204), f64 promotion too;
+  * the codebase rules fire on synthetic violations and the committed
+    repo itself is lint-clean;
+  * the pre-flight costs well under a millisecond per compile.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro
+import repro.obs
+from repro.analysis.hw import V5E
+from repro.backends.registry import backend_traits
+from repro.core.blocking import BlockPlan
+from repro.core.program import StencilProgram
+from repro.lint import (CODES, Diagnostic, DiagnosticError, Severity,
+                        analyze_artifact, check, check_trace_budget,
+                        lint_paths, verify)
+from repro.lint.engine import to_json
+from repro.lint.rules import audit, lint_source
+from repro.tuning.space import MeshDecomposition, enumerate_space
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _codes(diags):
+    return [d.code for d in diags]
+
+
+def _error_codes(diags):
+    return [d.code for d in diags if d.is_error]
+
+
+# ---- the diagnostic engine --------------------------------------------------
+
+def test_diagnostic_vocabulary():
+    assert all(len(c) == 5 and c.startswith("RP") for c in CODES)
+    for expected in ("RP101", "RP104", "RP105", "RP107", "RP109", "RP201",
+                     "RP203", "RP204", "RP301", "RP302", "RP303", "RP304"):
+        assert expected in CODES
+    d = Diagnostic(code="RP104", message="boom", hint="shrink",
+                   path="a.py", line=3)
+    assert d.is_error
+    assert d.describe() == "a.py:3: RP104: boom (fix: shrink)"
+    assert d.to_json()["severity"] == "error"
+    with pytest.raises(ValueError, match="unknown diagnostic code"):
+        Diagnostic(code="RP999", message="nope")
+
+
+def test_diagnostic_error_is_value_error():
+    err = DiagnosticError([Diagnostic(code="RP102", message="bad steps")])
+    assert isinstance(err, ValueError)
+    assert "RP102" in str(err)
+    assert err.diagnostics[0].code == "RP102"
+
+
+def test_emit_counts_through_obs():
+    with repro.obs.profile() as rec:
+        with pytest.raises(DiagnosticError):
+            check(StencilProgram(ndim=2, radius=1),
+                  BlockPlan(spec=StencilProgram(ndim=2, radius=1),
+                            block_shape=(-2, 128), par_time=2),
+                  (64, 256))
+        assert rec.counter("lint.diagnostics") >= 1
+        assert rec.counter("lint.code.RP104") >= 1
+        assert rec.counter("lint.verify.error") >= 1
+
+
+# ---- the verifier: tuner parity (property test) -----------------------------
+
+@pytest.mark.parametrize("ndim,grid", [(2, (64, 256)), (3, (16, 32, 256))])
+@pytest.mark.parametrize("radius", [1, 2, 3, 4])
+def test_verifier_accepts_every_tuner_point(ndim, grid, radius):
+    prog = StencilProgram(ndim=ndim, radius=radius)
+    cands = enumerate_space(prog, V5E, grid_shape=grid, max_par_time=6)
+    assert cands, "tuner space unexpectedly empty"
+    pipelined_seen = False
+    for c in cands:
+        pipe = backend_traits(c.backend, c.backend_version).pipelined
+        pipelined_seen = pipelined_seen or pipe
+        diags = verify(prog, c.plan, grid, V5E,
+                       decomp=c.decomp, pipelined=pipe)
+        assert not _error_codes(diags), (
+            f"tuner point rejected: {c.plan} pipelined={pipe} -> "
+            f"{[d.describe() for d in diags]}")
+    assert pipelined_seen, "space never enumerated the pipelined variant"
+
+
+def test_verifier_accepts_every_mesh_point():
+    prog = StencilProgram(ndim=2, radius=2, boundary="periodic")
+    cands = enumerate_space(prog, V5E, grid_shape=(64, 256),
+                            max_par_time=4, n_devices=8)
+    sharded = [c for c in cands if c.decomp is not None]
+    assert sharded, "mesh space unexpectedly empty"
+    for c in sharded:
+        pipe = backend_traits(c.backend, c.backend_version).pipelined
+        diags = verify(prog, c.plan, (64, 256), V5E,
+                       decomp=c.decomp, pipelined=pipe)
+        assert not _error_codes(diags), [d.describe() for d in diags]
+
+
+# ---- the verifier: seeded-illegal mutations ---------------------------------
+
+def test_rp104_csize_shrunk_to_zero():
+    prog = StencilProgram(ndim=2, radius=4)
+    # a legal bsize (32, 128) at par_time=4 gives csize 32-2*4*4 = 0
+    plan = BlockPlan(spec=prog, block_shape=(0, 96), par_time=4)
+    diags = verify(prog, plan, (64, 256))
+    assert "RP104" in _error_codes(diags)
+    d = next(d for d in diags if d.code == "RP104")
+    assert "par_time=4" in d.message and "csize" in d.message
+    assert "bsize>=" in d.hint and "par_time<=" in d.hint
+
+
+def test_rp105_vmem_blowout():
+    prog = StencilProgram(ndim=2, radius=1)
+    plan = BlockPlan(spec=prog, block_shape=(4096, 8192), par_time=1)
+    diags = verify(prog, plan, (8192, 8192))
+    assert "RP105" in _error_codes(diags)
+    assert "MiB" in next(d for d in diags if d.code == "RP105").message
+
+
+def test_rp105_is_variant_aware():
+    """A plan near the budget can fit the plain kernel's single window but
+    not the pipelined pair — exactly eq. 4 vs eq. 5."""
+    prog = StencilProgram(ndim=2, radius=1)
+    plan = BlockPlan(spec=prog, block_shape=(2048, 4096), par_time=1)
+    assert plan.vmem_bytes_for(False) <= V5E.vmem_budget_bytes
+    assert plan.vmem_bytes_for(True) > V5E.vmem_budget_bytes
+    assert not _error_codes(verify(prog, plan, (4096, 4096)))
+    assert "RP105" in _error_codes(
+        verify(prog, plan, (4096, 4096), pipelined=True))
+
+
+def test_rp107_halo_deeper_than_shard():
+    prog = StencilProgram(ndim=2, radius=4)
+    plan = BlockPlan(spec=prog, block_shape=(4, 256), par_time=2)  # halo 8
+    diags = verify(prog, plan, (64, 256), decomp=(16, 1))
+    assert "RP107" in _error_codes(diags)
+    assert "halo" in next(d for d in diags if d.code == "RP107").message
+
+
+def test_rp107_indivisible_grid_and_tile():
+    prog = StencilProgram(ndim=2, radius=1)
+    plan = BlockPlan(spec=prog, block_shape=(32, 128), par_time=1)
+    assert "RP107" in _error_codes(
+        verify(prog, plan, (64, 256), decomp=(3, 1)))   # 64 % 3 != 0
+    assert "RP107" in _error_codes(
+        verify(prog, plan, (64, 192), decomp=(1, 2)))   # local 96 % 128 != 0
+    # (2,1): local (32, 256) tiles by (32, 128) with halo 1 < 32: legal
+    assert not _error_codes(verify(prog, plan, (64, 256), decomp=(2, 1)))
+
+
+def test_rp109_unsupported_dtype():
+    prog = StencilProgram(ndim=2, radius=1, dtype="float64")
+    plan = BlockPlan(spec=prog, block_shape=(32, 128), par_time=1)
+    assert "RP109" in _error_codes(verify(prog, plan, (64, 256)))
+
+
+def test_rp101_rp102_rp103_rp111():
+    prog = StencilProgram(ndim=2, radius=1)
+    plan = BlockPlan(spec=prog, block_shape=(32, 128), par_time=1)
+    assert "RP101" in _error_codes(verify(prog, plan, (64, 256, 4)))
+    assert "RP101" in _error_codes(verify(prog, plan, (64, 0)))
+    assert "RP102" in _error_codes(verify(prog, plan, (64, 256), steps=0))
+    assert "RP103" in _error_codes(verify(prog, plan, (64, 256), batch=0))
+    assert "RP111" in _error_codes(
+        verify(prog, BlockPlan(spec=prog, block_shape=(32, 32, 128),
+                               par_time=1), (64, 256)))
+
+
+def test_warnings_are_not_errors():
+    prog = StencilProgram(ndim=2, radius=1, boundary="periodic")
+    # unaligned window (RP106) + wrap axis shallower than the halo ring
+    # (RP108: halo = 4*1 > extent 3 on axis 0)
+    plan = BlockPlan(spec=prog, block_shape=(3, 100), par_time=4)
+    diags = verify(prog, plan, (3, 300))
+    warn = [d.code for d in diags if d.severity is Severity.WARNING]
+    assert "RP106" in warn and "RP108" in warn
+    assert not _error_codes(diags)
+    # check() returns the warnings instead of raising
+    assert _codes(check(prog, plan, (3, 300))) == _codes(diags)
+
+
+# ---- compile() pre-flight integration ---------------------------------------
+
+def test_compile_rejects_with_stable_codes():
+    prog = StencilProgram(ndim=2, radius=1)
+    sten = repro.stencil(prog)
+    big = BlockPlan(spec=prog, block_shape=(4096, 8192), par_time=1)
+    with pytest.raises(DiagnosticError) as ei:
+        sten.compile((8192, 8192), steps=1, plan=big)
+    assert "RP105" in str(ei.value)
+    # historical message substrings survive the diagnostic rewrite
+    with pytest.raises(ValueError, match="steps must be an int >= 1") as ei:
+        sten.compile((64, 256), steps=0, plan="model")
+    assert "RP102" in str(ei.value)
+    with pytest.raises(ValueError, match="does not describe a 2-D") as ei:
+        sten.compile((64,), steps=1)
+    assert "RP101" in str(ei.value)
+    with pytest.raises(ValueError, match="plan must be") as ei:
+        sten.compile((64, 256), steps=1, plan="fastest")
+    assert "RP112" in str(ei.value)
+
+
+def test_compile_attaches_preflight_warnings():
+    prog = StencilProgram(ndim=2, radius=1)
+    plan = BlockPlan(spec=prog, block_shape=(30, 120), par_time=1)
+    cs = repro.stencil(prog).compile((60, 240), steps=1, plan=plan,
+                                     backend="xla-reference")
+    assert "RP106" in _codes(cs.preflight)
+    assert not _error_codes(cs.preflight)
+    cs2 = repro.stencil(prog).compile((64, 256), steps=1, plan="model",
+                                      backend="xla-reference")
+    assert not _error_codes(cs2.preflight)
+
+
+# ---- the artifact analyzer --------------------------------------------------
+
+_GOOD_HLO = """\
+HloModule jit_run, input_output_alias={ {0}: (0, {}, may-alias) }, \
+entry_computation_layout={(f32[256,256]{1,0},f32[9]{0})->(f32[256,256]{1,0})}
+
+ENTRY %main.7 (p0.1: f32[256,256], p1.2: f32[9]) -> (f32[256,256]) {
+  %p0.1 = f32[256,256] parameter(0)
+  %p1.2 = f32[9] parameter(1)
+  ROOT %t.6 = (f32[256,256]) tuple(%p0.1)
+}
+"""
+
+
+def test_artifact_clean_module_passes():
+    assert analyze_artifact(_GOOD_HLO, expect_dtype="float32") == []
+
+
+def test_artifact_catches_mis_aliased_pallas_call():
+    # shape-surgery: the donated output no longer matches its parameter
+    bad = _GOOD_HLO.replace("{0}: (0, {}, may-alias)",
+                            "{0}: (1, {}, may-alias)")
+    diags = analyze_artifact(bad, expect_dtype="float32")
+    assert _error_codes(diags) == ["RP201"]
+    assert "f32[9]" in diags[0].message and "f32[256,256]" in diags[0].message
+
+
+def test_artifact_catches_out_of_range_alias():
+    bad = _GOOD_HLO.replace("{0}: (0, {}, may-alias)",
+                            "{0}: (7, {}, may-alias)")
+    assert _error_codes(analyze_artifact(bad)) == ["RP201"]
+
+
+def test_artifact_catches_double_donation():
+    bad = _GOOD_HLO.replace(
+        "input_output_alias={ {0}: (0, {}, may-alias) }",
+        "input_output_alias={ {0}: (0, {}, may-alias), "
+        "{1}: (0, {}, may-alias) }").replace(
+        "-> (f32[256,256]) {", "-> (f32[256,256], f32[256,256]) {")
+    codes = _error_codes(analyze_artifact(bad))
+    assert "RP204" in codes
+
+
+def test_artifact_catches_f64_promotion():
+    bad = _GOOD_HLO + "\n  %c = f64[] constant(0)\n"
+    diags = analyze_artifact(bad, expect_dtype="float32")
+    assert "RP202" in _error_codes(diags)
+    # without an expectation it degrades to a warning
+    soft = analyze_artifact(bad)
+    assert ["RP202"] == _codes(soft) and not _error_codes(soft)
+
+
+def test_artifact_on_real_lowering():
+    """A genuinely compiled module parses and audits clean (XLA:CPU emits
+    no alias lines — donation is unimplemented there — so this exercises
+    the no-donation path end to end)."""
+    prog = StencilProgram(ndim=2, radius=1)
+    cs = repro.stencil(prog).compile((16, 128), steps=1, plan="model",
+                                     backend="xla-reference")
+    arg = jax.ShapeDtypeStruct((16, 128), jnp.float32)
+    text = jax.jit(lambda g: cs.run(g)).lower(arg).compile().as_text()
+    assert analyze_artifact(text, expect_dtype="float32") == []
+
+
+def test_trace_budget():
+    assert check_trace_budget(0, 0) == []
+    diags = check_trace_budget(3, 1, context="steady-state run")
+    assert _error_codes(diags) == ["RP203"]
+    assert "steady-state run" in diags[0].message
+
+
+# ---- the codebase rules -----------------------------------------------------
+
+def test_rp302_untimed_async_dispatch():
+    bad = (
+        "import time\n"
+        "def bench(cs, g):\n"
+        "    t0 = time.perf_counter()\n"
+        "    out = cs.run(g)\n"
+        "    return time.perf_counter() - t0\n")
+    diags = lint_source("bench.py", bad)
+    assert _error_codes(diags) == ["RP302"]
+    good = bad.replace("    return time.perf_counter() - t0\n",
+                       "    jax.block_until_ready(out)\n"
+                       "    return time.perf_counter() - t0\n")
+    assert lint_source("bench.py", good) == []
+
+
+def test_rp303_pallas_call_outside_kernels():
+    src = ("import jax.experimental.pallas as pl\n"
+           "def lower(k, s):\n"
+           "    return pl.pallas_call(k, out_shape=s)\n")
+    diags = lint_source(os.path.join("src", "repro", "models", "x.py"), src)
+    assert _error_codes(diags) == ["RP303"]
+    # the kernels package is the sanctioned home
+    assert lint_source(
+        os.path.join("src", "repro", "kernels", "x.py"), src) == []
+    # explicit opt-out
+    opted = src.replace("out_shape=s)", "out_shape=s)  # lint-ok: RP303")
+    assert lint_source(os.path.join("src", "repro", "models", "x.py"),
+                       opted) == []
+
+
+def test_rp304_tracer_valued_branch():
+    bad = ("import jax.experimental.pallas as pl\n"
+           "def kernel(ref, o_ref):\n"
+           "    i = pl.program_id(0)\n"
+           "    edge = i + 1\n"
+           "    if edge > 0:\n"
+           "        o_ref[...] = ref[...]\n")
+    diags = lint_source("src/repro/kernels/k.py", bad)
+    assert _error_codes(diags) == ["RP304"]
+    assert diags[0].line == 5
+    good = bad.replace("    if edge > 0:\n        o_ref[...] = ref[...]\n",
+                       "    pl.when(edge > 0)(lambda: None)\n")
+    assert lint_source("src/repro/kernels/k.py", good) == []
+
+
+def test_rp301_legacy_entry_point_scoped():
+    src = "eng = StencilEngine(prog)\n"
+    diags = lint_source(os.path.join("examples", "demo.py"), src)
+    assert _error_codes(diags) == ["RP301"]
+    # out of the scanned trees the rule stays silent (shims live in src)
+    assert lint_source(os.path.join("src", "repro", "core", "t.py"),
+                       src) == []
+    assert lint_source(os.path.join("examples", "demo.py"),
+                       "eng = StencilEngine(prog)  # legacy-ok\n") == []
+
+
+def test_rp300_syntax_error():
+    diags = lint_source("broken.py", "def f(:\n")
+    assert _error_codes(diags) == ["RP300"]
+
+
+def test_audit_contract():
+    assert audit(ROOT) == []
+    bad = audit(os.path.join(ROOT, "does-not-exist"))
+    assert bad and all("does not exist" in line for line in bad)
+
+
+def test_repo_is_lint_clean():
+    """The acceptance bar: ``python -m repro.lint src tests`` exits 0 on
+    the committed tree, and the JSON artifact records zero errors."""
+    out = os.path.join(ROOT, "build-lint.json")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"),
+               JAX_PLATFORMS="cpu")
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.lint", "src", "tests",
+             "--json", out],
+            capture_output=True, text=True, cwd=ROOT, env=env)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        payload = json.loads(open(out).read())
+        assert payload["errors"] == 0
+    finally:
+        if os.path.exists(out):
+            os.remove(out)
+
+
+def test_lint_paths_reports_missing_tree():
+    diags = lint_paths([os.path.join(ROOT, "no-such-tree")])
+    assert _error_codes(diags) == ["RP300"]
+    payload = json.loads(to_json(diags))
+    assert payload["errors"] == 1 and payload["total"] == 1
+
+
+def test_cli_codes_listing():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.lint", "codes"],
+        capture_output=True, text=True, cwd=ROOT,
+        env=dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"),
+                 JAX_PLATFORMS="cpu"))
+    assert proc.returncode == 0
+    for code in CODES:
+        assert code in proc.stdout
+
+
+# ---- pre-flight overhead ----------------------------------------------------
+
+def test_verify_overhead_under_1ms():
+    """The fail-fast check must stay invisible next to a compile: pure
+    integer arithmetic, best case well under a millisecond (the bench
+    reports it per row as ``verify_ms``)."""
+    prog = StencilProgram(ndim=3, radius=4, boundary="periodic")
+    plan = BlockPlan(spec=prog, block_shape=(8, 16, 128), par_time=2)
+    verify(prog, plan, (32, 64, 256), decomp=(2, 2, 2))  # warm imports
+    best = float("inf")
+    for _ in range(20):
+        t0 = time.perf_counter()
+        verify(prog, plan, (32, 64, 256), decomp=(2, 2, 2))
+        best = min(best, time.perf_counter() - t0)
+    assert best < 1e-3, f"pre-flight took {best * 1e3:.2f} ms"

@@ -1,19 +1,11 @@
 #!/usr/bin/env python
 """Deprecation audit: no legacy stencil entry points outside the shims.
 
-The unified executor (``repro.stencil(...).compile(...)``) is the one front
-door; the legacy entry points — ``StencilEngine``, ``kernels.ops
-.stencil_run``, ``DistributedStencil`` — survive only as deprecation-warning
-shims inside ``src/repro`` and in the tests that pin those shims.  This
-audit greps the user-facing trees (examples/, benchmarks/, the workload
-configs, the serving launcher, and the subprocess dist scripts) and fails
-if any legacy call survives there, so a new example or bench cannot
-quietly resurrect a dead surface.
-
-Lines that intentionally exercise a shim (the dist scripts pin the
-``DistributedStencil`` deprecation path on a real multi-process mesh) opt
-out with a trailing ``# legacy-ok`` marker; anything unmarked is a
-violation.
+Thin shim over ``repro.lint.rules`` — the rule itself (LEGACY patterns,
+SCAN trees, the ``# legacy-ok`` opt-out, the loud missing-tree failure)
+now lives there as diagnostic RP301, shared with ``python -m repro.lint``.
+This script keeps the historical CLI contract (exit 1 + stderr listing on
+violations) for CI and ``tests/test_executor.py``.
 
     python tools/deprecation_audit.py            # exit 1 on violations
 """
@@ -22,64 +14,15 @@ from __future__ import annotations
 
 import os
 import sys
-from typing import List
 
-#: call-site patterns of the deprecated entry points, plus the direct-import
-#: spellings that would dodge the attribute-call patterns (`from
-#: repro.kernels.ops import stencil_run`, `from repro.core.temporal import
-#: StencilEngine as Engine`, ...)
-LEGACY = (
-    "StencilEngine(",
-    "ops.stencil_run(",
-    "DistributedStencil(",
-    "import stencil_run",
-    "from repro.core.temporal import",
-    "from repro.core.distributed import",
-)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
 
-#: trees that must be migrated to the front door (paths relative to repo
-#: root; src/repro internals and shim-pinning tests are deliberately out of
-#: scope — the shims live there)
-SCAN = (
-    "examples",
-    "benchmarks",
-    os.path.join("src", "repro", "configs"),
-    os.path.join("src", "repro", "launch", "stencil_serve.py"),
-    os.path.join("tests", "dist_scripts"),
-)
-
-#: per-line opt-out for deliberate shim exercises (dist scripts pinning the
-#: deprecation surface); must sit on the offending line itself
-OPT_OUT = "# legacy-ok"
-
-
-def audit(root: str) -> List[str]:
-    """-> ["path:line: offending source", ...] for every violation."""
-    bad: List[str] = []
-    for entry in SCAN:
-        top = os.path.join(root, entry)
-        if not os.path.exists(top):
-            # a renamed/missing tree must fail loudly, not pass vacuously
-            bad.append(f"{entry}: scanned tree does not exist — update "
-                       f"SCAN in tools/deprecation_audit.py")
-            continue
-        files = [top] if os.path.isfile(top) else [
-            os.path.join(dirpath, fn)
-            for dirpath, _, fns in os.walk(top)
-            for fn in fns if fn.endswith(".py")]
-        for path in sorted(files):
-            with open(path, encoding="utf-8") as fh:
-                for lineno, line in enumerate(fh, 1):
-                    if (any(pat in line for pat in LEGACY)
-                            and OPT_OUT not in line):
-                        bad.append(f"{os.path.relpath(path, root)}:"
-                                   f"{lineno}: {line.strip()}")
-    return bad
+from repro.lint.rules import LEGACY, SCAN, audit  # noqa: E402
 
 
 def main() -> int:
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    bad = audit(root)
+    bad = audit(_ROOT)
     if bad:
         print("deprecation audit FAILED — legacy stencil entry points "
               "survive outside the shims; migrate these call sites to "
