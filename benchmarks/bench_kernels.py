@@ -30,9 +30,9 @@ import jax
 import jax.numpy as jnp
 
 import repro
-from repro.backends import pipelined_variant
+from repro.backends import variant_of
 from repro.core import reference as ref
-from repro.core.blocking import BlockPlan
+from repro.core.blocking import TEMPORAL_CHUNK, BlockPlan
 from repro.core.perf_model import gbps_from_cells_per_s
 from repro.core.program import StencilProgram
 from repro.kernels import ops
@@ -132,7 +132,8 @@ def _executor_rows(prog, shape, plan, rows):
                      f"{_acc_fields(cs, cells * steps / t_fused)}",
                      cs.run, g)))
 
-    cs_pipe = sten.compile(shape, steps=steps, plan=plan, pipelined=True)
+    cs_pipe = sten.compile(shape, steps=steps, plan=plan,
+                           variant="pipelined")
     t_pipe = _time(cs_pipe.run, g, reps=2)
     rows.append((f"run_pipelined_{prog.ndim}d_r{prog.radius}", t_pipe * 1e6,
                  _with_bytes(
@@ -140,6 +141,37 @@ def _executor_rows(prog, shape, plan, rows):
                      f"pipelined_speedup_vs_plain={t_fused / t_pipe:.2f}x;"
                      f"{_acc_fields(cs_pipe, cells * steps / t_pipe)}",
                      cs_pipe.run, g)))
+
+    if variant_of(cs.backend, "temporal"):
+        # Temporally-fused rows: one launch per TEMPORAL_CHUNK-superstep
+        # chunk.  The marginal *modeled* HBM bytes per superstep must
+        # undercut plain whenever par_time >= 2 (the ~1/C traffic claim);
+        # the interpreter's cost_analysis charges compute passes, not DMA,
+        # so the regression guard rides the analytic model.
+        steps_t = TEMPORAL_CHUNK * plan.par_time
+        cs_pt = sten.compile(shape, steps=steps_t, plan=plan)
+        cs_t = sten.compile(shape, steps=steps_t, plan=plan,
+                            variant="temporal")
+        t_plain_t = _time(cs_pt.run, g, reps=2)
+        t_temporal = _time(cs_t.run, g, reps=2)
+        mb_plain = plan.run_bytes_per_superstep(shape)
+        mb_temporal = plan.run_bytes_per_superstep(shape, "temporal")
+        if plan.par_time >= 2:
+            assert mb_temporal < mb_plain, \
+                (f"temporal modeled bytes/superstep {mb_temporal} not below "
+                 f"plain {mb_plain} at par_time={plan.par_time}")
+        rows.append((f"run_temporal_{prog.ndim}d_r{prog.radius}",
+                     t_temporal * 1e6,
+                     _with_bytes(
+                         f"mcells_per_s="
+                         f"{cells * steps_t / t_temporal / 1e6:.1f};"
+                         f"temporal_speedup_vs_plain="
+                         f"{t_plain_t / t_temporal:.2f}x;"
+                         f"model_bytes_per_superstep={mb_temporal};"
+                         f"model_bytes_ratio_vs_plain="
+                         f"{mb_temporal / mb_plain:.3f};"
+                         f"{_acc_fields(cs_t, cells * steps_t / t_temporal)}",
+                         cs_t.run, g)))
 
     B = 2
     gb = jnp.stack([ref.random_grid(prog, shape, seed=s) for s in range(B)])
@@ -221,7 +253,8 @@ def run(use_tuned=None, smoke=None):
     # always run (tiny grid) — the regression gate needs the fused /
     # pipelined / batched rows in every CI artifact — while full runs keep
     # the historical default-backend-only guard.
-    if (smoke or backend is None) and pipelined_variant("pallas-interpret"):
+    if (smoke or backend is None) and \
+            variant_of("pallas-interpret", "pipelined"):
         prog, shape, block = programs[0]
         plan = BlockPlan(spec=prog, block_shape=block, par_time=2)
         _executor_rows(prog, shape, plan, rows)

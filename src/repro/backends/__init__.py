@@ -1,8 +1,8 @@
 """Stencil backend registry — ``lower(program, plan)`` to an executable.
 
 Importing this package registers the built-in backends:
-``pallas-tpu``, ``pallas-interpret``, their ``-pipelined`` siblings, and
-``xla-reference``.
+``pallas-tpu``, ``pallas-interpret``, their ``-pipelined`` and ``-temporal``
+variant siblings, and ``xla-reference``.
 """
 
 from repro.backends.registry import (  # noqa: F401
@@ -16,6 +16,7 @@ from repro.backends.registry import (  # noqa: F401
     pipelined_variant,
     register_backend,
     resolve_backend,
+    variant_of,
 )
 from repro.backends import pallas_backend as _pallas  # noqa: F401
 from repro.backends import xla_ref as _xla  # noqa: F401
@@ -31,4 +32,5 @@ __all__ = [
     "pipelined_variant",
     "register_backend",
     "resolve_backend",
+    "variant_of",
 ]

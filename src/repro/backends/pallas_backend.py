@@ -31,18 +31,18 @@ from repro.kernels import ops
 
 def _make(program: StencilProgram, plan: Optional[BlockPlan],
           coeffs: ProgramCoeffs, interpret: bool,
-          pipelined: bool) -> LoweredStencil:
+          variant: str) -> LoweredStencil:
     if plan is None:
         raise ValueError("pallas backends need a BlockPlan")
 
     def superstep_fn(grid, c):
         return ops.stencil_superstep(grid, program, c, plan,
                                      interpret=interpret,
-                                     pipelined=pipelined)
+                                     variant=variant)
 
     def run_fn(grid, c, steps):
         return ops._stencil_run(grid, program, c, plan, steps,
-                                interpret=interpret, pipelined=pipelined)
+                                interpret=interpret, variant=variant)
 
     return LoweredStencil(program, plan, coeffs, superstep_fn, run_fn)
 
@@ -51,7 +51,7 @@ def _make(program: StencilProgram, plan: Optional[BlockPlan],
                   traits=BackendTraits(local_kernel=True, fused_run=True))
 def pallas_tpu(program, plan, coeffs) -> LoweredStencil:
     """Compiled Pallas kernels (requires a TPU backend)."""
-    return _make(program, plan, coeffs, interpret=False, pipelined=False)
+    return _make(program, plan, coeffs, interpret=False, variant="plain")
 
 
 @register_backend("pallas-interpret", version=1,
@@ -59,20 +59,41 @@ def pallas_tpu(program, plan, coeffs) -> LoweredStencil:
                                        fused_run=True))
 def pallas_interpret(program, plan, coeffs) -> LoweredStencil:
     """Same kernels under the Pallas interpreter — CPU CI / debugging."""
-    return _make(program, plan, coeffs, interpret=True, pipelined=False)
+    return _make(program, plan, coeffs, interpret=True, variant="plain")
 
 
 @register_backend("pallas-tpu-pipelined", version=1,
-                  traits=BackendTraits(pipelined=True, local_kernel=True,
+                  traits=BackendTraits(variant="pipelined", local_kernel=True,
                                        fused_run=True))
 def pallas_tpu_pipelined(program, plan, coeffs) -> LoweredStencil:
     """Double-buffered prefetch kernels, compiled mode."""
-    return _make(program, plan, coeffs, interpret=False, pipelined=True)
+    return _make(program, plan, coeffs, interpret=False, variant="pipelined")
 
 
 @register_backend("pallas-interpret-pipelined", version=1,
-                  traits=BackendTraits(interpret=True, pipelined=True,
+                  traits=BackendTraits(interpret=True, variant="pipelined",
                                        local_kernel=True, fused_run=True))
 def pallas_interpret_pipelined(program, plan, coeffs) -> LoweredStencil:
     """Double-buffered prefetch kernels under the interpreter (CPU CI)."""
-    return _make(program, plan, coeffs, interpret=True, pipelined=True)
+    return _make(program, plan, coeffs, interpret=True, variant="pipelined")
+
+
+# The temporal variant's chunk-deep launch consumes TEMPORAL_CHUNK supersteps
+# of halo per window load, which the per-superstep distributed exchange cannot
+# feed — so it declares local_kernel=False and the executor refuses it for
+# sharded runs with a targeted diagnostic instead of computing garbage halos.
+
+@register_backend("pallas-tpu-temporal", version=1,
+                  traits=BackendTraits(variant="temporal", fused_run=True))
+def pallas_tpu_temporal(program, plan, coeffs) -> LoweredStencil:
+    """Superstep-chunking kernels (TEMPORAL_CHUNK fused supersteps),
+    compiled mode."""
+    return _make(program, plan, coeffs, interpret=False, variant="temporal")
+
+
+@register_backend("pallas-interpret-temporal", version=1,
+                  traits=BackendTraits(interpret=True, variant="temporal",
+                                       fused_run=True))
+def pallas_interpret_temporal(program, plan, coeffs) -> LoweredStencil:
+    """Superstep-chunking kernels under the interpreter (CPU CI)."""
+    return _make(program, plan, coeffs, interpret=True, variant="temporal")

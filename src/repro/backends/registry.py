@@ -16,6 +16,12 @@ Built-in backends (registered in ``repro.backends``):
                        — double-buffered prefetch variant (the paper's deep
                          pipeline); a first-class backend name so the
                          autotuner searches it and the plan cache keys on it.
+* ``pallas-tpu-temporal`` / ``pallas-interpret-temporal``
+                       — superstep-chunking variant: ``TEMPORAL_CHUNK``
+                         supersteps fused per kernel launch over a chunk-deep
+                         halo ring, amortizing the carry ping-pong and the
+                         window stream (the paper's in-fabric temporal
+                         blocking, §III.A).
 * ``xla-reference``    — naive jnp step loop through XLA; the semantic
                          oracle, also the fallback when Pallas is unavailable.
 
@@ -41,17 +47,22 @@ from repro.core.program import (ProgramCoeffs, StencilProgram, as_program,
 class BackendTraits:
     """Capability flags a backend declares at registration time.
 
-    ``interpret``/``pipelined`` describe which Pallas kernel configuration
-    the backend's lowering selects; ``local_kernel=True`` means the
+    ``interpret``/``variant`` describe which Pallas kernel configuration
+    the backend's lowering selects — ``variant`` is one of
+    ``repro.core.blocking.VARIANTS`` ("plain" | "pipelined" | "temporal"),
+    with ``pipelined`` kept as the deprecated bool mirror of
+    ``variant == "pipelined"``.  ``local_kernel=True`` means the
     backend's superstep can serve as the *local* kernel of the distributed
     stack (``core/distributed.py`` runs it on each shard's halo-exchanged
     block inside ``shard_map``).  The oracle backend lowers a whole-grid
     jnp loop with its own boundary padding, so it cannot — its halos would
-    be synthesized locally instead of exchanged.
+    be synthesized locally instead of exchanged.  The temporal variant
+    cannot either, for a different reason: its chunk-deep launch would need
+    ``TEMPORAL_CHUNK`` supersteps worth of halo exchanged at once.
 
     ``fused_run=True`` declares that the backend's ``run`` *is* the fused
     run executor (``kernels/ops._stencil_run`` configured by the
-    interpret/pipelined flags above): the unified executor
+    interpret/variant flags above): the unified executor
     (``repro.executor``) then dispatches to it directly — honoring a
     caller ``interpret`` override — instead of through the lowering
     object.  Backends with their own run implementation must leave it
@@ -62,6 +73,15 @@ class BackendTraits:
     pipelined: bool = False
     local_kernel: bool = False
     fused_run: bool = False
+    variant: str = "plain"
+
+    def __post_init__(self):
+        # Keep the deprecated bool and the variant axis coherent no matter
+        # which spelling a registration used.
+        if self.pipelined and self.variant == "plain":
+            object.__setattr__(self, "variant", "pipelined")
+        elif self.variant == "pipelined" and not self.pipelined:
+            object.__setattr__(self, "pipelined", True)
 
 
 class LoweredStencil:
@@ -162,35 +182,74 @@ def default_backend_name() -> str:
         else "pallas-interpret"
 
 
-def pipelined_variant(name: str) -> Optional[str]:
-    """The registered double-buffered sibling of ``name``, or None.
+#: Known kernel-variant name suffixes (see ``repro.core.blocking.VARIANTS``).
+_VARIANT_SUFFIXES = ("-pipelined", "-temporal")
 
-    ``pallas-interpret`` -> ``pallas-interpret-pipelined``; a name that is
-    already pipelined maps to itself; backends without a pipelined lowering
-    (e.g. ``xla-reference``) map to None.
+
+def _base_name(name: str) -> str:
+    """Strip a known variant suffix off a backend name."""
+    for suf in _VARIANT_SUFFIXES:
+        if name.endswith(suf):
+            return name[:-len(suf)]
+    return name
+
+
+def variant_of(name: str, variant: str) -> Optional[str]:
+    """The registered ``variant`` sibling of ``name``, or None.
+
+    ``variant_of("pallas-interpret", "pipelined")`` ->
+    ``pallas-interpret-pipelined``; the input may itself be a variant name
+    (its suffix is stripped first, so siblings map to each other);
+    ``variant="plain"`` maps back to the base name.  Backends without the
+    requested lowering (e.g. ``xla-reference``) map to None.
     """
-    cand = name if name.endswith("-pipelined") else f"{name}-pipelined"
+    base = _base_name(name)
+    cand = base if variant == "plain" else f"{base}-{variant}"
     return cand if cand in _REGISTRY else None
 
 
-def resolve_backend(name: Optional[str] = None, pipelined: bool = False
+def pipelined_variant(name: str) -> Optional[str]:
+    """The registered double-buffered sibling of ``name``, or None.
+
+    Deprecated spelling of ``variant_of(name, "pipelined")`` (kept for the
+    bool-era API surface): ``pallas-interpret`` ->
+    ``pallas-interpret-pipelined``; a name that is already pipelined maps to
+    itself; backends without a pipelined lowering (e.g. ``xla-reference``)
+    map to None.
+    """
+    return variant_of(name, "pipelined")
+
+
+def resolve_backend(name: Optional[str] = None, pipelined: bool = False,
+                    variant: Optional[str] = None
                     ) -> "tuple[str, int, BackendTraits]":
     """One resolution rule for every executor: ``(name, version, traits)``.
 
-    ``name=None`` picks the platform default; ``pipelined=True`` resolves
-    the ``-pipelined`` double-buffered sibling and raises when the backend
-    has none (silently running the plain kernel is never acceptable).
+    ``name=None`` picks the platform default.  ``variant`` resolves the
+    named kernel-variant sibling ("plain" resolves the base name, so an
+    explicitly plain request strips a variant suffix off ``name``);
+    ``variant=None`` leaves ``name`` untouched and defers to the deprecated
+    ``pipelined`` bool, which resolves the ``-pipelined`` sibling when True.
+    A missing lowering raises (silently running a different kernel is never
+    acceptable).
     """
     name = name or default_backend_name()
-    if pipelined:
-        pipe = pipelined_variant(name)
-        if pipe is None:
+    if variant is None and pipelined:
+        variant = "pipelined"
+    if variant is not None and variant != "plain":
+        sibling = variant_of(name, variant)
+        if sibling is None:
             raise ValueError(
-                f"backend {name!r} has no pipelined lowering; "
-                f"pipelined=True would silently run the plain kernel — "
-                f"pick a pallas backend (their -pipelined siblings are "
-                f"registered) or drop pipelined=True")
-        name = pipe
+                f"backend {name!r} has no {variant} lowering; "
+                f"variant={variant!r} (or pipelined=True) would silently "
+                f"run the plain kernel — pick a pallas backend (their "
+                f"-pipelined/-temporal siblings are registered) or drop "
+                f"the variant request")
+        name = sibling
+    elif variant == "plain":
+        base = variant_of(name, "plain")
+        if base is not None:
+            name = base
     _, version = get_backend(name)
     return name, version, backend_traits(name, version)
 

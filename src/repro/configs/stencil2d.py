@@ -43,7 +43,7 @@ class StencilWorkload:
         Routes through the unified executor (``repro.stencil``); ``plan``
         defaults to the workload's own blocking plan, and every other
         ``compile`` knob (``batch``, ``devices``, ``backend``,
-        ``pipelined``, ...) passes through.
+        ``variant``, ...) passes through.
         """
         from repro.executor import stencil
         return stencil(self.spec).compile(

@@ -33,6 +33,42 @@ LANE = 128
 # fraction of their streamed window as useful output never win.
 MIN_USEFUL_FRACTION = 0.25
 
+# Kernel-variant axis shared by the backend registry, the tuner, and both
+# planners (this module cannot import the registry without a cycle, so the
+# canonical names live here):
+#   "plain"     — one revolving window per block, one superstep per launch.
+#   "pipelined" — double-buffered prefetch (two revolving windows).
+#   "temporal"  — superstep chunking: TEMPORAL_CHUNK supersteps fused into a
+#                 single kernel launch over a chunk-deep halo ring, so the
+#                 carry ping-pong and the per-block window stream are paid
+#                 once per chunk instead of once per superstep.
+VARIANTS = ("plain", "pipelined", "temporal")
+
+#: Supersteps fused per temporal-variant kernel launch (the chunk depth C).
+#: One launch loads block + 2*C*halo per axis into VMEM and applies
+#: C * par_time stencil steps with shrinking valid regions, writing only the
+#: final block back — per-superstep HBM traffic ~1/C of the plain kernel's.
+TEMPORAL_CHUNK = 4
+
+
+def normalize_variant(variant=None, pipelined: bool = False) -> str:
+    """One rule for the ``pipelined: bool`` -> ``variant: str`` migration.
+
+    A string names the variant directly; a bool (the deprecated knob) maps
+    True -> "pipelined" / False -> "plain"; ``None`` defers to the
+    ``pipelined`` argument.  Unknown strings raise.
+    """
+    if variant is None:
+        variant = bool(pipelined)
+    if variant is True:
+        return "pipelined"
+    if variant is False:
+        return "plain"
+    if variant not in VARIANTS:
+        raise ValueError(
+            f"unknown kernel variant {variant!r}; expected one of {VARIANTS}")
+    return variant
+
 
 @dataclasses.dataclass(frozen=True)
 class BlockPlan:
@@ -69,20 +105,30 @@ class BlockPlan:
         padded = math.prod(self.padded_shape)
         return 2 * padded * itemsize
 
-    def vmem_bytes_for(self, pipelined: bool) -> int:
+    def vmem_bytes_for(self, variant="plain") -> int:
         """Variant-aware VMEM footprint of the superstep kernel's scratch.
 
         The ``-pipelined`` double-buffered kernel revolves two halo'd window
         buffers (prefetch g+1 while g computes); the plain kernel holds just
-        one.  Both stage the output tile through a block-shaped buffer.
-        ``vmem_bytes`` (always 2 windows) is the historical conservative
-        bound; pruning plain-kernel plans with it forfeits bigger blocks /
-        deeper ``par_time`` for no reason.
+        one.  The ``-temporal`` kernel holds one *chunk-deep* window —
+        ``block + 2 * TEMPORAL_CHUNK * halo`` per axis — because a single
+        launch fuses ``TEMPORAL_CHUNK`` supersteps (eq. 2 with
+        ``par_time * TEMPORAL_CHUNK`` fused steps).  All variants stage the
+        output tile through a block-shaped buffer.  ``vmem_bytes`` (always
+        2 windows) is the historical conservative bound; pruning plain-kernel
+        plans with it forfeits bigger blocks / deeper ``par_time`` for no
+        reason.  ``variant`` also accepts the legacy bool.
         """
         itemsize = 4 if self.spec.dtype == "float32" else 2
-        windows = 2 if pipelined else 1
-        return itemsize * (windows * math.prod(self.padded_shape)
-                           + math.prod(self.block_shape))
+        v = normalize_variant(variant)
+        if v == "temporal":
+            window = math.prod(b + 2 * TEMPORAL_CHUNK * self.halo
+                               for b in self.block_shape)
+            windows = 1
+        else:
+            window = math.prod(self.padded_shape)
+            windows = 2 if v == "pipelined" else 1
+        return itemsize * (windows * window + math.prod(self.block_shape))
 
     # ---- redundancy accounting (paper's overlapped blocking cost) ----------
 
@@ -100,7 +146,8 @@ class BlockPlan:
         write = math.prod(self.block_shape) * itemsize
         return read + write
 
-    def run_bytes_per_superstep(self, grid_shape: Tuple[int, ...]) -> int:
+    def run_bytes_per_superstep(self, grid_shape: Tuple[int, ...],
+                                variant: str = "plain") -> int:
         """HBM bytes one fused-run superstep moves for ``grid_shape``.
 
         The padded-carry executor's stream is the kernel's own traffic —
@@ -109,7 +156,16 @@ class BlockPlan:
         ping-pong padded buffers (the carry is read from one and written
         through the other per superstep).  No O(volume) re-pad term: that
         is precisely what the padded layout eliminated.
+
+        ``variant="temporal"`` charges one chunk-deep launch (halo ring and
+        window ``TEMPORAL_CHUNK`` times deeper) amortized over the
+        ``TEMPORAL_CHUNK`` supersteps it advances — the ~1/C marginal-traffic
+        claim the traffic guard in tests/test_temporal_variant.py pins.
         """
+        if normalize_variant(variant) == "temporal":
+            deep = dataclasses.replace(
+                self, par_time=self.par_time * TEMPORAL_CHUNK)
+            return deep.run_bytes_per_superstep(grid_shape) // TEMPORAL_CHUNK
         itemsize = 4 if self.spec.dtype == "float32" else 2
         nblocks = math.prod(
             round_up(g, b) // b
@@ -190,6 +246,7 @@ def candidate_plans(
     max_par_time: int = 64,
     block_candidates: Optional[Sequence[Tuple[int, ...]]] = None,
     pipelined: bool = False,
+    variant: Optional[str] = None,
 ) -> list:
     """Enumerate alignment-respecting plans that fit the VMEM budget.
 
@@ -198,11 +255,15 @@ def candidate_plans(
     (par_time * radius) % SUBLANE == 0 — exactly their alignment trick with
     4 -> 8 for the TPU sublane.
 
-    ``pipelined`` selects the kernel variant being planned for: the
-    double-buffered kernel's two revolving windows halve the feasible block
-    volume, so plain-kernel plans are pruned against the one-window bound
-    (``BlockPlan.vmem_bytes_for``).
+    ``variant`` selects the kernel variant being planned for (``pipelined``
+    is the deprecated bool spelling): the double-buffered kernel's two
+    revolving windows halve the feasible block volume, the temporal kernel's
+    chunk-deep window shrinks it further still, so plain-kernel plans are
+    pruned against the one-window bound (``BlockPlan.vmem_bytes_for``).
+    Temporal plans are additionally pruned by the *chunk-deep* overlap tax —
+    the redundancy a temporal launch actually pays.
     """
+    v = normalize_variant(variant, pipelined)
     if block_candidates is None:
         if spec.ndim == 2:
             dims = [128, 256, 512, 1024, 2048]
@@ -217,9 +278,11 @@ def candidate_plans(
     for bs in block_candidates:
         for pt in range(1, max_par_time + 1):
             plan = BlockPlan(spec=spec, block_shape=tuple(bs), par_time=pt)
-            if plan.vmem_bytes_for(pipelined) > hw.vmem_budget_bytes:
+            if plan.vmem_bytes_for(v) > hw.vmem_budget_bytes:
                 continue
-            if plan.useful_fraction <= MIN_USEFUL_FRACTION:
+            tax_plan = plan if v != "temporal" else dataclasses.replace(
+                plan, par_time=pt * TEMPORAL_CHUNK)
+            if tax_plan.useful_fraction <= MIN_USEFUL_FRACTION:
                 continue  # overlapped-blocking tax beyond any win
             plans.append(plan)
     return plans
@@ -231,6 +294,7 @@ def plan_blocking(
     grid_shape: Optional[Tuple[int, ...]] = None,
     max_par_time: int = 64,
     pipelined: bool = False,
+    variant: Optional[str] = None,
 ) -> PlanEstimate:
     """Pick the best plan by the model — the paper's §V.A tuning loop.
 
@@ -245,10 +309,21 @@ def plan_blocking(
     ``grid_useful_fraction``, the VMEM predicate on ``vmem_budget_bytes``)
     live in this module so the two cannot drift.
     """
+    v = normalize_variant(variant, pipelined)
     best = None
     for plan in candidate_plans(spec, hw, max_par_time=max_par_time,
-                                pipelined=pipelined):
-        est = estimate(plan, hw)
+                                variant=v):
+        # A temporal launch streams the chunk-deep window and advances
+        # TEMPORAL_CHUNK supersteps: estimate() on the chunk-deep plan IS
+        # that launch's model, and its useful-GCell/s are directly
+        # comparable to a plain superstep's.  The returned plan keeps the
+        # caller-visible par_time.
+        if v == "temporal":
+            deep = dataclasses.replace(
+                plan, par_time=plan.par_time * TEMPORAL_CHUNK)
+            est = dataclasses.replace(estimate(deep, hw), plan=plan)
+        else:
+            est = estimate(plan, hw)
         # blocks larger than the grid still work (the kernel pads), but
         # padded cells are wasted compute — penalize them.
         useful = grid_useful_fraction(grid_shape, plan.block_shape)

@@ -180,7 +180,7 @@ class Decomposition:
 
 def _local_superstep(block, center, taps, *, program, plan, decomp,
                      axis_shards, global_shape, interpret, nb=0,
-                     pipelined=False):
+                     variant=None):
     """shard_map body: halo exchange + local temporal-blocked kernel.
 
     ``axis_shards[d]`` is the static shard count along grid axis d; ``nb``
@@ -212,7 +212,7 @@ def _local_superstep(block, center, taps, *, program, plan, decomp,
 
     out = common.superstep_call(haloed, center, taps, program, plan,
                                 tuple(global_shape), interpret, offs,
-                                pipelined)
+                                variant=variant)
     return out
 
 
@@ -230,11 +230,15 @@ class DistributedStencil:
 
     The *local* kernel is resolved through the backend registry: ``backend``
     pins a registered name (default: the platform's pallas backend), and
-    ``pipelined=True`` resolves its ``-pipelined`` double-buffered sibling —
-    the same resolution rule as ``StencilEngine``, so every kernel variant
-    that exists on one chip exists sharded.  Only backends declaring
-    ``local_kernel`` traits qualify (``xla-reference`` pads its own
-    boundaries and cannot consume an exchanged halo).
+    ``variant`` resolves the named kernel-variant sibling ("pipelined"
+    resolves the ``-pipelined`` double-buffered lowering; ``pipelined=True``
+    is the deprecated bool spelling) — the same resolution rule as the
+    unified executor, so every kernel variant that exists on one chip
+    exists sharded.  The exception is "temporal": its launch advances
+    ``TEMPORAL_CHUNK`` supersteps but the mesh exchanges halos once per
+    superstep, so the sharded path refuses it at construction.  Only
+    backends declaring ``local_kernel`` traits qualify (``xla-reference``
+    pads its own boundaries and cannot consume an exchanged halo).
     """
 
     spec: object
@@ -246,6 +250,7 @@ class DistributedStencil:
     interpret: Optional[bool] = None
     backend: Optional[str] = None
     pipelined: bool = False
+    variant: Optional[str] = None
     # Internal constructions (the unified executor) pass _warn=False; direct
     # use is deprecated in favor of repro.stencil(...).compile(devices=...).
     _warn: bool = True
@@ -264,14 +269,24 @@ class DistributedStencil:
         self.program = as_program(self.spec)
         self.pcoeffs = normalize_coeffs(self.program, self.coeffs)
 
-        name, version, traits = resolve_backend(self.backend, self.pipelined)
+        name, version, traits = resolve_backend(
+            self.backend, self.pipelined, variant=self.variant)
+        if traits.variant == "temporal":
+            raise ValueError(
+                f"RP110: backend {name!r} (the temporally-fused variant) "
+                f"cannot run sharded: its launch advances a whole superstep "
+                f"chunk per kernel, but the mesh exchanges halos once per "
+                f"superstep — the chunk would read neighbor cells that were "
+                f"never exchanged (fix: variant='plain' or 'pipelined' on "
+                f"the mesh)")
         if not traits.local_kernel:
             raise ValueError(
                 f"backend {name!r} cannot serve as the distributed local "
                 f"kernel (no local_kernel trait); use a pallas backend")
         self.backend_name = name
         self.backend_version = version
-        self.pipelined = traits.pipelined
+        self.variant = traits.variant
+        self.pipelined = traits.variant == "pipelined"
         if self.interpret is None:
             self.interpret = traits.interpret or common.default_interpret()
 
@@ -315,7 +330,7 @@ class DistributedStencil:
                        decomp=decomp, axis_shards=shards,
                        global_shape=self.global_shape,
                        interpret=self.interpret, nb=nb,
-                       pipelined=self.pipelined)
+                       variant=self.variant)
         return compat.shard_map(
             body, mesh=self.mesh,
             in_specs=(gspec, P(), P()),
@@ -371,7 +386,7 @@ class DistributedStencil:
             if periodic and not (decomp.partition[d] and shards[d] > 1))
         layout = common.PaddedLayout(halo=H, local_shape=local,
                                      rounded=local, wrap_axes=wrap_axes)
-        interpret, pipelined = self.interpret, self.pipelined
+        interpret, variant = self.interpret, self.variant
         global_shape = tuple(self.global_shape)
         rem_plan = dataclasses.replace(plan, par_time=rem) if rem else None
 
@@ -399,7 +414,7 @@ class DistributedStencil:
                 s2, o = common._padded_superstep_pallas(
                     s, d2, center, taps, program=program, plan=step_plan,
                     layout=layout, global_shape=global_shape,
-                    interpret=interpret, offsets=offs, pipelined=pipelined)
+                    interpret=interpret, offsets=offs, variant=variant)
                 return (o, s2)
 
             carry = lax.fori_loop(0, full,

@@ -84,7 +84,8 @@ def paper_predicted_gbps(
     return gbps_from_cells_per_s(cells_per_s)
 
 
-def predicted_gbps(program, plan, chip: TpuChip = V5E) -> float:
+def predicted_gbps(program, plan, chip: TpuChip = V5E,
+                   variant: str = "plain") -> float:
     """Programmatic model entry point: effective GB/s the TPU roofline model
     predicts for a (``StencilProgram``, ``BlockPlan``) pair.
 
@@ -93,12 +94,23 @@ def predicted_gbps(program, plan, chip: TpuChip = V5E) -> float:
     cell-updates/s from ``blocking.estimate`` — max(compute, HBM) per block
     round trip with the overlapped-blocking redundancy charged — converted
     through the same effective-bandwidth formula as the paper rows.
-    Accepts a legacy ``StencilSpec`` for ``program``.
+    ``variant`` names the kernel lowering the plan runs under: the
+    temporally-fused variant is modeled as one chunk-deep launch (eq. 2
+    with ``par_time * TEMPORAL_CHUNK`` fused steps) whose useful GCell/s
+    are directly comparable to a plain superstep's; "pipelined" shares the
+    plain model (same traffic, same FLOPs).  Accepts a legacy
+    ``StencilSpec`` for ``program``.
     """
-    from repro.core.blocking import estimate  # local: blocking imports spec
+    import dataclasses
+
+    from repro.core.blocking import (  # local: blocking imports spec
+        TEMPORAL_CHUNK, estimate, normalize_variant)
     from repro.core.program import as_program
 
     prog = as_program(program)
+    if normalize_variant(variant) == "temporal":
+        plan = dataclasses.replace(
+            plan, par_time=plan.par_time * TEMPORAL_CHUNK)
     est = estimate(plan, chip)
     return gbps_from_cells_per_s(est.gcells_per_s,
                                  cell_bytes=prog.bytes_per_cell)

@@ -69,14 +69,15 @@ class StencilEngine:
             plan = plan_blocking(spec, hw, grid_shape,
                                  max_par_time=max_par_time).plan
         return cls(spec=spec, coeffs=coeffs, plan=plan, hw=hw,
-                   interpret=interpret, backend=backend, pipelined=pipelined)
+                   interpret=interpret, backend=backend,
+                   pipelined=pipelined)  # legacy-ok
 
     def lowered(self):
         """Lower through the backend registry (pins ``backend`` if set)."""
         from repro.backends import lower, resolve_backend
         name = self.backend
         if self.pipelined and name is not None:
-            name, _, _ = resolve_backend(name, pipelined=True)
+            name, _, _ = resolve_backend(name, pipelined=True)  # legacy-ok
         return lower(as_program(self.spec), self.plan, coeffs=self.coeffs,
                      backend=name)
 
@@ -85,7 +86,7 @@ class StencilEngine:
             return self.lowered().superstep(grid)
         return ops.stencil_superstep(grid, self.spec, self.coeffs, self.plan,
                                      interpret=self.interpret,
-                                     pipelined=self.pipelined)
+                                     pipelined=self.pipelined)  # legacy-ok
 
     def run(self, grid: jnp.ndarray, steps: int) -> jnp.ndarray:
         """Advance ``steps`` time steps through the unified executor."""
@@ -112,8 +113,8 @@ class StencilEngine:
                 grid.shape[nb:], steps=steps,
                 batch=grid.shape[0] if nb else None,
                 plan=self.plan, backend=self.backend,
-                pipelined=self.pipelined, interpret=self.interpret,
-                hw=self.hw)
+                pipelined=self.pipelined,  # legacy-ok
+                interpret=self.interpret, hw=self.hw)
             self._memo = (key, cs)
         return cs.run(grid, steps)
 

@@ -12,13 +12,15 @@ the API level.  Historically the repo exposed four divergent run surfaces —
     cs = sten.compile((4096, 4096), steps=64,      # resolve everything
                       batch=None, devices=None,
                       plan="auto", backend=None,
-                      pipelined=False, donate=True)
+                      variant=None, donate=True)
     out = cs.run(grid)                             # one dispatch
 
 ``compile`` resolves the blocking plan (autotuner + persistent plan cache
 for ``plan="auto"``, the pure model planner for ``plan="model"``, or a
-caller-pinned ``BlockPlan``), the backend (registry name, ``-pipelined``
-sibling when asked), and — for ``devices`` > 1 — the mesh decomposition
+caller-pinned ``BlockPlan``), the backend (registry name, its
+``-pipelined``/``-temporal`` variant sibling when ``variant=`` asks — the
+deprecated ``pipelined=True`` bool still maps to ``variant="pipelined"``),
+and — for ``devices`` > 1 — the mesh decomposition
 (``enumerate_decompositions`` via the mesh-aware tuner, or model-ranked
 against a pinned plan).  The returned :class:`CompiledStencil` carries
 ``.plan``, ``.decomp``, ``.cost`` (the roofline model's predicted GB/s /
@@ -53,6 +55,7 @@ import math
 import operator
 import os
 import time
+import warnings
 from typing import Optional, Tuple, Union
 
 import jax
@@ -95,6 +98,33 @@ def _as_int(value) -> Optional[int]:
         return operator.index(value)
     except TypeError:
         return None
+
+
+def _normalize_variant_request(variant: Optional[str],
+                               pipelined: Optional[bool]) -> Optional[str]:
+    """Apply the deprecated ``pipelined=`` shim to a ``variant=`` request.
+
+    ``pipelined`` left at its ``None`` default means the caller never used
+    the legacy spelling — ``variant`` passes through untouched (``None`` =
+    resolve the backend name as given, search variants under tuning).
+    An explicit bool warns and maps bit-compatibly (True -> "pipelined",
+    False -> "plain"); mixing both spellings is an RP114 rejection rather
+    than a silent precedence rule.
+    """
+    if pipelined is None:
+        return variant
+    if variant is not None:
+        raise DiagnosticError([_diag(
+            "RP114",
+            f"conflicting kernel-variant requests: pipelined={pipelined!r} "
+            f"and variant={variant!r} were both given",
+            hint="pass only variant= ('plain' | 'pipelined' | 'temporal' | "
+                 "'auto'); pipelined= is a deprecated alias for "
+                 "variant='pipelined'")])
+    warnings.warn(
+        "pipelined= is deprecated; pass variant='pipelined' "
+        "(or variant='plain') instead", DeprecationWarning, stacklevel=3)
+    return "pipelined" if pipelined else "plain"
 
 
 def _check_steps(steps, context: str = "") -> int:
@@ -141,7 +171,8 @@ class Stencil:
                 devices: Devices = None,
                 plan: Union[str, BlockPlan] = "auto",
                 backend: Optional[str] = None,
-                pipelined: bool = False,
+                variant: Optional[str] = None,
+                pipelined: Optional[bool] = None,
                 donate: bool = True,
                 interpret: Optional[bool] = None,
                 hw: TpuChip = V5E,
@@ -158,8 +189,9 @@ class Stencil:
         the XLA ``cost_analysis`` bytes/FLOPs of the actual executable for
         the model-vs-compiler traffic comparison.
         """
+        variant = _normalize_variant_request(variant, pipelined)
         kwargs = dict(steps=steps, batch=batch, devices=devices, plan=plan,
-                      backend=backend, pipelined=pipelined, donate=donate,
+                      backend=backend, variant=variant, donate=donate,
                       interpret=interpret, hw=hw, max_par_time=max_par_time,
                       cache=cache, cache_path=cache_path)
         rec = obs.active()
@@ -192,7 +224,7 @@ class Stencil:
                  devices: Devices = None,
                  plan: Union[str, BlockPlan] = "auto",
                  backend: Optional[str] = None,
-                 pipelined: bool = False,
+                 variant: Optional[str] = None,
                  donate: bool = True,
                  interpret: Optional[bool] = None,
                  hw: TpuChip = V5E,
@@ -216,8 +248,18 @@ class Stencil:
                                (``blocking.plan_blocking``), or
                      a ``BlockPlan`` pinned by the caller.
         backend      a registry backend name (default: the platform's
-                     pallas backend); ``pipelined=True`` resolves its
-                     ``-pipelined`` double-buffered sibling.
+                     pallas backend).
+        variant      which kernel lowering of the backend family to use:
+                     "plain", "pipelined" (double-buffered prefetch), or
+                     "temporal" (superstep-chunked in-VMEM fusion) resolve
+                     the matching registry sibling; "auto" (and the None
+                     default) lets ``plan="auto"`` search every registered
+                     variant of the backend and keeps the model's winner.
+                     Outside tuning, None/"auto" mean the backend name as
+                     given (i.e. plain unless the name itself pins a
+                     variant).  The deprecated ``pipelined=`` bool maps
+                     onto this (True -> "pipelined", False -> "plain");
+                     passing both is an RP114 rejection.
         donate       donate the caller's (sharded) buffer to the run on the
                      mesh path — supersteps then update it in place and the
                      input is consumed.  On a single device the fused
@@ -262,8 +304,25 @@ class Stencil:
 
         decomp_axes, n_devices = _normalize_devices(prog, devices)
 
-        name, version, traits = resolve_backend(backend, pipelined)
-        pipelined = traits.pipelined
+        concrete = None if variant in (None, "auto") else variant
+        name, version, traits = resolve_backend(backend, variant=concrete)
+        # search the variant axis only when nothing pinned one: an explicit
+        # variant= request resolved above, and an explicit -pipelined/
+        # -temporal backend name must stay exactly what the caller named
+        variant_search = (plan == "auto" and concrete is None
+                          and traits.variant == "plain")
+        if n_devices > 1 and traits.variant == "temporal":
+            raise DiagnosticError([_diag(
+                "RP110",
+                f"backend {name!r} (the temporally-fused variant) cannot "
+                f"run sharded: its launch advances TEMPORAL_CHUNK "
+                f"supersteps per kernel, but the mesh executor exchanges "
+                f"halos once per superstep — the chunk would read "
+                f"neighbor cells that were never exchanged; "
+                f"compile(devices={devices!r}) needs a per-superstep "
+                f"local kernel",
+                hint="drop devices= for the temporal variant, or use "
+                     "variant='plain'/'pipelined' on the mesh")])
         if n_devices > 1 and not traits.local_kernel:
             raise DiagnosticError([_diag(
                 "RP110",
@@ -292,18 +351,22 @@ class Stencil:
             from repro.tuning import autotune
             tuned = autotune(
                 prog, hw, grid_shape=grid_shape, backend=name,
+                variant="auto" if variant_search else None,
                 measure=False, cache=cache, cache_path=cache_path,
                 max_par_time=max_par_time,
                 n_devices=n_devices if (n_devices > 1
                                         and decomp_axes is None) else None,
                 decomposition=decomp_axes if n_devices > 1 else None)
             resolved = tuned.plan
+            if tuned.backend != name:
+                # the variant search picked a sibling lowering of the family
+                name, version, traits = resolve_backend(tuned.backend)
             if n_devices > 1:
                 decomp_axes = tuned.decomp or decomp_axes
         elif plan == "model":
             resolved = plan_blocking(prog, hw, grid_shape=grid_shape,
                                      max_par_time=max_par_time,
-                                     pipelined=pipelined).plan
+                                     variant=traits.variant).plan
             if n_devices > 1 and decomp_axes is None:
                 decomp_axes = _pick_decomposition(
                     prog, resolved, grid_shape, n_devices, hw, name, version)
@@ -321,10 +384,11 @@ class Stencil:
         # dtype support) BEFORE any Pallas lowering — raises DiagnosticError
         # with stable RP codes; warnings survive on CompiledStencil.preflight
         preflight = _preflight(prog, resolved, grid_shape, hw,
-                               decomp=decomp_axes, pipelined=pipelined)
+                               decomp=decomp_axes, variant=traits.variant)
         cand = Candidate(
             plan=resolved, backend=name, backend_version=version,
             halo_aligned=halo_aligned(resolved.par_time, prog.halo_radius),
+            variant=traits.variant,
             decomp=MeshDecomposition(decomp_axes) if decomp_axes else None)
         cost = predict(prog, cand, hw, grid_shape=grid_shape)
 
@@ -357,7 +421,7 @@ class Stencil:
             program=prog, coeffs=self.coeffs, grid_shape=grid_shape,
             steps=steps, batch=batch, plan=resolved, backend=name,
             backend_version=version, decomp=decomp_axes, cost=cost,
-            tuned=tuned, pipelined=pipelined, donate=donate,
+            tuned=tuned, variant=traits.variant, donate=donate,
             interpret=interpret, devices=n_devices, dist=dist,
             lowered=lowered, hw=hw, preflight=preflight)
 
@@ -439,7 +503,7 @@ class CompiledStencil:
                  grid_shape: Tuple[int, ...], steps: int,
                  batch: Optional[int], plan: BlockPlan, backend: str,
                  backend_version: int, decomp: Optional[Tuple[int, ...]],
-                 cost: RankedCandidate, tuned, pipelined: bool, donate: bool,
+                 cost: RankedCandidate, tuned, variant: str, donate: bool,
                  interpret: Optional[bool], devices: int,
                  dist: Optional[DistributedStencil], lowered,
                  hw: TpuChip = V5E, preflight=None):
@@ -459,7 +523,10 @@ class CompiledStencil:
         self.decomp = decomp
         self.cost = cost
         self.tuned = tuned
-        self.pipelined = pipelined
+        #: which kernel lowering compile() resolved ("plain" | "pipelined"
+        #: | "temporal"); ``pipelined`` stays as the deprecated bool view.
+        self.variant = variant
+        self.pipelined = variant == "pipelined"
         self.donate = donate
         self.interpret = interpret
         self.devices = devices
@@ -487,10 +554,11 @@ class CompiledStencil:
         where = "1 device" if self.decomp is None else \
             f"mesh {'x'.join(map(str, self.decomp))}"
         b = "" if self.batch is None else f" batch={self.batch}"
+        v = "" if self.variant == "plain" else f" variant={self.variant}"
         return (f"CompiledStencil(grid={self.grid_shape}{b} "
                 f"steps={self.steps} block={self.plan.block_shape} "
-                f"par_time={self.plan.par_time} backend={self.backend} "
-                f"on {where})")
+                f"par_time={self.plan.par_time} backend={self.backend}"
+                f"{v} on {where})")
 
     # -- execution -----------------------------------------------------------
 
@@ -563,7 +631,7 @@ class CompiledStencil:
             return self._lowered_jit(grid, steps)
         return ops._stencil_run(grid, self.program, self.coeffs, self.plan,
                                 steps, interpret=self.interpret,
-                                pipelined=self.pipelined)
+                                variant=self.variant)
 
     def _run_recorded(self, rec, grid, steps: int):
         """One dispatch under a ``run`` span + a history accuracy sample."""
@@ -623,6 +691,7 @@ class CompiledStencil:
             "decomp": None if self.decomp is None else list(self.decomp),
             "block_shape": list(self.plan.block_shape),
             "par_time": self.plan.par_time,
+            "variant": self.variant,
             "pipelined": self.pipelined,
             "predicted_gbps": self.cost.predicted_gbps,
             "bound": self.cost.bound,

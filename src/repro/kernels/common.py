@@ -42,7 +42,8 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.blocking import BlockPlan, round_up  # noqa: F401 (re-export)
+from repro.core.blocking import (  # noqa: F401 (re-export)
+    BlockPlan, TEMPORAL_CHUNK, normalize_variant, round_up)
 from repro.core.codegen import boundary_pad, tap_interior_update
 from repro.core.program import ProgramCoeffs, StencilProgram
 
@@ -378,14 +379,15 @@ def _superstep_pallas(padded: jnp.ndarray, center: jnp.ndarray,
 @functools.partial(
     jax.jit,
     static_argnames=("program", "plan", "true_shape", "interpret",
-                     "pipelined"),
+                     "pipelined", "variant"),
 )
 def superstep_call(padded: jnp.ndarray, center: jnp.ndarray,
                    taps: jnp.ndarray, program: StencilProgram,
                    plan: BlockPlan, true_shape: Tuple[int, ...],
                    interpret: bool,
                    offsets: jnp.ndarray | None = None,
-                   pipelined: bool = False) -> jnp.ndarray:
+                   pipelined: bool = False,
+                   variant: Optional[str] = None) -> jnp.ndarray:
     """Invoke the pallas kernel over a pre-padded grid.
 
     ``padded`` has shape ``rounded_up(local) + 2*halo`` per axis — or
@@ -395,11 +397,14 @@ def superstep_call(padded: jnp.ndarray, center: jnp.ndarray,
     decomposition).  ``taps`` is the canonical tap-order coefficient vector
     (any leading unit dims are flattened).  ``true_shape`` is the GLOBAL grid
     shape and ``offsets`` this shard's global origin.  Returns the rounded-up
-    local grid after ``par_time`` steps; caller slices back.
+    local grid after ``par_time`` steps; caller slices back.  ``variant``
+    supersedes the deprecated ``pipelined`` bool (``None`` defers to it); a
+    lone superstep has no chunk to fuse, so "temporal" demotes to plain.
     """
     _note_trace("superstep_call")
+    v = normalize_variant(variant, pipelined)
     return _superstep_pallas(padded, center, taps, program, plan, true_shape,
-                             interpret, offsets, pipelined)
+                             interpret, offsets, v == "pipelined")
 
 
 # ---- padded-carry (zero-copy) fused executor --------------------------------
@@ -678,6 +683,37 @@ def build_padded_pipelined_kernel(program: StencilProgram, plan: BlockPlan,
     return kernel
 
 
+def build_temporal_kernel(program: StencilProgram, plan: BlockPlan,
+                          layout: PaddedLayout,
+                          global_shape: Tuple[int, ...],
+                          batch: Optional[int] = None,
+                          chunk: int = TEMPORAL_CHUNK):
+    """Superstep-chunk kernel: ``chunk`` supersteps fused into ONE launch.
+
+    Overlapped tiling in time, lifted one level above the per-superstep
+    fusion: the launch DMAs a chunk-deep halo'd window
+    (``block + 2 * chunk * plan.halo`` per axis) out of the padded carry,
+    applies ``chunk * plan.par_time`` stencil applications with shrinking
+    valid regions — each inner step consumes ``halo_radius`` cells of the
+    overlap (paper eq. 2) — and writes only the final block interior back.
+    The carry ping-pong and the per-block window stream are thus paid once
+    per ``chunk`` supersteps, dropping per-superstep HBM traffic to ~1/chunk
+    of the plain kernel's (``BlockPlan.run_bytes_per_superstep`` with
+    ``variant="temporal"`` is the model; the traffic guard in
+    tests/test_temporal_variant.py measures it).
+
+    Structurally this IS :func:`build_padded_superstep_kernel` built for the
+    chunk-deep plan (``par_time * chunk``): the shrinking-region loop,
+    per-step boundary fixup, ring-offset window reuse, and wrap refresh are
+    all shared, so the temporal variant inherits the plain path's proven
+    boundary semantics — only the traffic accounting changes.  ``layout``
+    must carry the chunk-deep ring (``layout.halo >= chunk * plan.halo``).
+    """
+    deep = dataclasses.replace(plan, par_time=plan.par_time * chunk)
+    return build_padded_superstep_kernel(program, deep, layout, global_shape,
+                                         batch=batch)
+
+
 def _padded_superstep_pallas(src: jnp.ndarray, dst: jnp.ndarray,
                              center: jnp.ndarray, taps: jnp.ndarray, *,
                              program: StencilProgram, plan: BlockPlan,
@@ -685,8 +721,11 @@ def _padded_superstep_pallas(src: jnp.ndarray, dst: jnp.ndarray,
                              global_shape: Tuple[int, ...],
                              interpret: bool,
                              offsets: jnp.ndarray | None = None,
-                             pipelined: bool = False):
-    """One superstep over the persistent padded carry.
+                             pipelined: bool = False,
+                             variant: Optional[str] = None):
+    """One superstep (or, for ``variant="temporal"``, one superstep-chunk
+    advancing ``TEMPORAL_CHUNK`` supersteps) over the persistent padded
+    carry.
 
     ``src`` and ``dst`` are both in padded layout (``layout.padded_shape``
     per spatial axis, optionally behind one batch axis).  Returns
@@ -696,12 +735,18 @@ def _padded_superstep_pallas(src: jnp.ndarray, dst: jnp.ndarray,
     next superstep's destination.  Only the periodic variant aliases the
     source as a second output (its ring refresh mutates the buffer);
     clamp/constant leave ``src`` a plain input so the executable carries a
-    single P-sized output.
+    single P-sized output.  ``variant`` supersedes the deprecated
+    ``pipelined`` bool (``None`` defers to it).
     """
+    v = normalize_variant(variant, pipelined)
     ndim = program.ndim
     batch: Optional[int] = src.shape[0] \
         if batch_dims(program, src.ndim) else None
     block = plan.block_shape
+    # The temporal kernel streams the chunk-deep window of the chunk-deep
+    # plan; its output block (and hence the pallas grid) is unchanged.
+    eff_plan = plan if v != "temporal" else dataclasses.replace(
+        plan, par_time=plan.par_time * TEMPORAL_CHUNK)
     grid = tuple(layout.rounded[d] // block[d] for d in range(ndim))
     wrap = bool(layout.wrap_axes)
 
@@ -710,10 +755,10 @@ def _padded_superstep_pallas(src: jnp.ndarray, dst: jnp.ndarray,
     c2 = center.reshape((1, 1)).astype(src.dtype)
     t2 = taps.reshape((1, -1)).astype(src.dtype)
 
-    buf_shape = plan.padded_shape if batch is None \
-        else (1,) + plan.padded_shape
+    buf_shape = eff_plan.padded_shape if batch is None \
+        else (1,) + eff_plan.padded_shape
     out_buf_shape = block if batch is None else (1,) + block
-    if pipelined:
+    if v == "pipelined":
         kernel = build_padded_pipelined_kernel(program, plan, layout,
                                                global_shape, grid,
                                                batch=batch)
@@ -726,8 +771,12 @@ def _padded_superstep_pallas(src: jnp.ndarray, dst: jnp.ndarray,
             dma_semaphore,
         ]
     else:
-        kernel = build_padded_superstep_kernel(program, plan, layout,
-                                               global_shape, batch=batch)
+        if v == "temporal":
+            kernel = build_temporal_kernel(program, plan, layout,
+                                           global_shape, batch=batch)
+        else:
+            kernel = build_padded_superstep_kernel(program, plan, layout,
+                                                   global_shape, batch=batch)
         scratch = [
             vmem_scratch(buf_shape, src.dtype),
             vmem_scratch(out_buf_shape, src.dtype),
@@ -776,7 +825,8 @@ def _run_call_padfallback(grid: jnp.ndarray, center: jnp.ndarray,
                           taps: jnp.ndarray, full: jnp.ndarray, *,
                           program: StencilProgram, plan: BlockPlan,
                           true_shape: Tuple[int, ...], interpret: bool,
-                          rem: int, pipelined: bool) -> jnp.ndarray:
+                          rem: int, pipelined: bool = False,
+                          variant: Optional[str] = None) -> jnp.ndarray:
     """Legacy fused-run body: re-pad the true region every superstep.
 
     Kept only for wrap-degenerate periodic configs (a wrap axis smaller
@@ -784,7 +834,18 @@ def _run_call_padfallback(grid: jnp.ndarray, center: jnp.ndarray,
     ``PaddedLayout.wrap_degenerate``), where the in-kernel ring refresh
     would need multi-lap copies.  Costs an O(volume) extra sweep per
     superstep; every other config takes the padded-carry path.
+
+    ``variant`` supersedes the deprecated ``pipelined`` bool and must be
+    "plain" or "pipelined": a wrap-degenerate temporal run is lowered by
+    ``run_call`` as the chunk-deep *plan* with the plain kernel, so this
+    body never builds a temporal window itself.
     """
+    v = normalize_variant(variant, pipelined)
+    if v == "temporal":
+        raise ValueError(
+            "pass the chunk-deep plan with variant='plain' instead of "
+            "variant='temporal' to _run_call_padfallback")
+    pipe = v == "pipelined"
     ndim = program.ndim
     nb = grid.ndim - ndim
     rounded = tuple(round_up(true_shape[d], plan.block_shape[d])
@@ -800,7 +861,7 @@ def _run_call_padfallback(grid: jnp.ndarray, center: jnp.ndarray,
             (h, rounded[d] - true_shape[d] + h) for d in range(ndim)]
         padded = boundary_pad(program, g[true_ix], pad)
         return _superstep_pallas(padded, center, taps, program, step_plan,
-                                 true_shape, interpret, None, pipelined)
+                                 true_shape, interpret, None, pipe)
 
     g = lax.fori_loop(0, full, lambda _, g: superstep(g, plan), g)
     if rem:
@@ -811,14 +872,15 @@ def _run_call_padfallback(grid: jnp.ndarray, center: jnp.ndarray,
 @functools.partial(
     jax.jit,
     static_argnames=("program", "plan", "true_shape", "interpret", "rem",
-                     "pipelined"),
+                     "pipelined", "variant"),
     donate_argnums=(0,),
 )
 def run_call(grid: jnp.ndarray, center: jnp.ndarray,
              taps: jnp.ndarray, full: jnp.ndarray, *,
              program: StencilProgram, plan: BlockPlan,
              true_shape: Tuple[int, ...], interpret: bool, rem: int,
-             pipelined: bool = False) -> jnp.ndarray:
+             pipelined: bool = False,
+             variant: Optional[str] = None) -> jnp.ndarray:
     """Fused multi-superstep executor over a persistent padded carry.
 
     ``grid`` is the true-shaped grid (``(B, *true_shape)`` with a leading
@@ -833,44 +895,65 @@ def run_call(grid: jnp.ndarray, center: jnp.ndarray,
     writes) plus the ping-pong pass-through, matching
     ``BlockPlan.run_bytes_per_superstep``.
 
-    ``full`` is the number of full supersteps and stays *dynamic* (a
-    ``fori_loop`` trip count): any ``steps = k * par_time + rem`` with the
+    ``variant`` selects the kernel variant ("plain" | "pipelined" |
+    "temporal"; ``None`` defers to the deprecated ``pipelined`` bool).
+    Under ``variant="temporal"`` the carry ring is ``TEMPORAL_CHUNK`` times
+    deeper and each loop iteration is one superstep-*chunk*
+    (:func:`build_temporal_kernel` advancing ``TEMPORAL_CHUNK * par_time``
+    steps per launch); ``full`` then counts chunks and ``rem`` leftover
+    *steps* in ``[0, TEMPORAL_CHUNK * par_time)``, executed as one plain
+    shallower superstep reading inside the same deep ring (the existing
+    ring-offset reuse).  Wrap-degenerate periodic configs fall back to the
+    legacy re-pad body, for temporal with the chunk-deep plan so the step
+    count is preserved.
+
+    ``full`` is the number of full supersteps (chunks) and stays *dynamic*
+    (a ``fori_loop`` trip count): any ``steps = k * period + rem`` with the
     same remainder reuses one executable; only a distinct ``rem`` (a
     shallower remainder superstep reading inside the same ring)
-    recompiles.  Returns the true-shaped grid after ``full * par_time +
-    rem`` steps — the interior slice of the final carry.
+    recompiles.  Returns the true-shaped grid after ``full * period + rem``
+    steps — the interior slice of the final carry.
     """
     _note_trace("run_call")
+    v = normalize_variant(variant, pipelined)
     ndim = program.ndim
     nb = grid.ndim - ndim
-    H = plan.halo
+    chunk = TEMPORAL_CHUNK if v == "temporal" else 1
+    H = chunk * plan.halo
     rounded = tuple(round_up(true_shape[d], plan.block_shape[d])
                     for d in range(ndim))
     wrap_axes = tuple(range(ndim)) if program.boundary == "periodic" else ()
     layout = PaddedLayout(halo=H, local_shape=tuple(true_shape),
                           rounded=rounded, wrap_axes=wrap_axes)
     if layout.wrap_degenerate():
+        fb_plan = plan if v != "temporal" else dataclasses.replace(
+            plan, par_time=plan.par_time * TEMPORAL_CHUNK)
         return _run_call_padfallback(grid, center, taps, full,
-                                     program=program, plan=plan,
+                                     program=program, plan=fb_plan,
                                      true_shape=true_shape,
                                      interpret=interpret, rem=rem,
-                                     pipelined=pipelined)
+                                     variant="plain" if v == "temporal"
+                                     else v)
     P = layout.padded_shape
     src = jnp.pad(grid, [(0, 0)] * nb + [
         (H, P[d] - H - true_shape[d]) for d in range(ndim)])
     dst = jnp.zeros_like(src)
 
-    def superstep(carry, step_plan):
+    def superstep(carry, step_plan, step_variant):
         s, d = carry
         s2, o = _padded_superstep_pallas(
             s, d, center, taps, program=program, plan=step_plan,
             layout=layout, global_shape=tuple(true_shape),
-            interpret=interpret, pipelined=pipelined)
+            interpret=interpret, variant=step_variant)
         return (o, s2)
 
-    carry = lax.fori_loop(0, full, lambda _, c: superstep(c, plan),
+    carry = lax.fori_loop(0, full, lambda _, c: superstep(c, plan, v),
                           (src, dst))
     if rem:
-        carry = superstep(carry, dataclasses.replace(plan, par_time=rem))
+        # The remainder (< chunk * par_time steps) runs as one plain (or
+        # pipelined) shallower superstep whose window reads at ring offset
+        # H - rem * halo_radius inside the same deep ring.
+        carry = superstep(carry, dataclasses.replace(plan, par_time=rem),
+                          "plain" if v == "temporal" else v)
     return carry[0][(slice(None),) * nb + tuple(
         slice(H, H + true_shape[d]) for d in range(ndim))]

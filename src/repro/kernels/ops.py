@@ -11,8 +11,11 @@ the historical one-dispatch-per-superstep Python chain (kept reachable as
 
 Both entry points accept a leading batch axis — ``(B, *grid)`` runs B
 independent grids through one kernel launch (an extra leading pallas grid
-dimension) — and a ``pipelined=True`` knob selecting the double-buffered
-prefetch kernel (the paper's deep pipeline, §III.A).
+dimension) — and a ``variant`` knob ("plain" | "pipelined" | "temporal")
+selecting the kernel variant: double-buffered prefetch (the paper's deep
+pipeline, §III.A) or superstep chunking (``TEMPORAL_CHUNK`` supersteps fused
+per launch).  The deprecated ``pipelined=True`` bool maps to
+``variant="pipelined"``.
 
 Both accept the legacy (``StencilSpec``, ``StencilCoeffs``) pair or the
 unified-IR (``StencilProgram``, ``ProgramCoeffs``) pair.
@@ -31,7 +34,7 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from repro.core.blocking import BlockPlan
+from repro.core.blocking import BlockPlan, normalize_variant
 from repro.core.program import as_program, normalize_coeffs
 from repro.kernels import common
 from repro.kernels.stencil2d import stencil2d_superstep
@@ -40,17 +43,24 @@ from repro.kernels.stencil3d import stencil3d_superstep
 
 def stencil_superstep(grid, spec, coeffs, plan: BlockPlan, *,
                       interpret: Optional[bool] = None,
-                      pipelined: bool = False):
+                      pipelined: bool = False,
+                      variant: Optional[str] = None):
+    # A single superstep cannot amortize a chunk, so the temporal variant's
+    # superstep IS the plain kernel (one launch, par_time fused steps).
+    v = normalize_variant(variant, pipelined)
+    if v == "temporal":
+        v = "plain"
     if as_program(spec).ndim == 2:
         return stencil2d_superstep(grid, spec, coeffs, plan,
-                                   interpret=interpret, pipelined=pipelined)
+                                   interpret=interpret, variant=v)
     return stencil3d_superstep(grid, spec, coeffs, plan, interpret=interpret,
-                               pipelined=pipelined)
+                               variant=v)
 
 
 def stencil_run(grid, spec, coeffs, plan: BlockPlan, steps: int, *,
                 interpret: Optional[bool] = None,
                 pipelined: bool = False,
+                variant: Optional[str] = None,
                 fused: bool = True):
     """Deprecated front end of :func:`_stencil_run`.
 
@@ -65,41 +75,53 @@ def stencil_run(grid, spec, coeffs, plan: BlockPlan, steps: int, *,
         "steps=...).run(grid) (DESIGN.md §9)",
         DeprecationWarning, stacklevel=2)
     return _stencil_run(grid, spec, coeffs, plan, steps,
-                        interpret=interpret, pipelined=pipelined,
-                        fused=fused)
+                        interpret=interpret,
+                        pipelined=pipelined,  # legacy-ok
+                        variant=variant, fused=fused)
 
 
 def _stencil_run(grid, spec, coeffs, plan: BlockPlan, steps: int, *,
                  interpret: Optional[bool] = None,
                  pipelined: bool = False,
+                 variant: Optional[str] = None,
                  fused: bool = True):
     """Advance ``steps`` time steps using temporal blocking.
 
-    steps = k * par_time + rem: k full supersteps, then one superstep with
-    par_time = rem (same spatial blocks, shallower halo).  ``fused=True``
-    (the default) executes the whole run as one donated executable with a
-    dynamic full-superstep count (see ``common.run_call``); ``fused=False``
-    keeps the eager Python chain of per-superstep dispatches.  ``grid`` may
-    carry a leading batch axis of independent grids.
+    steps = k * period + rem, where period is ``par_time`` (one superstep
+    per kernel launch) or, under ``variant="temporal"``,
+    ``par_time * TEMPORAL_CHUNK`` (one superstep-chunk per launch): k full
+    launches, then a remainder superstep with par_time = rem (same spatial
+    blocks, shallower halo).  ``fused=True`` (the default) executes the
+    whole run as one donated executable with a dynamic full-launch count
+    (see ``common.run_call``); ``fused=False`` keeps the eager Python chain
+    of per-launch dispatches.  ``grid`` may carry a leading batch axis of
+    independent grids.
     """
     if steps < 0:
         raise ValueError("steps must be >= 0")
+    v = normalize_variant(variant, pipelined)
     program = as_program(spec)
     nb = common.batch_dims(program, grid.ndim)
     if steps == 0:
         return grid
 
-    full, rem = divmod(steps, plan.par_time)
+    period = plan.par_time * (common.TEMPORAL_CHUNK if v == "temporal"
+                              else 1)
+    full, rem = divmod(steps, period)
     if not fused:
+        # Eager chain: for temporal, each "launch" is the chunk-deep plan
+        # through the plain superstep kernel — same math, one dispatch per
+        # chunk (the A/B baseline for the fused path).
+        step_plan = plan if v != "temporal" else dataclasses.replace(
+            plan, par_time=period)
+        step_v = "plain" if v == "temporal" else v
         for _ in range(full):
-            grid = stencil_superstep(grid, spec, coeffs, plan,
-                                     interpret=interpret,
-                                     pipelined=pipelined)
+            grid = stencil_superstep(grid, spec, coeffs, step_plan,
+                                     interpret=interpret, variant=step_v)
         if rem:
             rem_plan = dataclasses.replace(plan, par_time=rem)
             grid = stencil_superstep(grid, spec, coeffs, rem_plan,
-                                     interpret=interpret,
-                                     pipelined=pipelined)
+                                     interpret=interpret, variant=step_v)
         return grid
 
     pc = normalize_coeffs(program, coeffs)
@@ -112,4 +134,4 @@ def _stencil_run(grid, spec, coeffs, plan: BlockPlan, steps: int, *,
     return common.run_call(jnp.copy(grid), pc.center, pc.taps, full,
                            program=program, plan=plan,
                            true_shape=true_shape, interpret=interpret,
-                           rem=rem, pipelined=pipelined)
+                           rem=rem, variant=v)

@@ -31,12 +31,17 @@ def stencil2d_superstep(
     *,
     interpret: Optional[bool] = None,
     pipelined: bool = False,
+    variant: Optional[str] = None,
 ) -> jnp.ndarray:
     """Advance a 2D grid by ``plan.par_time`` time steps in one HBM round trip.
 
     ``grid`` may be ``(H, W)`` or ``(B, H, W)`` — a leading batch axis runs B
     independent grids through one kernel launch (extra pallas grid dim).
+    ``variant`` picks "plain" or "pipelined" (a single superstep has no
+    temporal chunk to fuse); ``None`` defers to the deprecated ``pipelined``
+    bool.
     """
+    pipe = common.normalize_variant(variant, pipelined) == "pipelined"
     program = as_program(spec)
     nb = grid.ndim - 2
     if program.ndim != 2 or nb not in (0, 1):
@@ -55,5 +60,5 @@ def stencil2d_superstep(
     padded = boundary_pad(program, grid, pad)
 
     out = common.superstep_call(padded, pc.center, pc.taps, program, plan,
-                                true_shape, interpret, pipelined=pipelined)
+                                true_shape, interpret, None, pipe)
     return out[..., : true_shape[0], : true_shape[1]]

@@ -29,13 +29,17 @@ def stencil3d_superstep(
     *,
     interpret: Optional[bool] = None,
     pipelined: bool = False,
+    variant: Optional[str] = None,
 ) -> jnp.ndarray:
     """Advance a 3D grid by ``plan.par_time`` time steps in one HBM round trip.
 
     ``grid`` may be ``(Z, Y, X)`` or ``(B, Z, Y, X)`` — a leading batch axis
     runs B independent grids through one kernel launch (extra pallas grid
-    dim).
+    dim).  ``variant`` picks "plain" or "pipelined" (a single superstep has
+    no temporal chunk to fuse); ``None`` defers to the deprecated
+    ``pipelined`` bool.
     """
+    pipe = common.normalize_variant(variant, pipelined) == "pipelined"
     program = as_program(spec)
     nb = grid.ndim - 3
     if program.ndim != 3 or nb not in (0, 1):
@@ -54,5 +58,5 @@ def stencil3d_superstep(
     padded = boundary_pad(program, grid, pad)
 
     out = common.superstep_call(padded, pc.center, pc.taps, program, plan,
-                                true_shape, interpret, pipelined=pipelined)
+                                true_shape, interpret, None, pipe)
     return out[..., : true_shape[0], : true_shape[1], : true_shape[2]]

@@ -46,7 +46,8 @@ import numpy as np
 from repro import obs
 from repro.analysis.hw import TpuChip, V5E
 from repro.core.program import StencilProgram, as_program
-from repro.executor import CompiledStencil, stencil
+from repro.executor import (CompiledStencil, _normalize_variant_request,
+                            stencil)
 from repro.tuning.cache import program_fingerprint
 
 
@@ -124,13 +125,15 @@ class StencilServer:
 
     ``max_batch`` caps the leading batch axis per executable (VMEM scratch
     is per-block, so the cap is about bounding one dispatch's latency, not
-    memory).  ``pipelined`` selects the double-buffered prefetch kernel for
-    every group.
+    memory).  ``variant`` selects the kernel lowering for every group
+    ("plain" | "pipelined" | "temporal" | "auto"; ``pipelined=True`` is the
+    deprecated bool spelling of variant="pipelined").
     """
 
     def __init__(self, *, max_batch: int = 8,
                  interpret: Optional[bool] = None,
-                 pipelined: bool = False,
+                 pipelined: Optional[bool] = None,
+                 variant: Optional[str] = None,
                  use_autotune: bool = False,
                  cache_path: Optional[str] = None,
                  hw: TpuChip = V5E,
@@ -144,7 +147,10 @@ class StencilServer:
                 f"mesh_devices must be >= 1 (got {mesh_devices})")
         self.max_batch = max_batch
         self.interpret = interpret
-        self.pipelined = pipelined
+        # one normalization rule with the executor: conflicting requests
+        # raise RP114, a lone bool warns and maps to its variant name
+        self.variant = _normalize_variant_request(variant, pipelined)
+        self.pipelined = self.variant == "pipelined"
         self.use_autotune = use_autotune
         self.cache_path = cache_path
         self.hw = hw
@@ -226,7 +232,7 @@ class StencilServer:
                 plan, devices = resolved        # (plan, decomposition)
             cs = stencil(program).compile(
                 shape, steps=steps, batch=batch, devices=devices,
-                plan=plan, pipelined=self.pipelined,
+                plan=plan, variant=self.variant,
                 interpret=self.interpret, hw=self.hw,
                 max_par_time=self.max_par_time,
                 cache=opted_in, cache_path=self.cache_path)
@@ -384,7 +390,11 @@ def main(argv=None):
                     choices=("clamp", "periodic", "constant"))
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--pipelined", action="store_true")
+    ap.add_argument("--variant", default=None,
+                    choices=("auto", "plain", "pipelined", "temporal"),
+                    help="kernel lowering for every group")
+    ap.add_argument("--pipelined", action="store_true",
+                    help="deprecated alias for --variant pipelined")
     ap.add_argument("--autotune", action="store_true",
                     help="plans from the autotuner cache (model-guided)")
     ap.add_argument("--mesh-devices", type=int, default=None,
@@ -398,7 +408,8 @@ def main(argv=None):
     program = StencilProgram(ndim=ndim, radius=args.radius,
                              shape=args.shape, boundary=args.boundary)
     server = StencilServer(max_batch=args.max_batch,
-                           pipelined=args.pipelined,
+                           variant="pipelined" if args.pipelined
+                           else args.variant,
                            use_autotune=args.autotune,
                            mesh_devices=args.mesh_devices)
     rng = np.random.RandomState(0)

@@ -54,6 +54,8 @@ CODES = {
     "RP112": "plan selector must be \"auto\", \"model\", or a BlockPlan",
     "RP113": "overlap-tax advisory: useful fraction at or below the "
              "planner floor",
+    "RP114": "conflicting kernel-variant requests: both pipelined= and "
+             "variant= given",
     # -- RP2xx: lowered-artifact hazards (the analyzer) -----------------------
     "RP201": "input_output_alias pair is shape/dtype-inconsistent",
     "RP202": "unintended f64 promotion in the lowered module",
@@ -68,6 +70,8 @@ CODES = {
     "RP303": "direct pl.pallas_call outside src/repro/kernels/",
     "RP304": "Python if/while on a tracer-valued expression in a kernel "
              "body",
+    "RP305": "deprecated pipelined= keyword at a first-party call site "
+             "(use variant=)",
 }
 
 

@@ -21,9 +21,15 @@ RP304 — Python ``if``/``while`` on a tracer-valued expression
         inside a kernel body: that's a trace-time branch on a runtime
         value — Pallas raises a ConcretizationTypeError at best, bakes in
         one branch at worst.  Kernels use ``pl.when`` instead.
+RP305 — a ``pipelined=`` keyword argument at a call site: the bool was
+        replaced by the ``variant=`` string ("plain" | "pipelined" |
+        "temporal") across the stencil API (ISSUE 9); the keyword
+        survives only as a DeprecationWarning shim, so first-party code
+        must not keep feeding it.  Shim-exercising tests and the shim
+        internals themselves mark the line ``# legacy-ok``.
 
 Per-line opt-outs: ``# lint-ok: RP30x`` (or bare ``# lint-ok``); RP301
-also honors the audit's historical ``# legacy-ok`` marker.
+and RP305 also honor the audit's historical ``# legacy-ok`` marker.
 """
 
 from __future__ import annotations
@@ -130,7 +136,7 @@ def _opted_out(source_lines: Sequence[str], lineno: int, code: str) -> bool:
     line = source_lines[lineno - 1]
     if f"{LINT_OK}: {code}" in line or line.rstrip().endswith(LINT_OK):
         return True
-    return code == "RP301" and OPT_OUT in line
+    return code in ("RP301", "RP305") and OPT_OUT in line
 
 
 def _scopes(tree: ast.Module) -> Iterable[ast.AST]:
@@ -280,6 +286,39 @@ def _rule_tracer_branch(tree: ast.Module, path: str,
     return out
 
 
+def _rule_pipelined_kw(tree: ast.Module, path: str,
+                       lines: Sequence[str]) -> List[Diagnostic]:
+    """RP305: ``pipelined=`` keyword arguments at call sites.
+
+    Flags the *call-site* spelling only — ``def f(..., pipelined=None)``
+    shim signatures are how the deprecation is implemented and stay
+    unflagged.  Deliberate shim exercises opt out per line with
+    ``# legacy-ok`` (or ``# lint-ok: RP305``).
+    """
+    out: List[Diagnostic] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg != "pipelined":
+                continue
+            lineno = getattr(kw.value, "lineno", node.lineno)
+            if _opted_out(lines, lineno, "RP305") \
+                    or _opted_out(lines, node.lineno, "RP305"):
+                continue
+            out.append(error(
+                "RP305",
+                "deprecated pipelined= keyword at a call site — the "
+                "stencil API takes variant='plain'|'pipelined'|'temporal' "
+                "now, and the bool survives only as a DeprecationWarning "
+                "shim",
+                hint="pass variant='pipelined' (or drop the argument for "
+                     "the plain kernel); shim-pinning tests mark the "
+                     "line # legacy-ok",
+                path=path, line=node.lineno))
+    return out
+
+
 def _rule_legacy(path: str, lines: Sequence[str]) -> List[Diagnostic]:
     rel = os.path.normpath(path)
     scanned = any(
@@ -325,4 +364,5 @@ def lint_source(path: str, source: str) -> List[Diagnostic]:
     out += _rule_timing(tree, path, lines)
     out += _rule_pallas_call(tree, path, lines)
     out += _rule_tracer_branch(tree, path, lines)
+    out += _rule_pipelined_kw(tree, path, lines)
     return out

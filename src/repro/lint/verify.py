@@ -18,12 +18,14 @@ under a millisecond (guarded in tests/test_lint.py, reported as
 
 from __future__ import annotations
 
+import dataclasses
 import operator
 from typing import List, Optional, Tuple, Union
 
 from repro.analysis.hw import TpuChip, V5E
 from repro.core.blocking import (LANE, MIN_USEFUL_FRACTION, SUBLANE,
-                                 BlockPlan, round_up)
+                                 TEMPORAL_CHUNK, BlockPlan,
+                                 normalize_variant, round_up)
 from repro.core.program import as_program
 from repro.lint.diagnostics import Diagnostic, error, raise_on_error, warning
 from repro.tuning.space import MeshDecomposition, is_aligned, shard_violations
@@ -46,13 +48,19 @@ def _axis_alignment(ndim: int, axis: int) -> int:
 
 def verify(program, plan: BlockPlan, grid_shape, chip: TpuChip = V5E, *,
            decomp: Decomp = None, pipelined: bool = False,
+           variant: Optional[str] = None,
            batch: Optional[int] = None,
            steps: Optional[int] = None) -> List[Diagnostic]:
     """Statically check a (program, plan, grid[, decomp]) configuration.
 
-    Returns every finding (errors and warnings); an empty list means the
-    configuration is exactly as legal as a tuner-enumerated point.  The
-    checks mirror ``tuning.space.enumerate_space`` one-for-one:
+    ``variant`` names the kernel lowering the plan will run under
+    ("plain" | "pipelined" | "temporal") — the VMEM budget (RP105) and
+    overlap-tax (RP113) re-checks are variant-aware, exactly like the
+    tuner's pruning; ``None`` defers to the deprecated ``pipelined``
+    bool.  Returns every finding (errors and warnings); an empty list
+    means the configuration is exactly as legal as a tuner-enumerated
+    point.  The checks mirror ``tuning.space.enumerate_space``
+    one-for-one:
 
     RP109  program dtype in the kernels' supported set
     RP101  grid matches the program's spatial rank, positive extents
@@ -141,19 +149,24 @@ def verify(program, plan: BlockPlan, grid_shape, chip: TpuChip = V5E, *,
     if any(c < 1 for c in plan.block_shape):
         return out
 
-    need = plan.vmem_bytes_for(pipelined)
+    v = normalize_variant(variant, pipelined)
+    need = plan.vmem_bytes_for(v)
     if need > chip.vmem_budget_bytes:
-        variant = "pipelined (two revolving windows)" if pipelined \
-            else "plain (one window)"
+        described = {
+            "pipelined": "pipelined (two revolving windows)",
+            "temporal": (f"temporal (one window deepened by the "
+                         f"{TEMPORAL_CHUNK}-superstep chunk halo)"),
+        }.get(v, "plain (one window)")
         out.append(error(
             "RP105",
-            f"the {variant} kernel needs {need / 2**20:.1f} MiB of VMEM "
+            f"the {described} kernel needs {need / 2**20:.1f} MiB of VMEM "
             f"scratch for block={plan.block_shape} "
             f"par_time={plan.par_time} but {chip.name} budgets "
             f"{chip.vmem_budget_bytes / 2**20:.0f} MiB",
             hint="shrink block_shape or par_time (the halo'd window is "
-                 "block + 2*par_time*halo_radius per axis), or plan "
-                 "pipelined=False to halve the window count"))
+                 "block + 2*par_time*halo_radius per axis — the temporal "
+                 "variant's halo is TEMPORAL_CHUNK x deeper), or pick "
+                 "variant='plain' for the smallest footprint"))
 
     if not is_aligned(bsize):
         out.append(warning(
@@ -163,12 +176,18 @@ def verify(program, plan: BlockPlan, grid_shape, chip: TpuChip = V5E, *,
             hint="aligned windows DMA without row padding; the tuner's "
                  "bsize sweep only emits aligned points"))
 
-    if plan.useful_fraction <= MIN_USEFUL_FRACTION:
+    # the temporal chunk streams a TEMPORAL_CHUNK x deeper window, so its
+    # overlap tax is the deep plan's — same accounting as the tuner's prune
+    tax_plan = plan if v != "temporal" else dataclasses.replace(
+        plan, par_time=plan.par_time * TEMPORAL_CHUNK)
+    if tax_plan.useful_fraction <= MIN_USEFUL_FRACTION:
         out.append(warning(
             "RP113",
-            f"useful fraction {plan.useful_fraction:.3f} of the streamed "
-            f"window is at or below the planner floor "
-            f"{MIN_USEFUL_FRACTION} (overlap tax)",
+            f"useful fraction {tax_plan.useful_fraction:.3f} of the "
+            f"streamed window is at or below the planner floor "
+            f"{MIN_USEFUL_FRACTION} (overlap tax"
+            + (f"; {v} variant: halo deepened {TEMPORAL_CHUNK}x by the "
+               f"superstep chunk)" if v == "temporal" else ")"),
             hint="past ~4x redundancy overlapped blocking never wins "
                  "(paper Fig. 3); grow the block or cut par_time"))
 
@@ -205,8 +224,11 @@ def verify(program, plan: BlockPlan, grid_shape, chip: TpuChip = V5E, *,
         wrap_axes = tuple(d for d in range(prog.ndim)
                           if shards is None or shards[d] == 1)
         from repro.kernels.common import PaddedLayout
+        # the temporal executor refreshes a chunk-deep ring per launch,
+        # so degeneracy is judged against that deeper halo
+        eff_halo = halo * (TEMPORAL_CHUNK if v == "temporal" else 1)
         layout = PaddedLayout(
-            halo=halo, local_shape=local,
+            halo=eff_halo, local_shape=local,
             rounded=tuple(round_up(n, b)
                           for n, b in zip(local, plan.block_shape)),
             wrap_axes=wrap_axes)
@@ -216,7 +238,7 @@ def verify(program, plan: BlockPlan, grid_shape, chip: TpuChip = V5E, *,
                 f"periodic wrap is degenerate for local extents {local} "
                 f"under block={plan.block_shape} "
                 f"par_time={plan.par_time}: some wrap axis is shallower "
-                f"than the halo ring ({halo}) or the round-up slack",
+                f"than the halo ring ({eff_halo}) or the round-up slack",
                 hint="the run falls back to the O(volume) re-pad path; "
                      "grow the axis, shrink par_time, or pick a block "
                      "that divides the axis"))
@@ -225,6 +247,7 @@ def verify(program, plan: BlockPlan, grid_shape, chip: TpuChip = V5E, *,
 
 def check(program, plan: BlockPlan, grid_shape, chip: TpuChip = V5E, *,
           decomp: Decomp = None, pipelined: bool = False,
+          variant: Optional[str] = None,
           batch: Optional[int] = None,
           steps: Optional[int] = None) -> List[Diagnostic]:
     """:func:`verify`, then raise :class:`DiagnosticError` on any error.
@@ -235,7 +258,8 @@ def check(program, plan: BlockPlan, grid_shape, chip: TpuChip = V5E, *,
     """
     return raise_on_error(
         verify(program, plan, grid_shape, chip, decomp=decomp,
-               pipelined=pipelined, batch=batch, steps=steps),
+               pipelined=pipelined, variant=variant,  # legacy-ok
+               batch=batch, steps=steps),
         source="verify")
 
 

@@ -27,8 +27,9 @@ import dataclasses
 from typing import Optional, Sequence, Tuple
 
 from repro.analysis.hw import TpuChip, V5E
-from repro.backends.registry import default_backend_name, get_backend
-from repro.core.blocking import BlockPlan
+from repro.backends.registry import (default_backend_name, get_backend,
+                                     variant_of)
+from repro.core.blocking import VARIANTS, BlockPlan
 from repro.core.program import StencilProgram, as_program
 from repro.tuning import model_rank as _model_rank
 from repro.tuning import space as _space
@@ -82,6 +83,8 @@ class TunedPlan:
     frontier_size: int = 0
     # winning mesh decomposition (shards per grid axis); None = single device
     decomp: Optional[Tuple[int, ...]] = None
+    # kernel lowering of the winning backend ("plain"|"pipelined"|"temporal")
+    variant: str = "plain"
     # bounds the winning plan was searched under (cache-coverage checks)
     searched_max_par_time: int = 0
     searched_bsizes: Optional[Tuple[Tuple[int, ...], ...]] = None
@@ -103,6 +106,7 @@ class TunedPlan:
             "space_size": self.space_size,
             "frontier_size": self.frontier_size,
             "decomp": None if self.decomp is None else list(self.decomp),
+            "variant": self.variant,
             "search": {
                 "max_par_time": self.searched_max_par_time,
                 "bsizes": None if self.searched_bsizes is None
@@ -130,7 +134,8 @@ def _from_record(program: StencilProgram, record: dict,
             candidate=Candidate(plan=plan, backend=record["backend"],
                                 backend_version=record["backend_version"],
                                 halo_aligned=_space.halo_aligned(
-                                    plan.par_time, program.halo_radius)),
+                                    plan.par_time, program.halo_radius),
+                                variant=record.get("variant", "plain")),
             predicted_gbps=record["predicted_gbps"],
             predicted_gcells=0.0, predicted_gflops=0.0, bound="cached")
         measurement = Measurement(ranked=ranked, ok=True, **m)
@@ -144,6 +149,7 @@ def _from_record(program: StencilProgram, record: dict,
                      frontier_size=record.get("frontier_size", 0),
                      decomp=None if record.get("decomp") is None
                      else tuple(record["decomp"]),
+                     variant=record.get("variant", "plain"),
                      searched_max_par_time=int(
                          search.get("max_par_time", 0)),
                      searched_bsizes=None if search.get("bsizes") is None
@@ -219,6 +225,7 @@ def autotune(
     grid_shape: Tuple[int, ...],
     backend: Optional[str] = None,
     backend_version: Optional[int] = None,
+    variant: Optional[str] = None,
     top_k: int = 5,
     measure: bool = True,
     cache: bool = True,
@@ -247,6 +254,15 @@ def autotune(
     off measured — measuring the frontier is how mispredictions get
     corrected).
 
+    ``variant`` controls the kernel-variant search axis: ``None`` pins the
+    backend name exactly as given (the legacy behavior — an explicitly
+    ``-pipelined`` name stays pipelined); ``"auto"`` searches every
+    registered variant sibling of ``backend`` (plain / pipelined /
+    temporal where lowerings exist) and lets the ranking pick; a concrete
+    variant name resolves the sibling and pins it.  The request is part of
+    the cache key — a winner found under one variant policy never serves
+    another.
+
     ``n_devices`` puts the mesh decomposition on the search axis (every
     feasible split of that many devices over the grid, per-shard halo
     pruning applied); ``decomposition`` pins an explicit shards-per-axis
@@ -258,6 +274,20 @@ def autotune(
     """
     prog = as_program(program)
     name = backend or default_backend_name()
+    if variant is None or variant == "auto":
+        search_backends = (name,)
+        if variant == "auto":
+            search_backends = tuple(
+                n for n in (variant_of(name, v) for v in VARIANTS)
+                if n is not None)
+    else:
+        sibling = variant_of(name, variant)
+        if sibling is None:
+            raise ValueError(
+                f"backend {name!r} has no {variant!r} lowering to tune; "
+                f"pick a pallas backend or variant='auto'")
+        name = sibling
+        search_backends = (name,)
     _, version = get_backend(name, backend_version)
 
     decomp_req = None
@@ -271,7 +301,7 @@ def autotune(
             "sharded run on the local chip); pass measure=False")
 
     key = cache_key(prog, grid_shape, chip.name, name, version,
-                    decomp=decomp_req)
+                    decomp=decomp_req, variant=variant)
     store = PlanCache(cache_path) if cache else None
 
     if store is not None and not force:
@@ -285,7 +315,7 @@ def autotune(
     if decomposition is not None:
         decomps = (MeshDecomposition(tuple(int(s) for s in decomposition)),)
     candidates = enumerate_space(
-        prog, chip, backends=(name,), backend_version=version,
+        prog, chip, backends=search_backends, backend_version=backend_version,
         bsizes=bsizes, grid_shape=grid_shape, max_par_time=max_par_time,
         n_devices=None if decomps is not None else n_devices,
         decompositions=decomps)
@@ -311,8 +341,8 @@ def autotune(
     tuned = TunedPlan(
         program=prog,
         plan=winner.candidate.plan,
-        backend=name,
-        backend_version=version,
+        backend=winner.candidate.backend,
+        backend_version=winner.candidate.backend_version,
         predicted_gbps=winner.predicted_gbps,
         measurement=measurement,
         from_cache=False,
@@ -321,6 +351,7 @@ def autotune(
         frontier_size=len(frontier),
         decomp=None if winner.candidate.decomp is None
         else winner.candidate.decomp.axis_shards,
+        variant=winner.candidate.variant,
         searched_max_par_time=max_par_time,
         searched_bsizes=None if bsizes is None
         else tuple(tuple(b) for b in bsizes),

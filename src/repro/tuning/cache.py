@@ -40,7 +40,12 @@ from repro.core.program import as_program
 # 3: the space gained a mesh-decomposition axis and the key a ``decomp``
 #    component; schema-2 records were tuned over a space with no
 #    decomposition dimension (and no per-shard halo pruning) and must miss.
-SCHEMA_VERSION = 3
+# 4: the kernel variant (plain/pipelined/temporal) became a first-class
+#    searchable axis: candidates and records carry ``variant``, the key a
+#    ``variant`` request component, and ranking is variant-aware (the
+#    temporal chunk's amortized traffic/compute) — schema-3 records ranked
+#    temporal-free spaces under a variant-blind model and must miss.
+SCHEMA_VERSION = 4
 
 ENV_CACHE_PATH = "REPRO_TUNING_CACHE"
 _DEFAULT_PATH = os.path.join("~", ".cache", "repro-stencil", "plans.json")
@@ -59,12 +64,16 @@ def program_fingerprint(program) -> str:
 
 def cache_key(program, grid_shape: Tuple[int, ...], chip_name: str,
               backend: str, backend_version: int,
-              decomp: Optional[object] = None) -> str:
+              decomp: Optional[object] = None,
+              variant: Optional[str] = None) -> str:
     """``decomp`` identifies the decomposition *request*: None (single
     device), an explicit per-axis shard tuple, or the ``"ndev=N"`` marker
     for a free search over N devices — three different search spaces, three
     different keys (a plan tuned for one mesh layout must never serve
-    another)."""
+    another).  ``variant`` likewise identifies the kernel-variant *request*
+    (None = backend pinned as given, ``"auto"`` = search every registered
+    sibling, or a concrete variant name): different policies search
+    different spaces, so their winners never serve each other."""
     payload = json.dumps({
         "program": program_fingerprint(program),
         "grid_shape": list(grid_shape),
@@ -73,6 +82,7 @@ def cache_key(program, grid_shape: Tuple[int, ...], chip_name: str,
         "backend_version": backend_version,
         "decomp": list(decomp) if isinstance(decomp, (tuple, list))
         else decomp,
+        "variant": variant,
         "schema": SCHEMA_VERSION,
     }, sort_keys=True)
     return hashlib.sha1(payload.encode()).hexdigest()

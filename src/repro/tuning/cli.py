@@ -44,6 +44,11 @@ def _build_parser() -> argparse.ArgumentParser:
                    help="grid shape, e.g. 16384,16384")
     t.add_argument("--backend", default=None,
                    help="backend name (default: platform default)")
+    t.add_argument("--variant", default=None,
+                   choices=("auto", "plain", "pipelined", "temporal"),
+                   help="kernel-variant axis: 'auto' searches every "
+                        "registered sibling of --backend, a concrete name "
+                        "pins that lowering (default: backend as given)")
     t.add_argument("--top-k", type=int, default=5,
                    help="measured frontier size")
     t.add_argument("--max-par-time", type=int, default=32)
@@ -83,6 +88,7 @@ def _cmd_tune(args) -> int:
         print("note: mesh-aware tuning is model-only; skipping measurement")
     tuned = tuning.autotune(
         program, V5E, grid_shape=args.grid, backend=args.backend,
+        variant=args.variant,
         top_k=args.top_k, measure=measure,
         cache_path=args.cache, force=args.force, bsizes=args.bsize,
         max_par_time=args.max_par_time, n_devices=args.devices,
@@ -97,7 +103,8 @@ def _cmd_tune(args) -> int:
     print(f"plan [{src}]: block={tuned.plan.block_shape} "
           f"par_time={tuned.plan.par_time} "
           f"vmem={tuned.plan.vmem_bytes / 2**20:.1f} MiB "
-          f"backend={tuned.backend}@v{tuned.backend_version}{mesh}")
+          f"backend={tuned.backend}@v{tuned.backend_version} "
+          f"variant={tuned.variant}{mesh}")
     print(f"model: {tuned.predicted_gbps:.2f} effective GB/s predicted")
     m = tuned.measurement
     if m is not None:
@@ -128,6 +135,7 @@ def _cmd_inspect(args) -> int:
             "block": rec.get("block_shape"),
             "par_time": rec.get("par_time"),
             "decomp": rec.get("decomp"),
+            "variant": rec.get("variant", "plain"),
             "backend": f"{rec.get('backend')}@v{rec.get('backend_version')}",
             "predicted_gbps": round(rec.get("predicted_gbps", 0.0), 3),
             "measured_gbps": None if m is None

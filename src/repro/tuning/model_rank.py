@@ -29,7 +29,8 @@ from typing import List, Optional, Sequence, Tuple
 
 from repro.analysis.hw import TpuChip, V5E
 from repro.core import perf_model
-from repro.core.blocking import estimate, grid_useful_fraction, round_up
+from repro.core.blocking import (TEMPORAL_CHUNK, estimate,
+                                 grid_useful_fraction, round_up)
 from repro.core.program import as_program
 from repro.tuning.space import Candidate
 
@@ -73,7 +74,18 @@ def predict(program, candidate: Candidate, chip: TpuChip = V5E,
     applies).  Decomposed candidates get the aggregate mesh model with the
     exchange traffic charged (see module docstring)."""
     prog = as_program(program)
-    est = estimate(candidate.plan, chip)
+    variant = candidate.variant
+    if variant == "temporal":
+        # One temporal launch streams the chunk-deep window and advances
+        # TEMPORAL_CHUNK supersteps: the deepened plan's estimate IS that
+        # launch's model (same accounting as blocking.plan_blocking), and
+        # its useful-GCell/s are directly comparable to a plain superstep's.
+        deep = dataclasses.replace(
+            candidate.plan,
+            par_time=candidate.plan.par_time * TEMPORAL_CHUNK)
+        est = estimate(deep, chip)
+    else:
+        est = estimate(candidate.plan, chip)
     decomp = candidate.decomp
     if decomp is not None and decomp.n_devices > 1:
         if grid_shape is None:
@@ -120,8 +132,13 @@ def predict(program, candidate: Candidate, chip: TpuChip = V5E,
         blocks = math.prod(
             round_up(g, b) // b
             for g, b in zip(grid_shape, plan.block_shape))
-        t_compute = blocks * est.compute_s_per_block
-        t_mem = plan.run_bytes_per_superstep(grid_shape) \
+        # Temporal: est is the chunk-deep launch's model, so its per-block
+        # compute amortizes over the TEMPORAL_CHUNK supersteps the launch
+        # advances; run_bytes_per_superstep applies the same amortization
+        # to the chunk's marginal HBM traffic.
+        t_compute = blocks * est.compute_s_per_block \
+            / (TEMPORAL_CHUNK if variant == "temporal" else 1)
+        t_mem = plan.run_bytes_per_superstep(grid_shape, variant) \
             / chip.hbm_bytes_per_s
         t_superstep = max(t_compute, t_mem)
         cells_per_s = math.prod(grid_shape) * plan.par_time / t_superstep

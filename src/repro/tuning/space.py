@@ -45,9 +45,10 @@ from typing import Iterator, List, Optional, Sequence, Tuple
 
 from repro.analysis.hw import TpuChip, V5E
 from repro.backends.registry import (backend_traits, default_backend_name,
-                                     get_backend, pipelined_variant)
+                                     get_backend, variant_of)
 from repro.core.blocking import (LANE, MIN_USEFUL_FRACTION, SUBLANE,
-                                 BlockPlan, round_up)
+                                 TEMPORAL_CHUNK, VARIANTS, BlockPlan,
+                                 normalize_variant, round_up)
 from repro.core.program import as_program
 
 Shape = Tuple[int, ...]
@@ -161,6 +162,7 @@ class Candidate:
     backend_version: int
     halo_aligned: bool     # (par_time * halo_radius) % SUBLANE == 0 (soft eq. 6)
     decomp: Optional[MeshDecomposition] = None
+    variant: str = "plain"  # kernel lowering: "plain" | "pipelined" | "temporal"
 
     @property
     def bsize(self) -> Shape:
@@ -200,15 +202,20 @@ def is_aligned(bsize: Shape) -> bool:
 
 
 def fits_vmem(plan: BlockPlan, chip: TpuChip,
-              pipelined: bool = False) -> bool:
+              pipelined: bool = False,
+              variant: Optional[str] = None) -> bool:
     """Paper eq. 4/5 analogue: the kernel's VMEM scratch must fit the
     planner's budget (their DSP/BRAM caps, our on-chip SRAM cap).
 
     Variant-aware: the ``-pipelined`` kernel revolves two halo'd window
-    buffers, the plain kernel just one — pruning plain plans with the
-    double-buffered bound would forfeit bigger blocks / deeper par_time.
+    buffers, the plain kernel just one, and the ``-temporal`` kernel's
+    single window is ``TEMPORAL_CHUNK`` halo rings deeper — pruning plain
+    plans with the double-buffered bound would forfeit bigger blocks /
+    deeper par_time.  ``variant`` names the lowering; ``None`` defers to
+    the deprecated ``pipelined`` bool.
     """
-    return plan.vmem_bytes_for(pipelined) <= chip.vmem_budget_bytes
+    v = normalize_variant(variant, pipelined)
+    return plan.vmem_bytes_for(v) <= chip.vmem_budget_bytes
 
 
 def halo_aligned(par_time: int, halo_radius: int) -> bool:
@@ -313,24 +320,26 @@ def enumerate_space(
     if bsizes is None:
         bsizes = default_bsizes(prog.ndim, grid_shape)
     if backends is None:
-        # The pipelined kernel variant is a searchable axis: by default every
-        # blocking point is enumerated on both the plain and double-buffered
-        # lowering of the platform backend (the paper equally treats its
+        # The kernel variant is a searchable axis: by default every blocking
+        # point is enumerated on every registered lowering of the platform
+        # backend — plain, double-buffered (-pipelined), and temporally
+        # fused (-temporal) where they exist (the paper equally treats its
         # pipeline depth as part of the tuned configuration).  The roofline
-        # model cannot separate the two (same traffic, same FLOPs), so a
-        # model-ranked top-K over this default space holds K/2 distinct
-        # blocking points — callers who measure should scale top_k if they
-        # want the same blocking diversity, and autotune() itself always
-        # pins a single backend per call/cache-key instead.
+        # model cannot separate plain from pipelined (same traffic, same
+        # FLOPs), so a model-ranked top-K over this default space holds
+        # fewer distinct blocking points than K — callers who measure
+        # should scale top_k if they want the same blocking diversity, and
+        # autotune() itself pins the variant axis per call/cache-key.
         base = default_backend_name()
-        pipe = pipelined_variant(base)
-        backends = (base,) if pipe is None else (base, pipe)
+        backends = tuple(
+            n for n in (variant_of(base, v) for v in VARIANTS)
+            if n is not None)
 
     resolved = []
     for name in backends:
         version = get_backend(name, backend_version)[1]
         resolved.append(
-            (name, version, backend_traits(name, version).pipelined))
+            (name, version, backend_traits(name, version).variant))
 
     out: List[Candidate] = []
 
@@ -362,16 +371,21 @@ def enumerate_space(
                         break   # window = csize + 2*halo grows with pt
                     if plan.useful_fraction <= min_useful_fraction:
                         break   # strictly decreasing in pt
-                    # Variant-aware budget: the point may fit the plain
-                    # kernel's single window but not the pipelined pair.
-                    fits_pipe = fits_vmem(plan, chip, pipelined=True)
-                    for name, version, pipe in resolved:
-                        if pipe and not fits_pipe:
+                    for name, version, var in resolved:
+                        # The temporal chunk advances TEMPORAL_CHUNK
+                        # supersteps per launch but the mesh exchanges
+                        # halos once per superstep — the executor refuses
+                        # the pair, so the space never emits it.
+                        if var == "temporal":
+                            continue
+                        # Variant-aware budget: the point may fit the plain
+                        # kernel's single window but not the pipelined pair.
+                        if not fits_vmem(plan, chip, variant=var):
                             continue
                         out.append(Candidate(plan=plan, backend=name,
                                              backend_version=version,
                                              halo_aligned=halo_aligned(pt, r),
-                                             decomp=dc))
+                                             decomp=dc, variant=var))
         return out
 
     for bsize in bsizes:
@@ -389,26 +403,41 @@ def enumerate_space(
             if plan.useful_fraction <= min_useful_fraction:
                 break   # strictly decreasing in pt; boundary matches
                         # blocking.candidate_plans
-            fits_pipe = fits_vmem(plan, chip, pipelined=True)
+            # Variant-aware budget: the point may fit the plain kernel's
+            # single window but not the pipelined pair or the chunk-deep
+            # temporal window; the temporal launch additionally pays the
+            # *chunk-deep* overlap tax (eq. 2 with par_time*TEMPORAL_CHUNK
+            # fused steps), so its redundancy floor is checked on the
+            # deepened plan.
+            fits = {var: fits_vmem(plan, chip, variant=var)
+                    for _, _, var in resolved}
+            if fits.get("temporal"):
+                deep = dataclasses.replace(
+                    plan, par_time=pt * TEMPORAL_CHUNK)
+                if deep.useful_fraction <= min_useful_fraction:
+                    fits["temporal"] = False
             if decomps is not None:
                 # Mesh path, explicit windows: keep the caller's bsize
                 # semantics and prune each (plan, decomposition) pair by
-                # the per-shard constraints.
+                # the per-shard constraints.  Temporal never lands on a
+                # mesh (chunked launches outrun the per-superstep halo
+                # exchange — the executor refuses the pair).
                 for dc in decomps:
                     if not fits_shard(plan, dc, grid_shape):
                         continue
-                    for name, version, pipe in resolved:
-                        if pipe and not fits_pipe:
+                    for name, version, var in resolved:
+                        if var == "temporal" or not fits[var]:
                             continue
                         out.append(Candidate(plan=plan, backend=name,
                                              backend_version=version,
                                              halo_aligned=halo_aligned(pt, r),
-                                             decomp=dc))
+                                             decomp=dc, variant=var))
                 continue
-            for name, version, pipe in resolved:
-                if pipe and not fits_pipe:
+            for name, version, var in resolved:
+                if not fits[var]:
                     continue
                 out.append(Candidate(plan=plan, backend=name,
                                      backend_version=version,
-                                     halo_aligned=halo_aligned(pt, r)))
+                                     halo_aligned=halo_aligned(pt, r),
+                                     variant=var))
     return out

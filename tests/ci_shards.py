@@ -24,6 +24,7 @@ SHARDS = {
         "tests/test_fused_run.py",
         "tests/test_padded_carry.py",
         "tests/test_temporal.py",
+        "tests/test_temporal_variant.py",
         "tests/test_stencil_ref.py",
         "tests/test_program_ir.py",
         "tests/test_backends.py",
@@ -45,6 +46,7 @@ SHARDS = {
         "tests/test_checkpoint.py",
         "tests/test_fault.py",
         "tests/test_lint.py",
+        "tests/test_variant_api.py",
     ],
     "distributed": [
         "tests/test_distributed.py",

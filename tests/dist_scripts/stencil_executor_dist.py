@@ -116,7 +116,7 @@ print("OK batched_sharded")
 
 # ---- pipelined sharded through the front door ------------------------------
 
-cs_p = sten.compile(G, steps=5, plan=plan, devices=(4, 2), pipelined=True)
+cs_p = sten.compile(G, steps=5, plan=plan, devices=(4, 2), pipelined=True)  # legacy-ok
 assert cs_p.backend.endswith("-pipelined"), cs_p.backend
 pipe = cs_p.run(g)
 np.testing.assert_allclose(np.asarray(pipe), np.asarray(cs.run(g)),

@@ -132,7 +132,7 @@ print("OK batched_sharded")
 
 ds_p = DistributedStencil(prog_b, coeffs_b, plan_b, mesh,  # legacy-ok
                           Decomposition((("pod", "data"), ("model",))),
-                          (64, 256), pipelined=True)
+                          (64, 256), pipelined=True)  # legacy-ok
 assert ds_p.backend_name.endswith("-pipelined"), ds_p.backend_name
 pipe = ds_p.run(put(ds_p, gb[0]), STEPS)
 plain = ds_b.run(put(ds_b, gb[0]), STEPS)

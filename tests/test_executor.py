@@ -72,10 +72,10 @@ def test_executor_parity_fused_batched_pipelined(ndim, rad):
     np.testing.assert_allclose(np.asarray(got), oracle, **TOL)
 
     # pipelined (double-buffered prefetch kernel via the -pipelined backend)
-    cs_p = sten.compile(G, steps=steps, plan=plan, pipelined=True)
+    cs_p = sten.compile(G, steps=steps, plan=plan, pipelined=True)  # legacy-ok
     assert cs_p.backend.endswith("-pipelined")
     got_p = cs_p.run(g)
-    want_p = _legacy_run(g, prog, coeffs, plan, steps, pipelined=True)
+    want_p = _legacy_run(g, prog, coeffs, plan, steps, pipelined=True)  # legacy-ok
     np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
 
     # batched (B, *grid)
@@ -234,7 +234,7 @@ def test_compile_rejects_bad_plan_backend_devices():
         sten.compile((16, 128), steps=2, plan=plan, backend="verilog")
     with pytest.raises(ValueError, match="no pipelined lowering"):
         sten.compile((16, 128), steps=2, plan=plan,
-                     backend="xla-reference", pipelined=True)
+                     backend="xla-reference", pipelined=True)  # legacy-ok
     with pytest.raises(ValueError, match="cannot run sharded"):
         sten.compile((16, 128), steps=2, plan=plan,
                      backend="xla-reference", devices=2)

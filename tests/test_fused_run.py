@@ -60,7 +60,7 @@ def test_pipelined_fused_run_matches_oracle(ndim, boundary):
     coeffs = prog.default_coeffs(seed=5)
     plan = BlockPlan(spec=prog, block_shape=BLOCKS[ndim], par_time=2)
     g = ref.random_grid(prog, GRIDS[ndim], seed=5)
-    pipe = ops.stencil_run(g, prog, coeffs, plan, 5, pipelined=True)
+    pipe = ops.stencil_run(g, prog, coeffs, plan, 5, pipelined=True)  # legacy-ok
     plain = ops.stencil_run(g, prog, coeffs, plan, 5)
     np.testing.assert_array_equal(np.asarray(pipe), np.asarray(plain))
     want = ref.numpy_program_nsteps(prog, coeffs, g, 5)
@@ -153,7 +153,7 @@ def test_batched_superstep_bit_equal_and_pipelined(monkeypatch):
     gb = jnp.stack([ref.random_grid(prog, (30, 135), seed=s)
                     for s in range(B)])
     bat = ops.stencil_superstep(gb, prog, coeffs, plan)
-    pipe = ops.stencil_superstep(gb, prog, coeffs, plan, pipelined=True)
+    pipe = ops.stencil_superstep(gb, prog, coeffs, plan, pipelined=True)  # legacy-ok
     for i in range(B):
         one = ops.stencil_superstep(gb[i], prog, coeffs, plan)
         np.testing.assert_array_equal(np.asarray(bat[i]), np.asarray(one))
@@ -250,7 +250,7 @@ def test_engine_pipelined_both_paths(monkeypatch):
     g = ref.random_grid(prog, (18, 136), seed=6)  # shape unique to this test
 
     eng = StencilEngine(spec=prog, coeffs=prog.default_coeffs(), plan=plan,
-                        pipelined=True)
+                        pipelined=True)  # legacy-ok
     out = eng.run(g, 4)
     assert calls, "direct dispatch with pipelined=True missed the kernel"
     want = ref.numpy_program_nsteps(prog, eng.coeffs, g, 4)
@@ -258,14 +258,14 @@ def test_engine_pipelined_both_paths(monkeypatch):
 
     pinned = StencilEngine(spec=prog, coeffs=prog.default_coeffs(),
                            plan=plan, backend="pallas-interpret",
-                           pipelined=True)
+                           pipelined=True)  # legacy-ok
     assert pinned.lowered().backend_name == "pallas-interpret-pipelined"
 
     # a pinned backend without a pipelined lowering must refuse, not
     # silently run the plain kernel
     no_pipe = StencilEngine(spec=prog, coeffs=prog.default_coeffs(),
                             plan=plan, backend="xla-reference",
-                            pipelined=True)
+                            pipelined=True)  # legacy-ok
     with pytest.raises(ValueError, match="pipelined"):
         no_pipe.lowered()
 

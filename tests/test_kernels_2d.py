@@ -85,5 +85,5 @@ def test_pipelined_kernel_matches(rad, par_time):
     plan = BlockPlan(spec=spec, block_shape=(16, 128), par_time=par_time)
     g = ref.random_grid(spec, (48, 300), seed=9)
     a = ops.stencil_superstep(g, spec, coeffs, plan)
-    b = ops.stencil_superstep(g, spec, coeffs, plan, pipelined=True)
+    b = ops.stencil_superstep(g, spec, coeffs, plan, pipelined=True)  # legacy-ok
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

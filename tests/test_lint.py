@@ -95,7 +95,7 @@ def test_verifier_accepts_every_tuner_point(ndim, grid, radius):
         pipe = backend_traits(c.backend, c.backend_version).pipelined
         pipelined_seen = pipelined_seen or pipe
         diags = verify(prog, c.plan, grid, V5E,
-                       decomp=c.decomp, pipelined=pipe)
+                       decomp=c.decomp, pipelined=pipe)  # legacy-ok
         assert not _error_codes(diags), (
             f"tuner point rejected: {c.plan} pipelined={pipe} -> "
             f"{[d.describe() for d in diags]}")
@@ -111,7 +111,7 @@ def test_verifier_accepts_every_mesh_point():
     for c in sharded:
         pipe = backend_traits(c.backend, c.backend_version).pipelined
         diags = verify(prog, c.plan, (64, 256), V5E,
-                       decomp=c.decomp, pipelined=pipe)
+                       decomp=c.decomp, pipelined=pipe)  # legacy-ok
         assert not _error_codes(diags), [d.describe() for d in diags]
 
 
@@ -145,7 +145,7 @@ def test_rp105_is_variant_aware():
     assert plan.vmem_bytes_for(True) > V5E.vmem_budget_bytes
     assert not _error_codes(verify(prog, plan, (4096, 4096)))
     assert "RP105" in _error_codes(
-        verify(prog, plan, (4096, 4096), pipelined=True))
+        verify(prog, plan, (4096, 4096), pipelined=True))  # legacy-ok
 
 
 def test_rp107_halo_deeper_than_shard():

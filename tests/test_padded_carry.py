@@ -48,7 +48,7 @@ def _legacy_fused_run(g, prog, coeffs, plan, steps):
     full, rem = divmod(steps, plan.par_time)
     return common._run_call_padfallback(
         g, coeffs.center, coeffs.taps, full, program=prog, plan=plan,
-        true_shape=g.shape, interpret=True, rem=rem, pipelined=False)
+        true_shape=g.shape, interpret=True, rem=rem, pipelined=False)  # legacy-ok
 
 
 # ---- (a) parity matrix -----------------------------------------------------
@@ -76,7 +76,7 @@ def test_padded_carry_matches_legacy_executor_and_oracle(ndim, rad,
     np.testing.assert_allclose(np.asarray(fused), want, **TOL)
 
     pipe = ops._stencil_run(g, prog, coeffs, plan, steps, interpret=True,
-                            pipelined=True)
+                            pipelined=True)  # legacy-ok
     np.testing.assert_allclose(np.asarray(pipe), np.asarray(fused), **ULP)
 
     gb = jnp.stack([g, g[tuple(slice(None, None, -1)

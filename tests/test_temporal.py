@@ -29,7 +29,7 @@ def test_planner_respects_vmem_budget(ndim, rad, pipelined):
     # the budget is variant-aware: the plain kernel holds one halo'd
     # window (+ the out tile) in VMEM, the -pipelined sibling two
     spec = StencilSpec(ndim=ndim, radius=rad)
-    est = plan_blocking(spec, V5E, max_par_time=32, pipelined=pipelined)
+    est = plan_blocking(spec, V5E, max_par_time=32, pipelined=pipelined)  # legacy-ok
     assert est.plan.vmem_bytes_for(pipelined) <= V5E.vmem_budget_bytes
     assert est.plan.par_time >= 1
     assert est.gcells_per_s > 0

@@ -76,21 +76,22 @@ def test_default_bsizes_cover_tiny_and_paper_grids():
         assert cands, grid
 
 
-def test_space_default_backends_include_pipelined_axis():
+def test_space_default_backends_include_variant_axis():
     """With no explicit backend list the space enumerates every blocking
-    point on both the plain and the double-buffered lowering — the
-    pipelined kernel variant is a searchable axis (ISSUE 3)."""
+    point on every registered lowering of the platform backend — the
+    kernel variant (plain / pipelined / temporal) is a searchable axis."""
     prog = StencilProgram(ndim=2, radius=1)
     cands = tspace.enumerate_space(prog, V5E, bsizes=[(16, 128)],
                                    max_par_time=1)
     backends = {c.backend for c in cands}
-    assert backends == {"pallas-interpret", "pallas-interpret-pipelined"}
-    # both variants cover the identical blocking points
-    plain = {(c.bsize, c.par_time) for c in cands
-             if c.backend == "pallas-interpret"}
-    piped = {(c.bsize, c.par_time) for c in cands
-             if c.backend == "pallas-interpret-pipelined"}
-    assert plain == piped
+    assert backends == {"pallas-interpret", "pallas-interpret-pipelined",
+                        "pallas-interpret-temporal"}
+    assert {c.variant for c in cands} == {"plain", "pipelined", "temporal"}
+    # every variant covers the identical blocking points (this tiny window
+    # clears even the temporal chunk's deeper overlap tax)
+    points = {v: {(c.bsize, c.par_time) for c in cands if c.variant == v}
+              for v in ("plain", "pipelined", "temporal")}
+    assert points["plain"] == points["pipelined"] == points["temporal"]
 
 
 def test_cache_key_separates_pipelined_backend():

@@ -1,0 +1,210 @@
+"""The unified backend-variant API (ISSUE 9 satellites).
+
+``variant: str`` ("plain" | "pipelined" | "temporal", plus "auto" under
+tuning) replaces the old ``pipelined: bool`` everywhere a kernel lowering
+is chosen — ``Stencil.compile``, ``StencilServer``, ``DistributedStencil``,
+``backends.variant_of`` — with ``pipelined=True`` kept as a bit-compatible
+DeprecationWarning shim and RP114 raised when both spellings conflict.
+
+Pins:
+  - shim parity: ``pipelined=True`` warns and produces the bit-identical
+    executable/output as ``variant="pipelined"``;
+  - RP114 on conflicting requests, at the executor and the server;
+  - RP305: the AST linter flags first-party ``pipelined=`` call-site
+    keywords, honors ``# legacy-ok``, ignores def-signature defaults —
+    and the whole first-party tree is clean;
+  - tuner property: every point ``enumerate_space`` emits (plan, variant,
+    decomp) passes ``lint.verify`` with zero errors — the verifier and
+    the enumerator agree on legality, variant-aware;
+  - the variant is a persisted tuning axis: TunedPlan records round-trip
+    it and ``cache_key`` separates variant requests;
+  - the temporal variant refuses the mesh (executor RP110 and
+    DistributedStencil) — its chunk launch outruns per-superstep halo
+    exchange.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import repro
+from repro import lint
+from repro.analysis.hw import V5E
+from repro.backends.registry import variant_of
+from repro.core.blocking import BlockPlan
+from repro.core.distributed import Decomposition, DistributedStencil
+from repro.core.program import StencilProgram
+from repro.core.reference import random_grid
+from repro.lint.diagnostics import DiagnosticError
+from repro.lint.rules import lint_source
+from repro.tuning import TunedPlan, _from_record, enumerate_space
+from repro.tuning.cache import cache_key
+
+PROG = StencilProgram(ndim=2, radius=2, boundary="clamp")
+GRID = (37, 150)
+STEPS = 4
+PLAN = BlockPlan(spec=PROG, block_shape=(16, 128), par_time=2)
+
+
+def _compile(**kw):
+    return repro.stencil(PROG).compile(
+        GRID, steps=STEPS, plan=PLAN, backend="pallas-interpret", **kw)
+
+
+# ---- shim parity -----------------------------------------------------------
+
+def test_pipelined_shim_warns_and_matches_variant():
+    g = random_grid(PROG, GRID, seed=0)
+    cs_v = _compile(variant="pipelined")
+    with pytest.warns(DeprecationWarning, match="variant"):
+        cs_b = _compile(pipelined=True)  # legacy-ok
+    assert cs_b.backend == cs_v.backend
+    assert cs_b.variant == cs_v.variant == "pipelined"
+    assert cs_b.pipelined is True
+    np.testing.assert_array_equal(np.asarray(cs_b.run(g)),
+                                  np.asarray(cs_v.run(g)))
+
+
+def test_pipelined_false_is_plain_with_warning():
+    with pytest.warns(DeprecationWarning, match="variant"):
+        cs = _compile(pipelined=False)  # legacy-ok
+    assert cs.variant == "plain"
+    assert cs.pipelined is False
+
+
+def test_variant_alone_does_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cs = _compile(variant="temporal")
+    assert cs.variant == "temporal"
+    assert cs.pipelined is False
+
+
+# ---- RP114 conflict --------------------------------------------------------
+
+def test_conflicting_variant_and_pipelined_is_rp114():
+    with pytest.raises(DiagnosticError, match="RP114"):
+        _compile(variant="plain", pipelined=True)  # legacy-ok
+
+
+def test_server_conflict_is_rp114():
+    from repro.launch.stencil_serve import StencilServer
+    with pytest.raises(DiagnosticError, match="RP114"):
+        StencilServer(variant="temporal", pipelined=True)  # legacy-ok
+
+
+def test_unknown_variant_rejected():
+    with pytest.raises(ValueError, match="variant"):
+        _compile(variant="vectorized")
+
+
+# ---- RP305 lint rule -------------------------------------------------------
+
+def test_rp305_flags_call_site_keyword():
+    diags = lint_source("x.py", "f(grid, pipelined=True)\n")
+    assert [d.code for d in diags] == ["RP305"]
+    assert diags[0].line == 1
+
+
+def test_rp305_honors_legacy_ok():
+    assert lint_source("x.py", "f(grid, pipelined=True)  # legacy-ok\n") == []
+    src = "f(grid,\n  pipelined=True,  # legacy-ok\n)\n"
+    assert lint_source("x.py", src) == []
+
+
+def test_rp305_ignores_def_signature_default():
+    src = "def f(grid, pipelined=False):\n    return grid\n"
+    assert [d.code for d in lint_source("x.py", src)] == []
+
+
+def test_first_party_tree_has_no_pipelined_call_sites():
+    """The repo-wide acceptance gate, in-process: no un-annotated
+    ``pipelined=`` call sites anywhere in src/ or tests/."""
+    from repro.lint.engine import lint_paths
+    diags = [d for d in lint_paths(["src", "tests"])
+             if d.code == "RP305"]
+    assert diags == [], "\n".join(d.describe() for d in diags)
+
+
+# ---- tuner property: every enumerated point verifies -----------------------
+
+def test_every_enumerated_candidate_passes_verify():
+    cands = enumerate_space(PROG, V5E, grid_shape=GRID, max_par_time=4)
+    assert {c.variant for c in cands} == {"plain", "pipelined", "temporal"}
+    for c in cands:
+        errors = [d for d in lint.verify(PROG, c.plan, GRID, V5E,
+                                         decomp=c.decomp, variant=c.variant)
+                  if d.is_error]
+        assert errors == [], (
+            f"{c.backend} variant={c.variant} plan={c.plan}: "
+            + "; ".join(d.describe() for d in errors))
+
+
+def test_enumerated_mesh_candidates_never_temporal():
+    cands = enumerate_space(PROG, V5E, grid_shape=(256, 512), n_devices=2,
+                            max_par_time=4)
+    assert cands
+    assert all(c.variant != "temporal" for c in cands if c.decomp)
+
+
+# ---- persistence: records and cache keys -----------------------------------
+
+def _tuned(backend, variant="plain"):
+    return TunedPlan(program=PROG, plan=PLAN, backend=backend,
+                     backend_version=1, predicted_gbps=100.0,
+                     measurement=None, from_cache=False, key="k",
+                     variant=variant)
+
+
+def test_tuned_plan_record_roundtrips_variant():
+    rec = _tuned("pallas-interpret-temporal", "temporal").to_record()
+    assert rec["variant"] == "temporal"
+    back = _from_record(PROG, rec, "k")
+    assert back.variant == "temporal"
+    assert back.backend == "pallas-interpret-temporal"
+
+
+def test_legacy_record_defaults_to_plain_variant():
+    rec = _tuned("pallas-interpret").to_record()
+    del rec["variant"]  # a schema-3 record
+    assert _from_record(PROG, rec, "k").variant == "plain"
+
+
+def test_cache_key_separates_variant_requests():
+    keys = {cache_key(PROG, GRID, "v5e", "pallas-interpret", 1, variant=v)
+            for v in (None, "auto", "plain", "temporal")}
+    assert len(keys) == 4
+
+
+# ---- variant_of ------------------------------------------------------------
+
+def test_variant_of_maps_between_siblings():
+    assert variant_of("pallas-interpret", "temporal") \
+        == "pallas-interpret-temporal"
+    assert variant_of("pallas-interpret-temporal", "plain") \
+        == "pallas-interpret"
+    assert variant_of("pallas-interpret-pipelined", "temporal") \
+        == "pallas-interpret-temporal"
+    assert variant_of("xla-reference", "temporal") is None
+
+
+# ---- the mesh refuses temporal ---------------------------------------------
+
+def test_executor_refuses_sharded_temporal():
+    with pytest.raises(DiagnosticError, match="RP110"):
+        repro.stencil(PROG).compile(
+            (256, 512), steps=2, plan=PLAN, backend="pallas-interpret",
+            variant="temporal", devices=2)
+
+
+def test_distributed_stencil_refuses_temporal():
+    from repro.core import compat
+    mesh = compat.make_mesh((1,), ("x",))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(ValueError, match="RP110"):
+            DistributedStencil(PROG, PROG.default_coeffs(), PLAN, mesh,
+                               Decomposition((("x",), ())), (256, 512),
+                               backend="pallas-interpret", interpret=True,
+                               variant="temporal")
