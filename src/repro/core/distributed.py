@@ -141,9 +141,18 @@ def _exchange_into_ring(padded: jnp.ndarray, axis: int, mesh_axes: AxisNames,
     concat).  Non-periodic edge shards receive zeros from the open ppermute
     ring; those positions are out-of-grid and healed by the kernel's t=0
     ``boundary_fixup``.
+
+    The strip geometry is :func:`repro.kernels.common.exchange_copies` —
+    by SPMD symmetry each copy's ``src`` interval is this shard's own send
+    and its ``dst`` interval the landing zone for the neighbor's matching
+    send, so the same records drive both this exchange and the
+    ``repro.lint.dataflow`` verifier's model of it.
     """
-    lo = lax.slice_in_dim(padded, H, H + h, axis=axis)
-    hi = lax.slice_in_dim(padded, H + nloc - h, H + nloc, axis=axis)
+    into_lo, into_hi = common.exchange_copies(axis, h, H, nloc)
+    # My *hi* interior strip (into_lo.src) becomes the right neighbor's lo
+    # ring; my *lo* strip (into_hi.src) the left neighbor's hi ring.
+    hi = lax.slice_in_dim(padded, into_lo.src[0], into_lo.src[1], axis=axis)
+    lo = lax.slice_in_dim(padded, into_hi.src[0], into_hi.src[1], axis=axis)
     if periodic:
         fwd = [(i, (i + 1) % n) for i in range(n)]
         bwd = [((i + 1) % n, i) for i in range(n)]
@@ -152,10 +161,10 @@ def _exchange_into_ring(padded: jnp.ndarray, axis: int, mesh_axes: AxisNames,
         bwd = [(i + 1, i) for i in range(n - 1)]
     from_left = lax.ppermute(hi, mesh_axes, fwd)   # my low ring
     from_right = lax.ppermute(lo, mesh_axes, bwd)  # my high ring
-    padded = lax.dynamic_update_slice_in_dim(padded, from_left, H - h,
-                                             axis=axis)
-    padded = lax.dynamic_update_slice_in_dim(padded, from_right, H + nloc,
-                                             axis=axis)
+    padded = lax.dynamic_update_slice_in_dim(padded, from_left,
+                                             into_lo.dst[0], axis=axis)
+    padded = lax.dynamic_update_slice_in_dim(padded, from_right,
+                                             into_hi.dst[0], axis=axis)
     return padded
 
 

@@ -71,8 +71,10 @@ from repro.core.perf_model import gbps_from_cells_per_s
 from repro.core.program import (ProgramCoeffs, StencilProgram, as_program,
                                 normalize_coeffs)
 from repro.kernels import common, ops
-from repro.lint.diagnostics import DiagnosticError
+from repro.lint.diagnostics import DiagnosticError, raise_on_error
 from repro.lint.diagnostics import error as _diag
+from repro.lint.dataflow import verify_dataflow
+from repro.lint.sanitize import sanitize_run
 from repro.lint.verify import check as _preflight
 from repro.tuning.cache import cache_key
 from repro.tuning.model_rank import RankedCandidate, predict, rank
@@ -178,7 +180,8 @@ class Stencil:
                 hw: TpuChip = V5E,
                 max_par_time: int = 32,
                 cache: bool = True,
-                cache_path: Optional[str] = None) -> "CompiledStencil":
+                cache_path: Optional[str] = None,
+                sanitize: bool = False) -> "CompiledStencil":
         """Resolve plan, backend, and placement into a runnable executable.
 
         See :meth:`_compile` for the parameter contract.  When the flight
@@ -193,7 +196,7 @@ class Stencil:
         kwargs = dict(steps=steps, batch=batch, devices=devices, plan=plan,
                       backend=backend, variant=variant, donate=donate,
                       interpret=interpret, hw=hw, max_par_time=max_par_time,
-                      cache=cache, cache_path=cache_path)
+                      cache=cache, cache_path=cache_path, sanitize=sanitize)
         rec = obs.active()
         if rec is None or _tracing():
             return self._compile(grid_shape, **kwargs)
@@ -230,7 +233,8 @@ class Stencil:
                  hw: TpuChip = V5E,
                  max_par_time: int = 32,
                  cache: bool = True,
-                 cache_path: Optional[str] = None) -> "CompiledStencil":
+                 cache_path: Optional[str] = None,
+                 sanitize: bool = False) -> "CompiledStencil":
         """Resolve plan, backend, and placement into a runnable executable.
 
         grid_shape   spatial extent of one grid (must match the program's
@@ -267,6 +271,14 @@ class Stencil:
                      the caller's grid is never consumed either way.
         interpret    force the Pallas interpreter on/off (None = follow the
                      backend's traits / platform auto-detection).
+        sanitize     also run the RP4xx canary sanitizer (interpret-mode
+                     execution with NaN-poisoned halos, ``repro.lint.
+                     sanitize``) before accepting the compile — slow but
+                     the definitive wrong-result debugger; the symbolic
+                     dataflow verifier always runs.  The report survives
+                     on ``CompiledStencil.sanitize_report``.  Sharded
+                     compiles skip the canary run (their exchange strips
+                     are covered by the symbolic half).
         """
         prog = self.program
         try:
@@ -385,6 +397,22 @@ class Stencil:
         # with stable RP codes; warnings survive on CompiledStencil.preflight
         preflight = _preflight(prog, resolved, grid_shape, hw,
                                decomp=decomp_axes, variant=traits.variant)
+        sanitize_report = None
+        if traits.fused_run:
+            # RP4xx: prove the padded ring schedule itself (wrap/exchange
+            # copy depths, ping-pong aliasing, per-superstep coverage) —
+            # pure numpy, well under the 2ms pre-flight budget.  The
+            # sanitizer is the opt-in dynamic oracle on top.
+            preflight.extend(raise_on_error(
+                verify_dataflow(prog, resolved, grid_shape, steps=steps,
+                                variant=traits.variant, decomp=decomp_axes),
+                source="dataflow"))
+            if sanitize and decomp_axes is None:
+                sanitize_report = sanitize_run(
+                    prog, resolved, grid_shape, steps=steps,
+                    coeffs=self.coeffs, variant=traits.variant)
+                raise_on_error(sanitize_report.diagnostics,
+                               source="sanitize")
         cand = Candidate(
             plan=resolved, backend=name, backend_version=version,
             halo_aligned=halo_aligned(resolved.par_time, prog.halo_radius),
@@ -423,7 +451,8 @@ class Stencil:
             backend_version=version, decomp=decomp_axes, cost=cost,
             tuned=tuned, variant=traits.variant, donate=donate,
             interpret=interpret, devices=n_devices, dist=dist,
-            lowered=lowered, hw=hw, preflight=preflight)
+            lowered=lowered, hw=hw, preflight=preflight,
+            sanitize_report=sanitize_report)
 
 
 #: back-compat alias — the counter diff now lives with the counters.
@@ -506,11 +535,15 @@ class CompiledStencil:
                  cost: RankedCandidate, tuned, variant: str, donate: bool,
                  interpret: Optional[bool], devices: int,
                  dist: Optional[DistributedStencil], lowered,
-                 hw: TpuChip = V5E, preflight=None):
+                 hw: TpuChip = V5E, preflight=None, sanitize_report=None):
         #: non-fatal pre-flight diagnostics (RP106 alignment, RP108
         #: wrap-degenerate, RP113 overlap tax) the verifier attached at
         #: compile time — errors never get here, they raise.
         self.preflight = list(preflight or [])
+        #: the RP4xx canary report when compiled with ``sanitize=True``
+        #: (None otherwise); its errors raise at compile, so a stored
+        #: report is always clean.
+        self.sanitize_report = sanitize_report
         self.program = program
         self.hw = hw
         self.coeffs = coeffs

@@ -457,18 +457,236 @@ class PaddedLayout:
         return False
 
 
+# ---- ring-schedule metadata -------------------------------------------------
+# The padded-carry dataflow used to live only inside kernel closures; the
+# records below expose the same schedule — wrap/exchange copy geometry, the
+# ping-pong alias map, per-superstep windows and write tiles — as inspectable
+# data.  The kernels and ``distributed._exchange_into_ring`` consume these
+# helpers directly, so ``repro.lint.dataflow``'s abstract interpreter and the
+# canary sanitizer analyze the *same* schedule the hardware executes: a
+# mutation test that patches ``wrap_copies`` or ``ping_pong_aliases`` mutates
+# both the kernel and the model it is checked against.
+
+
+@dataclasses.dataclass(frozen=True)
+class RingCopy:
+    """One O(surface) halo copy along ``axis`` in padded coordinates.
+
+    ``kind`` is "wrap" (in-kernel same-buffer periodic refresh) or
+    "exchange" (sharded neighbor strip DMA'd into the ring by
+    ``distributed._exchange_into_ring``).  ``src``/``dst`` are half-open
+    ``[start, stop)`` intervals along ``axis``; all other axes span the
+    full padded extent.
+    """
+
+    kind: str
+    axis: int
+    src: Tuple[int, int]
+    dst: Tuple[int, int]
+
+    @property
+    def width(self) -> int:
+        return self.dst[1] - self.dst[0]
+
+
+def wrap_copies(layout: PaddedLayout) -> Tuple[RingCopy, ...]:
+    """The in-kernel periodic refresh schedule for ``layout``.
+
+    Per wrap axis ``d`` (axis-sequential, lo then hi — the order gives
+    ``jnp.pad`` wrap corner semantics): the lo ring ``[0, H)`` copies from
+    the last ``H`` true cells ``[n, n+H)`` and the hi region ``[H+n, P)``
+    (round-up slack plus hi ring, width ``W = P - H - n``) copies from the
+    first ``W`` true cells ``[H, H+W)``.
+    """
+    H = layout.halo
+    P = layout.padded_shape
+    copies = []
+    for d in layout.wrap_axes:
+        n = layout.local_shape[d]
+        W = P[d] - H - n
+        copies.append(RingCopy("wrap", d, (n, n + H), (0, H)))
+        copies.append(RingCopy("wrap", d, (H, H + W), (H + n, H + n + W)))
+    return tuple(copies)
+
+
+def exchange_copies(axis: int, h: int, H: int,
+                    nloc: int) -> Tuple[RingCopy, RingCopy]:
+    """The sharded exchange-into-ring strips along one mesh axis.
+
+    The left neighbor's hi strip ``[H+nloc-h, H+nloc)`` lands just below
+    this shard's interior at ``[H-h, H)``; the right neighbor's lo strip
+    ``[H, H+h)`` lands just above it at ``[H+nloc, H+nloc+h)``.  ``h`` is
+    the *superstep* halo (remainder supersteps exchange shallower strips
+    into the same depth-``H`` ring), and the SPMD symmetry makes the src
+    intervals this shard's own sends.
+    """
+    return (
+        RingCopy("exchange", axis, (H + nloc - h, H + nloc), (H - h, H)),
+        RingCopy("exchange", axis, (H, H + h), (H + nloc, H + nloc + h)),
+    )
+
+
+def ping_pong_aliases(wrap: bool) -> Dict[int, int]:
+    """``input_output_aliases`` of one padded superstep launch.
+
+    Operands are ``(offsets, center, taps, src, dst)``.  The tile output
+    always donates ``dst`` (input 4); the periodic variant additionally
+    returns the ring-refreshed source, donating ``src`` (input 3), because
+    the in-kernel wrap refresh mutates that buffer.
+    """
+    return {3: 0, 4: 1} if wrap else {4: 0}
+
+
+def tile_output_index(wrap: bool) -> int:
+    """Which pallas output carries the advanced interior tiles."""
+    return 1 if wrap else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SuperstepSchedule:
+    """One modeled superstep of the padded-carry run.
+
+    ``read_buffer``/``write_buffer`` index the ping-pong pair (0 = the
+    buffer holding the initial pad).  ``write_buffer`` is *derived from
+    the alias map*: the buffer backing the tile output per
+    :func:`ping_pong_aliases` — so a mis-aliased pair shows up here as
+    ``write_buffer == read_buffer`` (the RP404 hazard).  ``window_offset``
+    is the ring offset ``H - h`` every block window reads at;
+    ``ring_deferred`` marks a (buggy) schedule whose ring copies land
+    after the dependent window reads.
+    """
+
+    index: int
+    steps: int
+    halo: int
+    variant: str
+    read_buffer: int
+    write_buffer: int
+    window_offset: int
+    window_shape: Tuple[int, ...]
+    write_tile: Tuple[int, ...]
+    write_stride: Tuple[int, ...]
+    ring: Tuple[RingCopy, ...]
+    ring_deferred: bool = False
+    fixup: bool = False
+    aliases: Tuple[Tuple[int, int], ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSchedule:
+    """The inspectable dataflow of one fused padded-carry run.
+
+    ``supersteps`` models the distinct phases a run passes through: up to
+    four full supersteps (fresh-pad start plus both steady-state ping-pong
+    parities — the buffer-state pattern is 2-periodic, so four entries are
+    a fixpoint) and the remainder superstep, if any.  ``fallback`` marks
+    wrap-degenerate configs that route through the legacy re-pad body
+    (which re-materializes ``boundary_pad`` every superstep and therefore
+    has no ring schedule to verify).
+    """
+
+    program: StencilProgram
+    plan: BlockPlan
+    layout: PaddedLayout
+    variant: str
+    steps: int
+    full: int
+    rem: int
+    supersteps: Tuple[SuperstepSchedule, ...]
+    sharded_axes: Tuple[int, ...] = ()
+    fallback: bool = False
+
+
+def ring_schedule(program: StencilProgram, plan: BlockPlan,
+                  true_shape: Tuple[int, ...], steps: int, *,
+                  variant: Optional[str] = None, pipelined: bool = False,
+                  decomp=None) -> RunSchedule:
+    """Build the :class:`RunSchedule` that ``run_call`` (or the sharded
+    ``run_fn``) executes for this configuration.
+
+    Mirrors the executors' geometry exactly: the chunk-deep ring under
+    ``variant="temporal"``, per-device local/rounded shapes under a
+    ``decomp`` (axis shard counts or a ``MeshDecomposition``), wrap axes =
+    device-local periodic axes, remainder supersteps as one shallower
+    plain superstep reading at ring offset ``H - h``.
+    """
+    v = normalize_variant(variant, pipelined)
+    ndim = program.ndim
+    chunk = TEMPORAL_CHUNK if v == "temporal" else 1
+    H = chunk * plan.halo
+    shards = getattr(decomp, "axis_shards", decomp)
+    if shards is not None:
+        local = tuple(true_shape[d] // shards[d] for d in range(ndim))
+        rounded = local
+        wrap_axes = tuple(d for d in range(ndim)
+                          if program.boundary == "periodic"
+                          and shards[d] == 1)
+        sharded_axes = tuple(d for d in range(ndim) if shards[d] > 1)
+    else:
+        local = tuple(true_shape)
+        rounded = tuple(round_up(true_shape[d], plan.block_shape[d])
+                        for d in range(ndim))
+        wrap_axes = tuple(range(ndim)) \
+            if program.boundary == "periodic" else ()
+        sharded_axes = ()
+    layout = PaddedLayout(halo=H, local_shape=local, rounded=rounded,
+                          wrap_axes=wrap_axes)
+    if shards is None and layout.wrap_degenerate():
+        return RunSchedule(program=program, plan=plan, layout=layout,
+                           variant=v, steps=steps, full=0, rem=0,
+                           supersteps=(), sharded_axes=(), fallback=True)
+    period = chunk * plan.par_time
+    full, rem = divmod(steps, period)
+    wrap = bool(wrap_axes)
+    amap = ping_pong_aliases(wrap)
+    tout = tile_output_index(wrap)
+    # Which operand's buffer backs the tile output?  Input 3 is the window
+    # source, input 4 the destination; a tile output aliased onto input 3
+    # writes into the buffer the windows read from.
+    winput = next((i for i, o in amap.items() if o == tout), 4)
+    wraps = wrap_copies(layout)
+
+    def entry(index, rb, ss_steps, ss_variant):
+        h = ss_steps * program.halo_radius
+        ring = wraps + tuple(
+            c for d in sharded_axes
+            for c in exchange_copies(d, h, H, local[d]))
+        wb = rb if winput == 3 else 1 - rb
+        return SuperstepSchedule(
+            index=index, steps=ss_steps, halo=h, variant=ss_variant,
+            read_buffer=rb, write_buffer=wb, window_offset=H - h,
+            window_shape=tuple(b + 2 * h for b in plan.block_shape),
+            write_tile=tuple(plan.block_shape),
+            write_stride=tuple(plan.block_shape),
+            ring=ring, fixup=program.boundary != "periodic",
+            aliases=tuple(sorted(amap.items())))
+
+    supersteps = []
+    rb = 0
+    for i in range(min(full, 4)):
+        supersteps.append(entry(i, rb, period, v))
+        rb = 1 - rb
+    if rem:
+        supersteps.append(entry(len(supersteps), rb, rem,
+                                "plain" if v == "temporal" else v))
+    return RunSchedule(program=program, plan=plan, layout=layout, variant=v,
+                       steps=steps, full=full, rem=rem,
+                       supersteps=tuple(supersteps),
+                       sharded_axes=sharded_axes, fallback=False)
+
+
 def _refresh_wrap_halo(src_ref, layout: PaddedLayout, batch: Optional[int],
                        sem) -> None:
     """In-kernel periodic refresh of the carry's halo ring (same-buffer DMA).
 
-    Axis-sequential with full padded extent on the other axes, so corner
-    regions match ``jnp.pad`` wrap semantics: the lo ring ``[0, H)`` copies
-    from the last ``H`` true cells and the hi region ``[H+n, P)`` (round-up
-    slack plus hi ring) copies from the first ``P - H - n`` true cells.
-    O(surface) traffic — the only per-superstep cost of a periodic halo.
+    The copy geometry is :func:`wrap_copies` — axis-sequential with full
+    padded extent on the other axes, so corner regions match ``jnp.pad``
+    wrap semantics: the lo ring ``[0, H)`` copies from the last ``H`` true
+    cells and the hi region ``[H+n, P)`` (round-up slack plus hi ring)
+    copies from the first ``P - H - n`` true cells.  O(surface) traffic —
+    the only per-superstep cost of a periodic halo.
     """
     ndim = len(layout.rounded)
-    H = layout.halo
     P = layout.padded_shape
 
     def ix(d, start, width):
@@ -478,15 +696,10 @@ def _refresh_wrap_halo(src_ref, layout: PaddedLayout, batch: Optional[int],
             win = (pl.ds(0, batch),) + win
         return win
 
-    for d in layout.wrap_axes:
-        n = layout.local_shape[d]
-        W = P[d] - H - n
-        cp = pltpu.make_async_copy(src_ref.at[ix(d, n, H)],
-                                   src_ref.at[ix(d, 0, H)], sem)
-        cp.start()
-        cp.wait()
-        cp = pltpu.make_async_copy(src_ref.at[ix(d, H, W)],
-                                   src_ref.at[ix(d, H + n, W)], sem)
+    for c in wrap_copies(layout):
+        cp = pltpu.make_async_copy(
+            src_ref.at[ix(c.axis, c.src[0], c.src[1] - c.src[0])],
+            src_ref.at[ix(c.axis, c.dst[0], c.dst[1] - c.dst[0])], sem)
         cp.start()
         cp.wait()
 
@@ -804,7 +1017,7 @@ def _padded_superstep_pallas(src: jnp.ndarray, dst: jnp.ndarray,
                        pl.BlockSpec(memory_space=MemorySpace.ANY)],
             out_shape=[struct, struct],
             scratch_shapes=scratch,
-            input_output_aliases={3: 0, 4: 1},
+            input_output_aliases=dict(ping_pong_aliases(True)),
             interpret=interpret,
         )(offsets.astype(jnp.int32), c2, t2, src, dst)
         return out[0], out[1]
@@ -815,7 +1028,7 @@ def _padded_superstep_pallas(src: jnp.ndarray, dst: jnp.ndarray,
         out_specs=pl.BlockSpec(memory_space=MemorySpace.ANY),
         out_shape=struct,
         scratch_shapes=scratch,
-        input_output_aliases={4: 0},
+        input_output_aliases=dict(ping_pong_aliases(False)),
         interpret=interpret,
     )(offsets.astype(jnp.int32), c2, t2, src, dst)
     return src, out

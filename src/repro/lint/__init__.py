@@ -7,7 +7,7 @@ a static checker: illegal configurations die hours later at synthesis
 time with unhelpful errors.  Our port has the same failure mode — an
 illegal (program, plan, decomposition) surfaces as a deep Pallas lowering
 traceback or a silently-wrong wrap DMA.  This package checks everything
-checkable *without executing anything*, as three passes over one
+checkable *before any production run*, as four passes over one
 diagnostic engine with stable codes:
 
 ``RP1xx`` — plan/program legality (:func:`verify`): every constraint the
@@ -29,10 +29,20 @@ diagnostic engine with stable codes:
     direct ``pl.pallas_call`` outside ``kernels/``, and Python ``if`` on
     tracer-valued expressions in kernel bodies.
 
+``RP4xx`` — kernel-dataflow analysis (:func:`verify_dataflow` +
+    :func:`sanitize_run`): proves the padded-carry ring schedule itself —
+    stale-halo reads (RP401), per-superstep write coverage (RP402/RP403),
+    ping-pong alias hazards (RP404), wrap-DMA ordering (RP405) — by
+    abstract interpretation of the same schedule metadata the kernels are
+    built from, with an opt-in NaN-canary interpret-mode execution
+    (``Stencil.compile(sanitize=True)``) as the dynamic oracle.
+
 CLI::
 
     python -m repro.lint src tests                 # codebase rules
     python -m repro.lint check-artifact dump.hlo   # artifact audit
+    python -m repro.lint dataflow --ndim 2 ...     # ring-schedule proof
+    python -m repro.lint sanitize --ndim 2 ...     # canary execution
     python -m repro.lint codes                     # the RP-code table
 
 Every :class:`Diagnostic` carries a severity, a location, and a fix hint;
@@ -44,21 +54,29 @@ bumps ``lint.diagnostics`` counters so reports show verifier activity.
 from __future__ import annotations
 
 from repro.lint.artifact import analyze_artifact, check_trace_budget
-from repro.lint.diagnostics import (CODES, Diagnostic, DiagnosticError,
-                                    Severity, emit, raise_on_error)
+from repro.lint.dataflow import check_dataflow, verify_dataflow
+from repro.lint.diagnostics import (CODE_INFO, CODES, Diagnostic,
+                                    DiagnosticError, Severity, emit,
+                                    raise_on_error)
 from repro.lint.engine import lint_paths
+from repro.lint.sanitize import SanitizeReport, sanitize_run
 from repro.lint.verify import check, verify
 
 __all__ = [
+    "CODE_INFO",
     "CODES",
     "Diagnostic",
     "DiagnosticError",
+    "SanitizeReport",
     "Severity",
     "analyze_artifact",
     "check",
+    "check_dataflow",
     "check_trace_budget",
     "emit",
     "lint_paths",
     "raise_on_error",
+    "sanitize_run",
     "verify",
+    "verify_dataflow",
 ]

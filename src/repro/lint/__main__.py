@@ -4,11 +4,17 @@
     python -m repro.lint src --json diag.json       # + machine-readable dump
     python -m repro.lint check-artifact dump.hlo \\
         [--dtype float32] [--json diag.json]        # artifact audit (RP2xx)
+    python -m repro.lint dataflow --ndim 2 --radius 1 \\
+        --boundary periodic --grid 64,256 --steps 9  # ring schedule (RP4xx)
+    python -m repro.lint sanitize --ndim 2 --radius 1 \\
+        --boundary periodic --grid 64,256 --steps 9  # canary run (RP4xx)
     python -m repro.lint codes                      # the RP-code registry
 
 Exit status 1 when any ERROR-severity diagnostic fires, 0 otherwise
 (warnings print but never fail the run) — the contract the CI lint job
-and ``tests/test_lint.py``'s repo-is-clean test rely on.
+and ``tests/test_lint.py``'s repo-is-clean test rely on.  Rendered and
+JSON output is stable-sorted by (path, line, code) so artifacts diff
+cleanly across runs.
 """
 
 from __future__ import annotations
@@ -18,12 +24,14 @@ import sys
 from typing import List, Optional
 
 from repro.lint.artifact import analyze_artifact
-from repro.lint.diagnostics import CODES, Diagnostic
+from repro.lint.diagnostics import CODE_INFO, CODES, Diagnostic
 from repro.lint.engine import lint_paths, to_json
 
 
 def _render(diagnostics: List[Diagnostic], label: str,
             json_path: Optional[str]) -> int:
+    diagnostics = sorted(diagnostics,
+                         key=lambda d: (d.path or "", d.line or 0, d.code))
     if json_path:
         with open(json_path, "w") as fh:
             fh.write(to_json(diagnostics))
@@ -39,11 +47,86 @@ def _render(diagnostics: List[Diagnostic], label: str,
     return 0
 
 
+def _dataflow_parser(prog_name: str) -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(prog=prog_name)
+    p.add_argument("--ndim", type=int, default=2, choices=(2, 3))
+    p.add_argument("--radius", type=int, default=1)
+    p.add_argument("--boundary", default="periodic",
+                   choices=("clamp", "periodic", "constant"))
+    p.add_argument("--grid", default=None,
+                   help="comma-separated extents (default 64,256 / 16,64,256)")
+    p.add_argument("--steps", type=int, default=None,
+                   help="step count (default: 2 full supersteps + a "
+                        "remainder)")
+    p.add_argument("--variant", default="plain",
+                   choices=("plain", "pipelined", "temporal"))
+    p.add_argument("--block", default=None,
+                   help="comma-separated block shape (default: the model "
+                        "planner's)")
+    p.add_argument("--par-time", type=int, default=None,
+                   help="fused steps per superstep (default: the planner's)")
+    p.add_argument("--json", default=None, help="write diagnostics JSON")
+    return p
+
+
+def _dataflow_config(ns, shards=None):
+    """Resolve the shared (program, plan, grid, steps) of both subcommands.
+
+    Under ``shards`` (the dataflow subcommand's ``--devices``) the default
+    plan blocks the per-device *local* shard, matching the shape the ring
+    schedule — and the sharded executor — actually tile.
+    """
+    from repro.core.blocking import (TEMPORAL_CHUNK, BlockPlan,
+                                     plan_blocking)
+    from repro.core.program import StencilProgram
+
+    prog = StencilProgram(ndim=ns.ndim, radius=ns.radius,
+                          boundary=ns.boundary)
+    if ns.grid:
+        grid = tuple(int(s) for s in ns.grid.split(","))
+    else:
+        grid = (64, 256) if ns.ndim == 2 else (16, 64, 256)
+    plan_shape = grid
+    if shards is not None:
+        if len(shards) != len(grid) or any(g % s for g, s in
+                                           zip(grid, shards)):
+            raise SystemExit(
+                f"--devices {','.join(map(str, shards))} must divide the "
+                f"grid {'x'.join(map(str, grid))} axis-by-axis")
+        plan_shape = tuple(g // s for g, s in zip(grid, shards))
+    plan = plan_blocking(prog, grid_shape=plan_shape,
+                         variant=ns.variant).plan
+    if shards is not None:
+        # the sharded executor requires blocks that tile the local shard
+        # exactly and an exchange halo no deeper than it (space.fits_shard);
+        # conform the default plan the same way the mesh tuner prunes —
+        # explicit --block/--par-time below still override, so deliberately
+        # infeasible configs remain probeable.
+        block = tuple(b if b <= n and n % b == 0 else n
+                      for b, n in zip(plan.block_shape, plan_shape))
+        par_time = max(1, min(plan.par_time,
+                              min(plan_shape) // prog.halo_radius))
+        plan = BlockPlan(spec=prog, block_shape=block, par_time=par_time)
+    if ns.block or ns.par_time:
+        block = tuple(int(s) for s in ns.block.split(",")) \
+            if ns.block else plan.block_shape
+        plan = BlockPlan(spec=prog, block_shape=block,
+                         par_time=ns.par_time or plan.par_time)
+    period = plan.par_time * (TEMPORAL_CHUNK
+                              if ns.variant == "temporal" else 1)
+    steps = ns.steps if ns.steps is not None \
+        else 2 * period + (1 if period > 1 else 0)
+    return prog, plan, grid, steps
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     if argv and argv[0] == "codes":
-        for code in sorted(CODES):
-            print(f"{code}  {CODES[code]}")
+        width = max(len(info.summary) for info in CODE_INFO.values())
+        for code in sorted(CODE_INFO):
+            info = CODE_INFO[code]
+            print(f"{code}  {info.severity.value:<7}  "
+                  f"{info.summary:<{width}}  fix: {info.hint}")
         return 0
     if argv and argv[0] == "check-artifact":
         p = argparse.ArgumentParser(prog="repro.lint check-artifact")
@@ -56,6 +139,31 @@ def main(argv: Optional[List[str]] = None) -> int:
             text = fh.read()
         diags = analyze_artifact(text, expect_dtype=ns.dtype)
         return _render(diags, f"artifact audit of {ns.hlo}", ns.json)
+    if argv and argv[0] == "dataflow":
+        p = _dataflow_parser("repro.lint dataflow")
+        p.add_argument("--devices", default=None,
+                       help="comma-separated shards per grid axis")
+        ns = p.parse_args(argv[1:])
+        from repro.lint.dataflow import verify_dataflow
+        decomp = tuple(int(s) for s in ns.devices.split(",")) \
+            if ns.devices else None
+        prog, plan, grid, steps = _dataflow_config(ns, shards=decomp)
+        diags = verify_dataflow(prog, plan, grid, steps=steps,
+                                variant=ns.variant, decomp=decomp)
+        return _render(
+            diags, f"dataflow of {ns.ndim}D r={ns.radius} {ns.boundary} "
+                   f"{ns.variant} over {'x'.join(map(str, grid))}", ns.json)
+    if argv and argv[0] == "sanitize":
+        ns = _dataflow_parser("repro.lint sanitize").parse_args(argv[1:])
+        from repro.lint.sanitize import sanitize_run
+        prog, plan, grid, steps = _dataflow_config(ns)
+        report = sanitize_run(prog, plan, grid, steps=steps,
+                              variant=ns.variant)
+        print(report.describe())
+        return _render(list(report.diagnostics),
+                       f"sanitize of {ns.ndim}D r={ns.radius} "
+                       f"{ns.boundary} {ns.variant} over "
+                       f"{'x'.join(map(str, grid))}", ns.json)
 
     p = argparse.ArgumentParser(prog="repro.lint")
     p.add_argument("paths", nargs="+", help="files/trees to lint")

@@ -16,6 +16,7 @@ CLI: ``python -m repro.lint check-artifact dump.hlo [--dtype float32]``.
 
 from __future__ import annotations
 
+from collections.abc import Mapping
 from typing import Dict, List, Optional, Tuple
 
 from repro.analysis.roofline import (AliasPair, entry_signature,
@@ -105,14 +106,28 @@ def analyze_artifact(hlo_text: str, *,
     return out
 
 
-def check_trace_budget(delta: int, budget: int, *,
-                       context: str = "run") -> List[Diagnostic]:
+#: The jit'd entry points whose retraces count against a run budget: the
+#: single-device fused run and the sharded mesh run.  Both recompile in
+#: steady state for exactly the same reasons (a per-call Python value
+#: baked into the trace), so the budget covers the family.
+RUN_TRACE_FAMILIES = ("run_call", "dist_run_call")
+
+
+def check_trace_budget(delta, budget: int, *,
+                       context: str = "run",
+                       families: Tuple[str, ...] = RUN_TRACE_FAMILIES
+                       ) -> List[Diagnostic]:
     """RP203 when a trace-count delta breaks the O(1)-compile contract.
 
     ``delta`` is what ``kernels.common.trace_delta`` measured around the
-    region; ``budget`` is how many fresh kernel traces the region is
-    allowed (steady-state loops budget 0).
+    region — either a bare int (the historical contract) or the mapping
+    ``trace_delta`` returns, in which case every counter in ``families``
+    is summed, so sharded ``dist_run_call`` recompiles are caught
+    alongside single-device ``run_call`` ones.  ``budget`` is how many
+    fresh traces the region is allowed (steady-state loops budget 0).
     """
+    if isinstance(delta, Mapping):
+        delta = sum(delta.get(name, 0) for name in families)
     if delta <= budget:
         return []
     return [error(

@@ -33,46 +33,127 @@ class Severity(enum.Enum):
     INFO = "info"
 
 
+@dataclasses.dataclass(frozen=True)
+class CodeInfo:
+    """Per-code registry metadata: the one-line contract, the *default*
+    severity a finding of this code carries, and the canonical fix hint.
+    The CLI's ``codes`` listing renders all three as columns so CI lint
+    artifacts diff cleanly; concrete diagnostics may still override the
+    severity (RP202 escalates to error under a dtype expectation) and
+    carry a sharper, numbers-bearing hint."""
+
+    summary: str
+    severity: "Severity"
+    hint: str = ""
+
+
+def _info(summary: str, severity: str = "error", hint: str = "") -> CodeInfo:
+    return CodeInfo(summary=summary, severity=Severity(severity), hint=hint)
+
+
 #: The registry of stable diagnostic codes.  RP1xx = plan/program
-#: legality, RP2xx = lowered-artifact hazards, RP3xx = codebase rules.
+#: legality, RP2xx = lowered-artifact hazards, RP3xx = codebase rules,
+#: RP4xx = kernel-dataflow analysis of the padded ring schedule.
 #: A code's summary here is the one-line contract; the emitted message
 #: carries the concrete numbers and the fix hint.
-CODES = {
+CODE_INFO = {
     # -- RP1xx: plan/program legality (the verifier) --------------------------
-    "RP101": "grid shape does not describe the program's spatial rank",
-    "RP102": "step count must be an integer >= 1",
-    "RP103": "batch must be None or an integer >= 1 (and match at run)",
-    "RP104": "eq. 2 violation: par_time shrinks csize to <= 0 on some axis",
-    "RP105": "eq. 4/5 violation: kernel VMEM scratch exceeds the chip budget",
-    "RP106": "eq. 6 advisory: streamed window is not lane/sublane aligned",
-    "RP107": "decomposition infeasible: shard/divisibility/halo bound broken",
-    "RP108": "wrap-degenerate periodic axis routes through the re-pad "
-             "fallback",
-    "RP109": "program dtype outside the kernels' supported set",
-    "RP110": "device placement invalid for this backend/host",
-    "RP111": "plan block rank does not match the program rank",
-    "RP112": "plan selector must be \"auto\", \"model\", or a BlockPlan",
-    "RP113": "overlap-tax advisory: useful fraction at or below the "
-             "planner floor",
-    "RP114": "conflicting kernel-variant requests: both pipelined= and "
-             "variant= given",
+    "RP101": _info("grid shape does not describe the program's spatial rank",
+                   hint="give one positive extent per program axis"),
+    "RP102": _info("step count must be an integer >= 1",
+                   hint="run at least one time step"),
+    "RP103": _info("batch must be None or an integer >= 1 (and match at run)",
+                   hint="stack independent grids along one leading axis"),
+    "RP104": _info("eq. 2 violation: par_time shrinks csize to <= 0 on some "
+                   "axis",
+                   hint="grow bsize or cut par_time on the named axis"),
+    "RP105": _info("eq. 4/5 violation: kernel VMEM scratch exceeds the chip "
+                   "budget",
+                   hint="shrink block_shape/par_time or use variant='plain'"),
+    "RP106": _info("eq. 6 advisory: streamed window is not lane/sublane "
+                   "aligned", "warning",
+                   hint="round bsize to the register tile"),
+    "RP107": _info("decomposition infeasible: shard/divisibility/halo bound "
+                   "broken",
+                   hint="devices=<count> or plan='auto' searches blocking "
+                        "and split together"),
+    "RP108": _info("wrap-degenerate periodic axis routes through the re-pad "
+                   "fallback", "warning",
+                   hint="grow the axis, shrink par_time, or pick a dividing "
+                        "block"),
+    "RP109": _info("program dtype outside the kernels' supported set",
+                   hint="use float32 or a 16-bit float"),
+    "RP110": _info("device placement invalid for this backend/host",
+                   hint="request at most the visible device count on a "
+                        "mesh-capable backend"),
+    "RP111": _info("plan block rank does not match the program rank",
+                   hint="give one output-tile extent per grid axis"),
+    "RP112": _info("plan selector must be \"auto\", \"model\", or a "
+                   "BlockPlan",
+                   hint="use plan='auto' unless pinning a tuned BlockPlan"),
+    "RP113": _info("overlap-tax advisory: useful fraction at or below the "
+                   "planner floor", "warning",
+                   hint="grow the block or cut par_time"),
+    "RP114": _info("conflicting kernel-variant requests: both pipelined= "
+                   "and variant= given",
+                   hint="pass only variant="),
     # -- RP2xx: lowered-artifact hazards (the analyzer) -----------------------
-    "RP201": "input_output_alias pair is shape/dtype-inconsistent",
-    "RP202": "unintended f64 promotion in the lowered module",
-    "RP203": "recompile hazard: trace-count delta exceeds the O(1)-compile "
-             "budget",
-    "RP204": "donation hazard: one input buffer aliased by multiple outputs",
+    "RP201": _info("input_output_alias pair is shape/dtype-inconsistent",
+                   hint="align the ping-pong carry shapes exactly"),
+    "RP202": _info("unintended f64 promotion in the lowered module",
+                   hint="cast taps/constants to the program dtype"),
+    "RP203": _info("recompile hazard: trace-count delta exceeds the "
+                   "O(1)-compile budget",
+                   hint="hoist per-call Python values to operands"),
+    "RP204": _info("donation hazard: one input buffer aliased by multiple "
+                   "outputs",
+                   hint="a buffer can back one output only"),
     # -- RP3xx: codebase rules (the AST linter) -------------------------------
-    "RP300": "file cannot be parsed (syntax error)",
-    "RP301": "legacy stencil entry point outside the shims "
-             "(missing # legacy-ok)",
-    "RP302": "wall-clock timing of .run(...) without block_until_ready",
-    "RP303": "direct pl.pallas_call outside src/repro/kernels/",
-    "RP304": "Python if/while on a tracer-valued expression in a kernel "
-             "body",
-    "RP305": "deprecated pipelined= keyword at a first-party call site "
-             "(use variant=)",
+    "RP300": _info("file cannot be parsed (syntax error)",
+                   hint="fix the syntax error (or the lint invocation)"),
+    "RP301": _info("legacy stencil entry point outside the shims "
+                   "(missing # legacy-ok)",
+                   hint="migrate to repro.stencil(...).compile(...)"),
+    "RP302": _info("wall-clock timing of .run(...) without "
+                   "block_until_ready",
+                   hint="block on the result before reading the clock"),
+    "RP303": _info("direct pl.pallas_call outside src/repro/kernels/",
+                   hint="route kernels through the kernels package"),
+    "RP304": _info("Python if/while on a tracer-valued expression in a "
+                   "kernel body",
+                   hint="use pl.when / lax.cond on traced values"),
+    "RP305": _info("deprecated pipelined= keyword at a first-party call "
+                   "site (use variant=)",
+                   hint="replace with variant='pipelined'"),
+    # -- RP4xx: kernel-dataflow analysis (the ring-schedule verifier and
+    #    canary sanitizer) -----------------------------------------------------
+    "RP401": _info("stale-halo read: a superstep window reaches a cell no "
+                   "pad, write, wrap DMA, or boundary_fixup initialized",
+                   hint="deepen the ring refresh to the superstep's halo "
+                        "(par_time * halo_radius, chunk-deep for temporal) "
+                        "and keep the window at offset H - h"),
+    "RP402": _info("coverage hole: interior cells never written during a "
+                   "superstep",
+                   hint="output tiles must tile the rounded interior "
+                        "exactly (write stride == write tile == block)"),
+    "RP403": _info("overlapping (or out-of-interior) writes within one "
+                   "superstep",
+                   hint="output tiles never overlap; each interior cell is "
+                        "written exactly once per superstep"),
+    "RP404": _info("ping-pong aliasing lets a superstep read a cell it "
+                   "already overwrote",
+                   hint="the tile output must alias the destination buffer "
+                        "(input_output_aliases {3:0, 4:1} wrap / {4:0}), "
+                        "never the window source"),
+    "RP405": _info("periodic wrap DMA missing or issued after a dependent "
+                   "read",
+                   hint="refresh the wrap ring at the first grid iteration, "
+                        "before any window load (pl.when(first))"),
 }
+
+#: Back-compat view: code -> one-line summary (the historical dict shape
+#: every consumer of ``CODES[code]`` keeps working against).
+CODES = {code: info.summary for code, info in CODE_INFO.items()}
 
 
 @dataclasses.dataclass(frozen=True)

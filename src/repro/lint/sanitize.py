@@ -1,0 +1,222 @@
+"""RP4xx dynamic half: interpret-mode canary execution of the ring schedule.
+
+Where ``repro.lint.dataflow`` *proves* the padded-carry schedule sound by
+abstract interpretation, :func:`sanitize_run` *executes* it — the real
+superstep kernels under ``interpret=True`` — with every cell outside the
+true interior poisoned by NaN canaries, re-poisoned between supersteps:
+
+* a NaN in the advanced interior means some window read a ring/slack
+  cell nothing initialized — **RP401**, or **RP405** when a periodic
+  axis's lo ring came back untouched (the wrap refresh never ran);
+* a destination-sentinel value surviving in the interior means an output
+  tile never covered that cell — **RP402**;
+* a declared alias map routing the tile output into the window-source
+  buffer is reported structurally as **RP404** — XLA:CPU ignores
+  donation, so the corruption a TPU launch would suffer cannot physically
+  reproduce under interpret mode (same caveat as the RP204 analyzer);
+  the run stops there because executing the mis-aliased schedule proves
+  nothing further.
+
+NaN is the right canary because the fused step emitter
+(``codegen.tap_interior_update``) reads windows with *static* slices —
+no wraparound, no clamping inside the window — so a poisoned cell either
+feeds the shrinking valid region (and the NaN reaches the output tile
+deterministically) or is healed first by the t=0 ``boundary_fixup`` /
+wrap refresh, exactly the initialization set the symbolic half models.
+Mutation tests in tests/test_dataflow.py seed the same schedule bugs
+into both halves (they share ``kernels.common.wrap_copies`` /
+``ping_pong_aliases``) and require the same RP4xx code from each.
+
+Single-device by design: the sharded exchange-into-ring strips are
+covered by the symbolic half (SPMD symmetry makes their model exact);
+running a canary mesh would buy no additional coverage per token of
+interpret-mode runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.blocking import BlockPlan
+from repro.core.program import as_program, normalize_coeffs
+from repro.lint.diagnostics import Diagnostic, error
+
+#: Destination-buffer fill: exactly representable in every supported
+#: float dtype and unreachable by stencil arithmetic on the rng-uniform
+#: [0.5, 1.5) canary grid, so a surviving sentinel == a coverage hole.
+SENTINEL = -1984.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SanitizeReport:
+    """Outcome of one canary run: diagnostics plus the run's shape."""
+
+    diagnostics: Tuple[Diagnostic, ...]
+    supersteps: int
+    grid_shape: Tuple[int, ...]
+    steps: int
+    variant: str
+    fallback: bool = False
+
+    @property
+    def ok(self) -> bool:
+        return not any(d.is_error for d in self.diagnostics)
+
+    def describe(self) -> str:
+        head = (f"sanitize: {len(self.grid_shape)}D grid "
+                f"{'x'.join(map(str, self.grid_shape))}, {self.steps} "
+                f"steps, variant={self.variant}, "
+                f"{self.supersteps} superstep(s) executed")
+        if self.fallback:
+            return head + " — wrap-degenerate re-pad fallback, no ring " \
+                          "schedule to sanitize"
+        if self.ok:
+            return head + " — clean"
+        return head + "\n" + "\n".join(d.describe() for d in self.diagnostics)
+
+    def to_json(self) -> dict:
+        return {
+            "diagnostics": [d.to_json() for d in self.diagnostics],
+            "supersteps": self.supersteps,
+            "grid_shape": list(self.grid_shape),
+            "steps": self.steps,
+            "variant": self.variant,
+            "fallback": self.fallback,
+            "ok": self.ok,
+        }
+
+
+def _poison_outside_interior(arr: np.ndarray, H: int,
+                             local: Tuple[int, ...]) -> np.ndarray:
+    """NaN every ring and round-up-slack cell, keep the true interior."""
+    interior = arr[tuple(slice(H, H + n) for n in local)].copy()
+    arr = np.full_like(arr, np.nan)
+    arr[tuple(slice(H, H + n) for n in local)] = interior
+    return arr
+
+
+def sanitize_run(program, plan: BlockPlan, grid_shape, *,
+                 steps: int, coeffs=None, variant: Optional[str] = None,
+                 seed: int = 0, schedule=None) -> SanitizeReport:
+    """Execute the modeled supersteps with poisoned halos; report leaks.
+
+    ``schedule`` overrides the derived ring schedule (the mutation-test
+    hook); the kernels themselves are rebuilt eagerly per superstep, so a
+    monkeypatched ``wrap_copies``/``ping_pong_aliases`` reaches both the
+    executed kernel and the schedule being checked — no jit cache can
+    serve a stale unmutated executable.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels import common
+
+    prog = as_program(program)
+    grid_shape = tuple(int(g) for g in grid_shape)
+    steps = int(steps)
+    if schedule is None:
+        schedule = common.ring_schedule(prog, plan, grid_shape, steps,
+                                        variant=variant)
+    v = schedule.variant
+    if schedule.fallback or not schedule.supersteps:
+        return SanitizeReport(diagnostics=(), supersteps=0,
+                              grid_shape=grid_shape, steps=steps, variant=v,
+                              fallback=schedule.fallback)
+
+    cf = prog.default_coeffs(seed) if coeffs is None \
+        else normalize_coeffs(prog, coeffs)
+    layout = schedule.layout
+    H = layout.halo
+    local = layout.local_shape
+    inner = tuple(slice(H, H + n) for n in local)
+    dtype = np.dtype(prog.dtype)
+    rng = np.random.default_rng(seed)
+
+    src = np.full(layout.padded_shape, np.nan, dtype=dtype)
+    src[inner] = rng.uniform(0.5, 1.5, size=local).astype(dtype)
+    dst = np.full(layout.padded_shape, SENTINEL, dtype=dtype)
+
+    diags: List[Diagnostic] = []
+    executed = 0
+    for ss in schedule.supersteps:
+        if ss.write_buffer == ss.read_buffer:
+            diags.append(error(
+                "RP404",
+                f"superstep {ss.index}: declared input_output_aliases "
+                f"{dict(ss.aliases)} route the interior tile writes into "
+                f"the window-source buffer; on TPU the donated launch "
+                f"would overwrite cells later windows read (XLA:CPU "
+                f"ignores donation, so interpret mode cannot reproduce "
+                f"the corruption — reported structurally)",
+                hint="alias the tile output onto the destination operand "
+                     "(input 4), never the window source"))
+            break
+        step_plan = plan if ss.variant == "temporal" else \
+            dataclasses.replace(plan, par_time=ss.steps)
+        before = src.copy()
+        s2, o = common._padded_superstep_pallas(
+            jnp.asarray(src), jnp.asarray(dst), jnp.asarray(cf.center),
+            jnp.asarray(cf.taps), program=prog, plan=step_plan,
+            layout=layout, global_shape=grid_shape, interpret=True,
+            variant=ss.variant)
+        s2 = np.asarray(s2)
+        o = np.asarray(o)
+        executed += 1
+
+        o_int = o[inner]
+        nan_mask = np.isnan(o_int)
+        if nan_mask.any():
+            at = tuple(int(i) for i in np.argwhere(nan_mask)[0])
+            # Which axis' ring most plausibly leaked: the coordinate
+            # closest to its boundary (best-effort attribution).
+            axis = int(np.argmin([min(at[d], local[d] - 1 - at[d])
+                                  for d in range(prog.ndim)]))
+            ring_dead = any(
+                np.isnan(s2[tuple(
+                    slice(0, H) if e == d else slice(None)
+                    for e in range(prog.ndim))]).all()
+                for d in layout.wrap_axes)
+            code = "RP405" if ring_dead else "RP401"
+            why = ("the periodic lo ring is still fully poisoned after "
+                   "the superstep — the wrap refresh never ran" if
+                   code == "RP405" else "a window consumed a poisoned "
+                   "ring/slack cell nothing initialized")
+            diags.append(error(
+                code,
+                f"superstep {ss.index}: NaN canary leaked into the "
+                f"advanced interior at offset {at} "
+                f"({int(nan_mask.sum())} cell(s), nearest boundary on "
+                f"axis {axis}) — {why}",
+                hint="run repro.lint dataflow for the symbolic footprint "
+                     "of the offending superstep"))
+        sentinel_mask = o_int == dtype.type(SENTINEL)
+        if sentinel_mask.any():
+            at = tuple(int(i) for i in np.argwhere(sentinel_mask)[0])
+            diags.append(error(
+                "RP402",
+                f"superstep {ss.index}: {int(sentinel_mask.sum())} "
+                f"interior cell(s) never written (destination sentinel "
+                f"survives), first at offset {at}",
+                hint="output tiles must cover the rounded interior "
+                     "exactly once"))
+        if not np.array_equal(s2[inner], before[inner], equal_nan=True):
+            diags.append(error(
+                "RP404",
+                f"superstep {ss.index}: the returned source buffer's "
+                f"interior changed during the superstep — tile writes "
+                f"reached the window-source buffer",
+                hint="the ring refresh may only touch halo/slack cells; "
+                     "tiles belong to the destination buffer"))
+        if diags:
+            break
+        # Ping-pong and re-poison: the advanced grid (interior only)
+        # becomes the next window source; the old source buffer is
+        # retired to a fresh sentinel destination.
+        src = _poison_outside_interior(o, H, local)
+        dst = np.full(layout.padded_shape, SENTINEL, dtype=dtype)
+
+    return SanitizeReport(diagnostics=tuple(diags), supersteps=executed,
+                          grid_shape=grid_shape, steps=steps, variant=v,
+                          fallback=False)

@@ -46,6 +46,9 @@ SHARDS = {
         "tests/test_checkpoint.py",
         "tests/test_fault.py",
         "tests/test_lint.py",
+        # re-run standalone by the ci.yml dataflow job (like the
+        # distributed shard rides mesh-sim), but assigned here exactly once
+        "tests/test_dataflow.py",
         "tests/test_variant_api.py",
     ],
     "distributed": [

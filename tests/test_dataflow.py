@@ -1,0 +1,300 @@
+"""RP4xx kernel-dataflow verifier + canary sanitizer tests.
+
+Three layers, mirroring the ISSUE-10 acceptance gate:
+
+* property tests — the symbolic verifier accepts 100% of
+  ``enumerate_space`` points (radii 1-4 x 2D/3D x every variant, plus the
+  n_devices=8 mesh space), exactly like the RP1xx verifier's property
+  tests in test_lint.py;
+* the mutation gate — each seeded dataflow bug (off-by-one ring refresh
+  depth, skipped periodic wrap, swapped alias pair, shrinking-region
+  over-read in the temporal chunk) must be flagged by the symbolic
+  verifier AND reproduced by the canary sanitizer with the *same* RP4xx
+  code.  Mutations monkeypatch ``kernels.common.wrap_copies`` /
+  ``ping_pong_aliases`` — the single source of truth both the executed
+  kernels and the schedule model read — so one patch corrupts kernel and
+  model together, and both halves are driven eagerly (never through the
+  jit'd ``run_call``) so no cache serves a stale unmutated executable;
+* the sanitizer matrix — a canary run over every boundary x variant x
+  remainder-profile cell comes back clean, and the symbolic pre-flight
+  stays under the 2ms compile budget.
+"""
+
+import dataclasses
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.analysis.hw import V5E
+from repro.core.blocking import TEMPORAL_CHUNK, BlockPlan
+from repro.core.program import StencilProgram
+from repro.kernels import common
+from repro.lint import check_trace_budget
+from repro.lint.dataflow import verify_dataflow
+from repro.lint.sanitize import sanitize_run
+from repro.tuning.space import enumerate_space
+
+GRID = (16, 128)
+BLOCK = (8, 128)
+
+
+def _prog(boundary="periodic", radius=1):
+    return StencilProgram(ndim=2, radius=radius, boundary=boundary)
+
+
+def _plan(prog, par_time=2):
+    return BlockPlan(spec=prog, block_shape=BLOCK, par_time=par_time)
+
+
+def _error_codes(diags):
+    return [d.code for d in diags if d.is_error]
+
+
+def _steps_for(plan, variant):
+    period = plan.par_time * (TEMPORAL_CHUNK if variant == "temporal" else 1)
+    return 2 * period + (1 if period > 1 else 0)
+
+
+def _both_halves(prog, plan, variant, steps):
+    """(symbolic error codes, sanitizer error codes) for one config."""
+    sym = _error_codes(verify_dataflow(prog, plan, GRID, steps=steps,
+                                       variant=variant))
+    dyn = _error_codes(sanitize_run(prog, plan, GRID, steps=steps,
+                                    variant=variant).diagnostics)
+    return sym, dyn
+
+
+# ---- property: the verifier accepts every tuner point -----------------------
+
+
+@pytest.mark.parametrize("ndim,grid", [(2, (64, 256)), (3, (16, 32, 256))])
+@pytest.mark.parametrize("radius", [1, 2, 3, 4])
+def test_dataflow_accepts_every_tuner_point(ndim, grid, radius):
+    for boundary in ("periodic", "clamp"):
+        prog = StencilProgram(ndim=ndim, radius=radius, boundary=boundary)
+        for c in enumerate_space(prog, V5E, grid_shape=grid, max_par_time=6):
+            diags = verify_dataflow(prog, c.plan, grid,
+                                    steps=_steps_for(c.plan, c.variant),
+                                    variant=c.variant)
+            assert not _error_codes(diags), (
+                f"{boundary} {c.variant} block={c.plan.block_shape} "
+                f"par_time={c.plan.par_time}: "
+                f"{[d.describe() for d in diags]}")
+
+
+def test_dataflow_accepts_every_mesh_point():
+    prog = StencilProgram(ndim=2, radius=2, boundary="periodic")
+    cands = [c for c in enumerate_space(prog, V5E, grid_shape=(64, 256),
+                                        max_par_time=4, n_devices=8)
+             if c.decomp is not None]
+    assert cands, "mesh space should not be empty"
+    for c in cands:
+        diags = verify_dataflow(prog, c.plan, (64, 256),
+                                steps=_steps_for(c.plan, c.variant),
+                                variant=c.variant, decomp=c.decomp)
+        assert not _error_codes(diags), (
+            f"{c.decomp.axis_shards} {c.variant} "
+            f"block={c.plan.block_shape}: "
+            f"{[d.describe() for d in diags]}")
+
+
+# ---- the mutation gate: both halves, same code ------------------------------
+# Each mutation patches the shared schedule helpers in kernels.common, so
+# the executed kernel AND the model corrupt together; a clean pre-check
+# guards against the mutation accidentally being a no-op.
+
+
+def _shallow_lo_copies(layout):
+    """Off-by-one: the lo ring refresh starts one cell short."""
+    H, P = layout.halo, layout.padded_shape
+    out = []
+    for d in layout.wrap_axes:
+        n = layout.local_shape[d]
+        W = P[d] - H - n
+        out.append(common.RingCopy("wrap", d, (n + 1, n + H), (1, H)))
+        out.append(common.RingCopy("wrap", d, (H, H + W),
+                                   (H + n, H + n + W)))
+    return tuple(out)
+
+
+def _plain_depth_copies(layout):
+    """Temporal over-read seed: the ring refreshed only to plain depth."""
+    H, P = layout.halo, layout.padded_shape
+    hp = H // TEMPORAL_CHUNK
+    out = []
+    for d in layout.wrap_axes:
+        n = layout.local_shape[d]
+        out.append(common.RingCopy("wrap", d, (n, n + hp), (H - hp, H)))
+        out.append(common.RingCopy("wrap", d, (H, H + hp),
+                                   (H + n, H + n + hp)))
+    return tuple(out)
+
+
+@pytest.mark.parametrize("mutation,variant,expect", [
+    ("off_by_one", "plain", "RP401"),
+    ("skipped_wrap", "plain", "RP405"),
+    ("swapped_alias", "plain", "RP404"),
+    ("temporal_shallow", "temporal", "RP401"),
+])
+def test_mutation_caught_by_both_halves(monkeypatch, mutation, variant,
+                                        expect):
+    prog = _prog("periodic")
+    plan = _plan(prog)
+    steps = _steps_for(plan, variant)
+
+    clean_sym, clean_dyn = _both_halves(prog, plan, variant, steps)
+    assert not clean_sym and not clean_dyn, "unmutated schedule must pass"
+
+    if mutation == "off_by_one":
+        monkeypatch.setattr(common, "wrap_copies", _shallow_lo_copies)
+    elif mutation == "skipped_wrap":
+        monkeypatch.setattr(common, "wrap_copies", lambda layout: ())
+    elif mutation == "swapped_alias":
+        monkeypatch.setattr(common, "ping_pong_aliases",
+                            lambda wrap: {3: 1, 4: 0} if wrap else {4: 0})
+    else:
+        monkeypatch.setattr(common, "wrap_copies", _plain_depth_copies)
+
+    sym, dyn = _both_halves(prog, plan, variant, steps)
+    assert expect in sym, f"symbolic half missed {mutation}: {sym}"
+    assert expect in dyn, f"sanitizer half missed {mutation}: {dyn}"
+
+
+def test_deferred_ring_is_rp405():
+    """A schedule whose ring copies land after the reads is RP405."""
+    prog = _prog("periodic")
+    plan = _plan(prog)
+    sched = common.ring_schedule(prog, plan, GRID, 5)
+    late = dataclasses.replace(
+        sched, supersteps=tuple(dataclasses.replace(ss, ring_deferred=True)
+                                for ss in sched.supersteps))
+    diags = verify_dataflow(prog, plan, GRID, steps=5, schedule=late)
+    assert "RP405" in _error_codes(diags)
+
+
+def test_write_coverage_mutations():
+    """Schedule-level write bugs map to RP402 (hole) / RP403 (overlap)."""
+    prog = _prog("clamp")
+    plan = _plan(prog)
+    sched = common.ring_schedule(prog, plan, GRID, 5)
+
+    hole = dataclasses.replace(sched, supersteps=tuple(
+        dataclasses.replace(ss, write_tile=(BLOCK[0] - 2, BLOCK[1]))
+        for ss in sched.supersteps))
+    assert "RP402" in _error_codes(
+        verify_dataflow(prog, plan, GRID, steps=5, schedule=hole))
+
+    overlap = dataclasses.replace(sched, supersteps=tuple(
+        dataclasses.replace(ss, write_stride=(BLOCK[0] - 2, BLOCK[1]))
+        for ss in sched.supersteps))
+    codes = _error_codes(
+        verify_dataflow(prog, plan, GRID, steps=5, schedule=overlap))
+    assert "RP403" in codes
+
+
+# ---- the sanitizer matrix ---------------------------------------------------
+
+
+@pytest.mark.parametrize("boundary", ["periodic", "clamp", "constant"])
+@pytest.mark.parametrize("variant", ["plain", "pipelined", "temporal"])
+@pytest.mark.parametrize("remainder", [False, True])
+def test_sanitizer_matrix_clean(boundary, variant, remainder):
+    prog = _prog(boundary)
+    plan = _plan(prog)
+    period = plan.par_time * (TEMPORAL_CHUNK
+                              if variant == "temporal" else 1)
+    steps = 2 * period + (1 if remainder else 0)
+    report = sanitize_run(prog, plan, GRID, steps=steps, variant=variant)
+    assert not report.fallback, "the test config must take the ring path"
+    assert report.supersteps == 2 + (1 if remainder else 0)
+    assert report.ok, report.describe()
+    assert report.to_json()["ok"] is True
+
+
+def test_sanitizer_fallback_reported_not_failed():
+    """Wrap-degenerate configs have no ring schedule; the report says so."""
+    prog = _prog("periodic")
+    # halo 17 > the 16-cell axis: the in-kernel refresh would need
+    # multi-lap copies, so run_call takes the legacy re-pad body
+    plan = BlockPlan(spec=prog, block_shape=(16, 128), par_time=17)
+    report = sanitize_run(prog, plan, GRID, steps=17)
+    assert report.fallback and report.ok and report.supersteps == 0
+    assert not verify_dataflow(prog, plan, GRID, steps=17)
+
+
+# ---- compile integration ----------------------------------------------------
+
+
+def test_compile_runs_dataflow_preflight_and_sanitize():
+    import repro
+
+    prog = _prog("periodic")
+    st = repro.stencil(prog)
+    cs = st.compile(GRID, steps=5, plan=_plan(prog), interpret=True,
+                    sanitize=True)
+    assert cs.sanitize_report is not None and cs.sanitize_report.ok
+    # symbolic pre-flight always runs; its findings ride .preflight
+    assert all(not d.is_error for d in cs.preflight)
+
+    g = np.random.default_rng(0).uniform(size=GRID).astype("float32")
+    out = np.asarray(cs.run(g.copy()))
+    assert out.shape == GRID and np.isfinite(out).all()
+
+
+def test_dataflow_preflight_overhead():
+    """<2ms budget for the always-on symbolic pass (best-of-20)."""
+    prog = _prog("periodic")
+    plan = _plan(prog)
+    best = float("inf")
+    for _ in range(20):
+        t0 = time.perf_counter()
+        verify_dataflow(prog, plan, GRID, steps=5)
+        best = min(best, time.perf_counter() - t0)
+    assert best < 2e-3, f"symbolic dataflow pre-flight took {best*1e3:.3f}ms"
+
+
+# ---- CLI + trace-budget satellites ------------------------------------------
+
+
+def test_cli_dataflow_and_sanitize_subcommands(tmp_path):
+    base = [sys.executable, "-m", "repro.lint"]
+    args = ["--ndim", "2", "--radius", "1", "--boundary", "periodic",
+            "--grid", "16,128", "--block", "8,128", "--par-time", "2",
+            "--steps", "5"]
+    for sub in ("dataflow", "sanitize"):
+        json_path = tmp_path / f"{sub}.json"
+        res = subprocess.run(base + [sub] + args + ["--json",
+                                                    str(json_path)],
+                             capture_output=True, text=True)
+        assert res.returncode == 0, res.stdout + res.stderr
+        assert "OK: 0 errors" in res.stdout
+        assert json_path.exists()
+    # --devices plans the local shard (fits_shard-conformant by default)
+    res = subprocess.run(base + ["dataflow", "--ndim", "2", "--radius", "2",
+                                 "--grid", "64,256", "--devices", "2,4"],
+                         capture_output=True, text=True)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "OK: 0 errors" in res.stdout
+    res = subprocess.run(base + ["dataflow", "--grid", "64,256",
+                                 "--devices", "3,4"],
+                         capture_output=True, text=True)
+    assert res.returncode != 0
+    assert "must divide the grid" in res.stderr
+
+
+def test_trace_budget_counts_dist_run_call_family():
+    # the historical int contract is untouched ...
+    assert check_trace_budget(0, 0) == []
+    assert check_trace_budget(2, 1)[0].code == "RP203"
+    # ... and a trace_delta mapping sums the run family, so sharded
+    # dist_run_call recompiles count against the same budget
+    assert check_trace_budget({"run_call": 1}, 1) == []
+    diags = check_trace_budget({"run_call": 1, "dist_run_call": 1}, 1,
+                               context="steady-state mesh run")
+    assert diags and diags[0].code == "RP203"
+    assert "steady-state mesh run" in diags[0].message
+    # unrelated counters (superstep_call etc.) never trip the budget
+    assert check_trace_budget({"superstep_call": 9}, 0) == []

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import os
 import sys
+import warnings
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(_ROOT, "src"))
@@ -22,6 +23,14 @@ from repro.lint.rules import LEGACY, SCAN, audit  # noqa: E402
 
 
 def main() -> int:
+    # The shim itself is on the deprecation path: warn (once per process,
+    # on stderr — the stdout/exit-status CLI contract is untouched) so
+    # remaining callers migrate before the shim is retired.
+    warnings.warn(
+        "tools/deprecation_audit.py is a legacy shim; use "
+        "`python -m repro.lint <paths>` (RP301) or "
+        "`repro.lint.rules.audit` directly",
+        DeprecationWarning, stacklevel=2)
     bad = audit(_ROOT)
     if bad:
         print("deprecation audit FAILED — legacy stencil entry points "
